@@ -1,0 +1,86 @@
+//! ISA demo: the paper's IDMA/CDMA extension in action.
+//!
+//! Hand-writes an accelerator program that (1) kicks off an asynchronous
+//! DMA load, (2) polls it with CDMA while doing scalar work (the paper's
+//! "initiate a DMA to load data, do some computation, query whether the
+//! load is complete"), (3) runs the identity datapath, and (4) stores the
+//! result — then round-trips every instruction through the 64-bit
+//! encoding to show the RoCC-style wire format.
+//!
+//! ```text
+//! cargo run --release --example isa_demo
+//! ```
+
+use espsim::accel::{decode, encode, DpCall, DpKind, Instr};
+use espsim::config::SocConfig;
+use espsim::coordinator::{App, Invocation, ProgramKind, Soc};
+use espsim::socket::DmaDir;
+
+fn main() -> anyhow::Result<()> {
+    // The program, in assembly form.  r1.. hold operands set via Seti.
+    let program = vec![
+        // operands: vaddr=r4, plm=r5, len=r6, user=r7 (0 = memory DMA)
+        Instr::Seti { rd: 4, imm: 0x10_0000 }, // source vaddr
+        Instr::Seti { rd: 5, imm: 0 },         // PLM offset
+        Instr::Seti { rd: 6, imm: 4096 },      // one 4 KB burst
+        Instr::Seti { rd: 7, imm: 0 },         // user = memory
+        // IDMA returns a tag in r8; the transfer runs asynchronously.
+        Instr::Idma { rd: 8, dir: DmaDir::Read, vaddr: 4, plm: 5, len: 6, user: 7 },
+        // Overlap: count to 100 in r9 while the DMA flies, sampling CDMA
+        // into r10 (so the final value shows the overlap happened).
+        Instr::Seti { rd: 9, imm: 0 },
+        Instr::Seti { rd: 11, imm: 100 },
+        Instr::Cdma { rd: 10, tag: 8 },
+        Instr::Addi { rd: 9, ra: 9, imm: 1 },
+        Instr::Blt { ra: 9, rb: 11, off: -2 },
+        // Join on the tag, then run the datapath (identity over the burst).
+        Instr::Wdma { tag: 8 },
+        Instr::RunDp { call: 0 },
+        Instr::Wdp,
+        // Store the datapath output (PLM 8192) back to memory.
+        Instr::Seti { rd: 4, imm: 0x20_0000 },
+        Instr::Seti { rd: 5, imm: 8192 },
+        Instr::Idma { rd: 8, dir: DmaDir::Write, vaddr: 4, plm: 5, len: 6, user: 7 },
+        Instr::Wdma { tag: 8 },
+        Instr::Done,
+    ];
+
+    println!("{:>3}  {:>18}  decoded", "pc", "encoding");
+    for (pc, &i) in program.iter().enumerate() {
+        let w = encode(i);
+        assert_eq!(decode(w), Some(i), "wire format must round-trip");
+        println!("{pc:>3}  {w:#018x}  {i:?}");
+    }
+
+    // Run it on a small SoC.
+    let mut soc = Soc::new(SocConfig::small_3x3())?;
+    let data: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+    soc.write_mem(0x10_0000, &data);
+    let mut inv = Invocation::tgen(
+        0,
+        espsim::accel::TgenArgs {
+            total_bytes: 0,
+            burst_bytes: 1,
+            rd_user: 0,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: 0,
+        },
+    );
+    inv.program = ProgramKind::Custom(program);
+    inv.args = [0; 8];
+    inv.dp_calls = vec![DpCall {
+        kind: DpKind::Identity,
+        inputs: vec![(0, 4096)],
+        out_offset: 8192,
+        cycles: 4096 / 4 / 8, // stream at 8 words/cycle
+    }];
+    App::new().phase(vec![inv]).launch(&mut soc)?;
+    let cycles = soc.run(1_000_000)?;
+
+    anyhow::ensure!(soc.read_mem(0x20_0000, 4096) == data, "identity datapath corrupted data");
+    let report = soc.report();
+    println!("\nran in {cycles} cycles; invocation span: {:?}", report.invocations);
+    println!("the CDMA polling loop overlapped ~100 scalar iterations with the DMA flight");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT lowering driver: jax/Pallas stages -> artifacts/*.hlo.txt (+ data).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Besides the HLO artifacts this also emits, into the same directory:
+  - ``manifest.json``     — artifact name -> input/output shapes + dtypes,
+                            consumed by ``rust/src/runtime``;
+  - ``*.f32``             — little-endian f32 parameter/input/expected-output
+                            tensors for the end-to-end ``nn_pipeline`` example,
+                            so rust feeds the exact data the oracle saw.
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (stage fn, example arg specs)
+ARTIFACTS = {
+    "stage0_linear_relu": (
+        model.stage_linear_relu,
+        [_spec((model.BATCH, model.D_IN)), _spec((model.D_IN, model.D_HID)), _spec((model.D_HID,))],
+    ),
+    "stage_head": (
+        model.stage_head,
+        [_spec((model.BATCH, model.D_HID)), _spec((model.D_HID, model.D_HEAD)), _spec((model.D_HEAD,))],
+    ),
+    "stage_combiner": (
+        model.stage_combiner,
+        [
+            _spec((model.BATCH, model.N_HEADS * model.D_HEAD)),
+            _spec((model.N_HEADS * model.D_HEAD, model.D_OUT)),
+            _spec((model.D_OUT,)),
+        ],
+    ),
+    "tgen_identity": (model.stage_identity, [_spec((1024,))]),
+}
+
+
+def lower_artifacts(out_dir: pathlib.Path) -> dict:
+    manifest = {"artifacts": {}, "pipeline": {}}
+    for name, (fn, specs) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_shapes = [list(s.shape) for s in jax.eval_shape(fn, *specs)]
+        manifest["artifacts"][name] = {
+            "file": path.name,
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            "outputs": [{"shape": s, "dtype": "float32"} for s in out_shapes],
+        }
+        print(f"  {name}: {len(text)} chars -> {path.name}")
+    return manifest
+
+
+def dump_pipeline_data(out_dir: pathlib.Path, manifest: dict, seed: int = 0) -> None:
+    """Parameters, input batch, and oracle output for examples/nn_pipeline.rs."""
+    params = model.init_params(seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100), (model.BATCH, model.D_IN), jnp.float32)
+    expected = model.pipeline_reference(x, params)
+
+    tensors = {"input_x": x, "expected_out": expected, **params}
+    for name, arr in tensors.items():
+        np.asarray(arr, dtype=np.float32).tofile(out_dir / f"{name}.f32")
+    manifest["pipeline"] = {
+        "batch": model.BATCH,
+        "d_in": model.D_IN,
+        "d_hid": model.D_HID,
+        "n_heads": model.N_HEADS,
+        "d_head": model.D_HEAD,
+        "d_out": model.D_OUT,
+        "tensors": {name: list(np.shape(arr)) for name, arr in tensors.items()},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="marker artifact path; all artifacts go to its directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print(f"lowering {len(ARTIFACTS)} artifacts -> {out_dir}")
+    manifest = lower_artifacts(out_dir)
+    dump_pipeline_data(out_dir, manifest, args.seed)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    # Marker file so the Makefile's stamp-based no-op check works.
+    pathlib.Path(args.out).write_text((out_dir / "stage0_linear_relu.hlo.txt").read_text())
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Streaming identity (copy) Pallas kernel — the traffic generator's datapath.
+
+The paper's traffic-generator accelerator "performs the identity function,
+i.e. it writes the same data as output that it receives as input", with a
+4 KB maximum burst.  The kernel streams the input through VMEM in
+burst-sized blocks (1024 f32 words == 4 KB), mirroring the accelerator's
+PLM ping-pong: one grid step == one burst through the datapath.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4 KB of f32 words — the paper's traffic-generator burst size.
+BURST_WORDS = 1024
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def identity_kernel(x: jax.Array, *, block: int = BURST_WORDS) -> jax.Array:
+    """Copy a 1-D array through VMEM in burst-sized blocks."""
+    (n,) = x.shape
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"length {n} not divisible by burst block {block}")
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,107 @@
+"""Blocked matmul + bias + activation Pallas kernel.
+
+This is the datapath of the *programmable accelerator* in the paper's
+sense: the accelerator's PLM corresponds to VMEM blocks (one DMA burst ==
+one HBM->VMEM block fetch), and the compute targets an MXU-shaped systolic
+matmul.  The grid iterates output blocks (bm, bn); the K reduction runs as
+the innermost grid dimension accumulating in-place into the resident
+output block, which expresses the same burst-granular producer/consumer
+overlap the paper gets from ping-pong PLM banks.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): block shapes default
+to multiples of the f32 TPU tiling (8, 128); accumulation is f32 even for
+bf16 inputs, as on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_block_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, k_steps: int):
+    """One (bm, bn) output block; grid dim 2 walks the K blocks.
+
+    The output block is resident across the K steps (its index map ignores
+    k), so we accumulate partial products into it in f32 and apply
+    bias/activation on the last step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped partial product, f32 accumulation regardless of input dtype.
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif activation == "gelu":
+            out = jax.nn.gelu(out)
+        elif activation != "none":
+            raise ValueError(f"unknown activation {activation!r}")
+        o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def linear_kernel(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "relu",
+    block_m: int = 32,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """``act(x @ w + b)`` as a blocked Pallas kernel; returns f32.
+
+    Shapes: x (M, K), w (K, N), b (N,).  Block sizes are clamped to the
+    dims; after clamping, M, K, N must be divisible by the block sizes
+    (the accelerator's PLM is burst-granular; the rust-side launcher
+    always pads datasets to burst multiples).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x {x.shape} vs w {w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"dims ({m},{k},{n}) not divisible by blocks ({block_m},{block_k},{block_n})"
+        )
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+
+    kernel = functools.partial(
+        _linear_block_kernel, activation=activation, k_steps=k_steps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

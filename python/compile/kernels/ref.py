@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth for pytest/hypothesis; they intentionally avoid
+Pallas, blocking, and any clever layout so a bug in the kernels cannot be
+mirrored here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "relu") -> jax.Array:
+    """``act(x @ w + b)`` in f32, matching ``linear_kernel``'s contract."""
+    out = (
+        jnp.dot(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        + b.astype(jnp.float32)
+    )
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def identity_ref(x: jax.Array) -> jax.Array:
+    return x
+
+
+def softmax_ref(x, *, axis: int = -1):
+    """Numerically-stable softmax in f32 (jax.nn.softmax, pinned to f32)."""
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis)

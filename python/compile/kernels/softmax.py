@@ -1,0 +1,41 @@
+"""Row-softmax Pallas kernel (numerically stable).
+
+Completes the classifier head of the example pipeline: the combiner stage
+fuses ``logits = cat @ Wc + bc`` with ``softmax(logits)`` so the SoC's
+final DMA write-back carries probabilities.  One grid step processes a
+block of rows; the full feature dimension stays resident in VMEM (the
+row-wise max/sum reductions need it), which is the standard TPU softmax
+blocking for feature widths that fit VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_kernel(x: jax.Array, *, block_rows: int = 8) -> jax.Array:
+    """Row-wise softmax over the last axis of a 2-D array; returns f32."""
+    rows, cols = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows {rows} not divisible by block_rows {block_rows}")
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,96 @@
+"""L2: jax stage functions for the accelerator pipeline.
+
+Each *stage* is the compute of one programmable-accelerator invocation in
+the rust simulator: the host DMAs/forwards a stage's inputs into the
+accelerator, the datapath runs the stage's compiled HLO, and the outputs
+are written back / forwarded P2P / multicast.  Stages call the L1 Pallas
+kernels so the kernels lower into the same HLO artifact.
+
+The default pipeline (see ``aot.py`` and ``examples/nn_pipeline.rs``) is a
+4-stage MLP with a multicast fan-out, mirroring the paper's motivating
+example ("a neural-network accelerator fetching model parameters from
+memory and a previous layer's outputs from another accelerator"):
+
+    stage0: x(B,256)  -> relu(x W0 + b0)          (B,256)   [multicast to 4 heads]
+    head h: y(B,256)  -> relu(y Wh + bh)          (B,64)    [P2P to combiner]
+    comb:   cat(B,256)-> softmax(cat Wc + bc)     (B,128)   [DMA to memory]
+
+plus the traffic-generator identity stage used by the Fig. 6 workloads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.identity import identity_kernel
+from .kernels.softmax import softmax_kernel
+from .kernels.matmul import linear_kernel
+from .kernels import ref
+
+# Pipeline dimensions (small enough to AOT + simulate quickly; block-aligned).
+BATCH = 32
+D_IN = 256
+D_HID = 256
+N_HEADS = 4
+D_HEAD = 64
+D_OUT = 128  # combiner output width (logits padded to a burst multiple)
+
+
+def stage_linear_relu(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Hidden stage: relu(x @ w + b) via the Pallas datapath kernel."""
+    return (linear_kernel(x, w, b, activation="relu"),)
+
+
+def stage_linear(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Output stage: x @ w + b (no activation)."""
+    return (linear_kernel(x, w, b, activation="none"),)
+
+
+def stage_combiner(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Classifier head: softmax(x @ w + b) — the pipeline's final stage."""
+    return (softmax_kernel(linear_kernel(x, w, b, activation="none")),)
+
+
+def stage_head(x: jax.Array, w: jax.Array, b: jax.Array):
+    """One parallel 'head': narrow relu linear, block sizes shrunk to fit."""
+    return (linear_kernel(x, w, b, activation="relu", block_n=64),)
+
+
+def stage_identity(x: jax.Array):
+    """Traffic-generator stage: stream x through the datapath unchanged."""
+    return (identity_kernel(x),)
+
+
+def init_params(seed: int = 0):
+    """Deterministic pipeline parameters (shared with the rust launcher)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3 + N_HEADS)
+    p = {
+        "w0": jax.random.normal(keys[0], (D_IN, D_HID), jnp.float32) * 0.05,
+        "b0": jnp.zeros((D_HID,), jnp.float32),
+        "wc": jax.random.normal(keys[1], (N_HEADS * D_HEAD, D_OUT), jnp.float32) * 0.05,
+        "bc": jnp.zeros((D_OUT,), jnp.float32),
+    }
+    for h in range(N_HEADS):
+        p[f"wh{h}"] = jax.random.normal(keys[3 + h - 1], (D_HID, D_HEAD), jnp.float32) * 0.05
+        p[f"bh{h}"] = jnp.zeros((D_HEAD,), jnp.float32)
+    return p
+
+
+def pipeline_reference(x: jax.Array, params: dict) -> jax.Array:
+    """Full-pipeline oracle in pure jnp (no Pallas): what the SoC must compute."""
+    y = ref.linear_ref(x, params["w0"], params["b0"], activation="relu")
+    heads = [
+        ref.linear_ref(y, params[f"wh{h}"], params[f"bh{h}"], activation="relu")
+        for h in range(N_HEADS)
+    ]
+    cat = jnp.concatenate(heads, axis=1)
+    return ref.softmax_ref(ref.linear_ref(cat, params["wc"], params["bc"], activation="none"))
+
+
+def pipeline_kernels(x: jax.Array, params: dict) -> jax.Array:
+    """Full pipeline through the Pallas stage functions (for pytest)."""
+    (y,) = stage_linear_relu(x, params["w0"], params["b0"])
+    heads = [stage_head(y, params[f"wh{h}"], params[f"bh{h}"])[0] for h in range(N_HEADS)]
+    cat = jnp.concatenate(heads, axis=1)
+    return stage_combiner(cat, params["wc"], params["bc"])[0]

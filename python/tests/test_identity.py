@@ -1,0 +1,59 @@
+"""Streaming identity kernel (traffic-generator datapath) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.identity import BURST_WORDS, identity_kernel
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestIdentityDirected:
+    def test_single_burst(self):
+        x = jnp.arange(BURST_WORDS, dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(identity_kernel(x)), np.asarray(x))
+
+    def test_multi_burst(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4 * BURST_WORDS,))
+        np.testing.assert_array_equal(
+            np.asarray(identity_kernel(x)), np.asarray(ref.identity_ref(x))
+        )
+
+    def test_short_array_clamps_block(self):
+        x = jnp.arange(64, dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(identity_kernel(x)), np.asarray(x))
+
+    def test_rejects_nondivisible(self):
+        x = jnp.zeros((BURST_WORDS + 3,))
+        with pytest.raises(ValueError, match="not divisible"):
+            identity_kernel(x)
+
+    def test_int_dtype(self):
+        x = jnp.arange(256, dtype=jnp.int32)
+        got = identity_kernel(x)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+class TestIdentityHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(bursts=st.integers(1, 8),
+           dtype=st.sampled_from([jnp.float32, jnp.bfloat16, jnp.int32]))
+    def test_roundtrip(self, bursts, dtype):
+        n = bursts * BURST_WORDS
+        x = jnp.arange(n).astype(dtype)
+        got = identity_kernel(x)
+        assert got.dtype == dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([32, 64, 128, 512]), block=st.sampled_from([16, 32, 64]))
+    def test_custom_blocks(self, n, block):
+        if n % block:
+            return
+        x = jnp.arange(n, dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(identity_kernel(x, block=block)), np.asarray(x))

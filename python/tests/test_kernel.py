@@ -1,0 +1,122 @@
+"""Pallas linear kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (block-aligned and clamped), dtypes, activations,
+and block configurations; every case asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import linear_kernel
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _check(m, k, n, dtype, activation, **blocks):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + k * 3 + n), 3)
+    x = _rand(k0, (m, k), dtype)
+    w = _rand(k1, (k, n), dtype)
+    b = _rand(k2, (n,), dtype)
+    got = linear_kernel(x, w, b, activation=activation, **blocks)
+    want = ref.linear_ref(x, w, b, activation=activation)
+    assert got.dtype == jnp.float32
+    # Split-K accumulation order differs from a single dot: f32 needs a
+    # slightly loose tolerance, bf16 a much looser one.
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+class TestLinearKernelDirected:
+    def test_single_block(self):
+        _check(8, 16, 16, jnp.float32, "relu")
+
+    def test_multi_block_m(self):
+        _check(64, 128, 128, jnp.float32, "relu")
+
+    def test_multi_block_all_dims(self):
+        _check(64, 256, 256, jnp.float32, "relu")
+
+    def test_no_activation(self):
+        _check(32, 128, 128, jnp.float32, "none")
+
+    def test_gelu(self):
+        _check(32, 128, 128, jnp.float32, "gelu")
+
+    def test_bf16_inputs_f32_accumulate(self):
+        _check(32, 256, 128, jnp.bfloat16, "relu")
+
+    def test_pipeline_shapes_stage0(self):
+        _check(32, 256, 256, jnp.float32, "relu")
+
+    def test_pipeline_shapes_head(self):
+        _check(32, 256, 64, jnp.float32, "relu", block_n=64)
+
+    def test_pipeline_shapes_combiner(self):
+        _check(32, 256, 128, jnp.float32, "none")
+
+    def test_narrow_blocks(self):
+        _check(16, 32, 32, jnp.float32, "relu", block_m=8, block_n=16, block_k=16)
+
+    def test_rejects_contraction_mismatch(self):
+        x = jnp.zeros((8, 16))
+        w = jnp.zeros((32, 8))
+        b = jnp.zeros((8,))
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            linear_kernel(x, w, b)
+
+    def test_rejects_bad_bias(self):
+        x = jnp.zeros((8, 16))
+        w = jnp.zeros((16, 8))
+        b = jnp.zeros((16,))
+        with pytest.raises(ValueError, match="bias shape"):
+            linear_kernel(x, w, b)
+
+    def test_rejects_nondivisible(self):
+        x = jnp.zeros((8, 24))
+        w = jnp.zeros((24, 8))
+        b = jnp.zeros((8,))
+        with pytest.raises(ValueError, match="not divisible"):
+            linear_kernel(x, w, b, block_k=16)
+
+    def test_rejects_unknown_activation(self):
+        x = jnp.zeros((8, 8))
+        w = jnp.zeros((8, 8))
+        b = jnp.zeros((8,))
+        with pytest.raises(ValueError, match="unknown activation"):
+            linear_kernel(x, w, b, activation="tanh")
+
+
+# Block-aligned dims: multiples of 8/16 keep interpret-mode runtime sane.
+dims_m = st.sampled_from([8, 16, 32, 64])
+dims_k = st.sampled_from([16, 32, 64, 128, 256])
+dims_n = st.sampled_from([16, 64, 128, 256])
+
+
+class TestLinearKernelHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims_m, k=dims_k, n=dims_n,
+           activation=st.sampled_from(["relu", "none", "gelu"]))
+    def test_matches_ref_f32(self, m, k, n, activation):
+        _check(m, k, n, jnp.float32, activation)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=dims_m, k=dims_k, n=dims_n)
+    def test_matches_ref_bf16(self, m, k, n):
+        _check(m, k, n, jnp.bfloat16, "relu")
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.sampled_from([16, 32, 64]),
+           bm=st.sampled_from([8, 16, 32]),
+           bn=st.sampled_from([16, 32, 64]),
+           bk=st.sampled_from([16, 32, 64]))
+    def test_block_shape_invariance(self, m, bm, bn, bk):
+        # Result must not depend on the chosen blocking.
+        _check(m, 64, 64, jnp.float32, "relu", block_m=bm, block_n=bn, block_k=bk)

@@ -1,0 +1,70 @@
+"""L2 stage/pipeline functions: shapes + full-pipeline kernel-vs-oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params_and_input(seed=0):
+    params = model.init_params(seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100), (model.BATCH, model.D_IN))
+    return params, x
+
+
+class TestStageShapes:
+    def test_stage0(self):
+        params, x = _params_and_input()
+        (y,) = model.stage_linear_relu(x, params["w0"], params["b0"])
+        assert y.shape == (model.BATCH, model.D_HID)
+
+    def test_head(self):
+        params, x = _params_and_input()
+        (y,) = model.stage_linear_relu(x, params["w0"], params["b0"])
+        (h,) = model.stage_head(y, params["wh0"], params["bh0"])
+        assert h.shape == (model.BATCH, model.D_HEAD)
+
+    def test_combiner(self):
+        params, _ = _params_and_input()
+        cat = jnp.zeros((model.BATCH, model.N_HEADS * model.D_HEAD))
+        (out,) = model.stage_linear(cat, params["wc"], params["bc"])
+        assert out.shape == (model.BATCH, model.D_OUT)
+
+    def test_identity_stage(self):
+        x = jnp.arange(2048, dtype=jnp.float32)
+        (y,) = model.stage_identity(x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+class TestPipeline:
+    def test_kernels_match_reference(self):
+        params, x = _params_and_input()
+        got = model.pipeline_kernels(x, params)
+        want = model.pipeline_reference(x, params)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_reference_deterministic(self):
+        p1, x1 = _params_and_input(3)
+        p2, x2 = _params_and_input(3)
+        np.testing.assert_array_equal(
+            np.asarray(model.pipeline_reference(x1, p1)),
+            np.asarray(model.pipeline_reference(x2, p2)),
+        )
+
+    def test_params_cover_all_heads(self):
+        params = model.init_params()
+        for h in range(model.N_HEADS):
+            assert params[f"wh{h}"].shape == (model.D_HID, model.D_HEAD)
+            assert params[f"bh{h}"].shape == (model.D_HEAD,)
+
+    def test_relu_active(self):
+        # The pipeline must actually clip below zero somewhere (guards
+        # against an activation that silently became a no-op).
+        params, x = _params_and_input()
+        y = model.pipeline_reference(x, params)
+        pre = jnp.dot(x, params["w0"]) + params["b0"]
+        assert (np.asarray(pre) < 0).any()
+        assert np.isfinite(np.asarray(y)).all()

@@ -1,0 +1,68 @@
+"""Pallas softmax kernel vs jax.nn.softmax oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.softmax import softmax_kernel
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _check(rows, cols, dtype=jnp.float32, scale=1.0, **kw):
+    x = jax.random.normal(jax.random.PRNGKey(rows * 31 + cols), (rows, cols)) * scale
+    x = x.astype(dtype)
+    got = softmax_kernel(x, **kw)
+    want = ref.softmax_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    # Rows sum to one.
+    np.testing.assert_allclose(np.asarray(got).sum(axis=-1), 1.0, rtol=1e-5)
+
+
+class TestSoftmaxDirected:
+    def test_single_block(self):
+        _check(8, 16)
+
+    def test_multi_block_rows(self):
+        _check(32, 128)
+
+    def test_pipeline_shape(self):
+        _check(32, 128)  # (BATCH, D_OUT)
+
+    def test_large_magnitudes_stable(self):
+        # exp would overflow without the max subtraction.
+        _check(16, 64, scale=100.0)
+
+    def test_bf16_input(self):
+        x = (jax.random.normal(jax.random.PRNGKey(0), (8, 32)) * 3).astype(jnp.bfloat16)
+        got = softmax_kernel(x)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.softmax_ref(x)), rtol=2e-2, atol=2e-3
+        )
+
+    def test_rejects_nondivisible_rows(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            softmax_kernel(jnp.zeros((10, 16)), block_rows=8)
+
+    def test_row_block_clamps(self):
+        _check(4, 16, block_rows=8)
+
+
+class TestSoftmaxHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.sampled_from([8, 16, 32, 64]),
+        cols=st.sampled_from([8, 32, 128, 256]),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_matches_ref(self, rows, cols, scale):
+        _check(rows, cols, scale=scale)
+
+    @settings(max_examples=10, deadline=None)
+    @given(rows=st.sampled_from([16, 32]), block=st.sampled_from([4, 8, 16]))
+    def test_block_invariance(self, rows, block):
+        _check(rows, 64, block_rows=block)

@@ -1,0 +1,51 @@
+//! Fig. 4 regeneration: NoC-router area vs bitwidth x multicast
+//! destinations, from the calibrated analytic model, with the paper's
+//! anchor values printed side by side.
+//!
+//! ```text
+//! cargo bench --bench fig4_area
+//! ```
+
+use espsim::area::{fig4_sweep, RouterAreaModel};
+use espsim::util::bench::{fmt_secs, measure, Table};
+
+fn main() {
+    println!("== Fig. 4: router area (um^2, 12nm-calibrated model) ==\n");
+
+    // The figure's series: one row per destination count, one column per
+    // bitwidth (None where the header cannot encode that many).
+    let model = RouterAreaModel::calibrated();
+    let t = Table::new(&["max-dests", "64-bit", "128-bit", "256-bit"], &[9, 10, 10, 10]);
+    for dests in 0..=16usize {
+        let cell = |bits: u32| {
+            model
+                .area(bits, dests)
+                .map(|a| format!("{a:.0}"))
+                .unwrap_or_else(|| "-".to_string())
+        };
+        t.row(&[format!("{dests}"), cell(64), cell(128), cell(256)]);
+    }
+
+    println!("\npaper anchors vs model:");
+    let anchors = [(64u32, 0usize, 3620.0), (128, 0, 6230.0), (256, 0, 11520.0)];
+    for (bits, dests, paper) in anchors {
+        let got = model.area(bits, dests).unwrap();
+        println!(
+            "  {bits:>3}-bit, {dests:>2} dests: paper {paper:>8.0}  model {got:>8.0}  ({:+.1}%)",
+            (got / paper - 1.0) * 100.0
+        );
+    }
+    println!("  per-destination cost: paper ~200 um^2, model {:.0} um^2", model.per_dest);
+    for (bits, dests) in [(64u32, 4usize), (128, 8), (256, 16)] {
+        let ov = model.overhead(bits, dests).unwrap() * 100.0;
+        println!("  {bits:>3}-bit with {dests:>2} dests: +{ov:.1}% area (paper: <30%)");
+    }
+
+    // Timing of the sweep itself (the "synthesis" replacement).
+    let (points, timing) = measure(50, || fig4_sweep().len());
+    println!(
+        "\nsweep of {points} configurations evaluated in {} (median of {} iters)",
+        fmt_secs(timing.median_s),
+        timing.iters
+    );
+}

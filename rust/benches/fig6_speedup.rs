@@ -1,0 +1,53 @@
+//! Fig. 6 regeneration: speedup of multicast P2P over the shared-memory
+//! baseline, sweeping consumer count x data size on the paper's 3x4
+//! platform (17 traffic generators, 256-bit NoC).  Prints the same grid
+//! the paper plots, the paper's anchor values, and the simulator's
+//! wall-clock throughput.
+//!
+//! ```text
+//! cargo bench --bench fig6_speedup [-- --quick]
+//! ```
+
+use espsim::coordinator::experiments::{
+    paper_consumer_counts, paper_data_sizes, run_fig6_point, Fig6Options,
+};
+use espsim::util::bench::{fmt_secs, measure, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = Fig6Options::default();
+    let sizes = if quick { vec![4 << 10, 64 << 10] } else { paper_data_sizes() };
+
+    println!("== Fig. 6: multicast speedup vs shared-memory baseline ==");
+    println!("platform: 3x4 mesh, 256-bit NoC, 4 KB bursts, sequential baseline\n");
+
+    let t = Table::new(
+        &["consumers", "bytes", "baseline-cy", "multicast-cy", "speedup", "sim-time"],
+        &[9, 10, 12, 12, 8, 9],
+    );
+    let mut total_sim_cycles = 0u64;
+    let mut total_wall = 0.0f64;
+    for &n in &paper_consumer_counts() {
+        for &bytes in &sizes {
+            let iters = if bytes >= (1 << 20) { 1 } else { 3 };
+            let (p, timing) = measure(iters, || run_fig6_point(n, bytes, &opts).unwrap());
+            total_sim_cycles += p.baseline_cycles + p.multicast_cycles;
+            total_wall += timing.median_s;
+            t.row(&[
+                format!("{n}"),
+                format!("{bytes}"),
+                format!("{}", p.baseline_cycles),
+                format!("{}", p.multicast_cycles),
+                format!("{:.2}x", p.speedup()),
+                fmt_secs(timing.median_s),
+            ]);
+        }
+    }
+
+    println!("\npaper anchors (read off Fig. 6):");
+    println!("  1 consumer,  4 KB: 1.72x   (72% speedup)");
+    println!("  16 consumers, 4 KB: 2.20x  (120% speedup)");
+    println!("  16 consumers, 1 MB: 3.03x  (203% speedup, plateau at 1 MB)");
+    println!("\nsimulator throughput: {:.1} M simulated cycles / wall-second",
+        total_sim_cycles as f64 / total_wall.max(1e-9) / 1e6);
+}

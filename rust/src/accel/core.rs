@@ -1,0 +1,345 @@
+//! The programmable accelerator core: a small in-order engine that fetches
+//! the instructions of [`crate::accel::isa`], drives the socket through
+//! IDMA/CDMA, and launches the datapath.
+//!
+//! DMA is asynchronous with respect to the pipeline (the paper's point):
+//! `Idma` returns a tag immediately, and the program overlaps further
+//! issue/compute with the transfer, joining on `Wdma`/`Cdma`.
+
+use crate::accel::datapath::{self, DpCall};
+use crate::accel::isa::{Instr, NUM_REGS};
+use crate::socket::{DmaDir, Socket, TAG_NONE};
+
+/// Core execution state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    /// Waiting for a start pulse.
+    Idle,
+    /// Executing.
+    Running,
+    /// Program hit `Done`; socket drains and raises the IRQ.
+    Finished,
+}
+
+/// Core statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CoreStats {
+    /// Instructions retired.
+    pub instrs: u64,
+    /// Cycles stalled on DMA (Wdma/Idma backpressure).
+    pub dma_stall_cycles: u64,
+    /// Cycles stalled on the datapath.
+    pub dp_stall_cycles: u64,
+    /// Cycles the datapath was busy.
+    pub dp_busy_cycles: u64,
+}
+
+/// One programmable accelerator core.
+pub struct AccCore {
+    /// Scalar register file.
+    pub regs: [u64; NUM_REGS],
+    program: Vec<Instr>,
+    pc: usize,
+    state: CoreState,
+    /// Datapath descriptor table (set up by the launcher; indexed by RunDp).
+    pub dp_calls: Vec<DpCall>,
+    dp_busy_until: u64,
+    /// Statistics.
+    pub stats: CoreStats,
+}
+
+impl AccCore {
+    /// Idle core with an empty program.
+    pub fn new() -> Self {
+        Self {
+            regs: [0; NUM_REGS],
+            program: Vec::new(),
+            pc: 0,
+            state: CoreState::Idle,
+            dp_calls: Vec::new(),
+            dp_busy_until: 0,
+            stats: CoreStats::default(),
+        }
+    }
+
+    /// Load a program (host-side setup; instruction memory write).
+    pub fn load_program(&mut self, program: Vec<Instr>) {
+        self.program = program;
+    }
+
+    /// Current state.
+    pub fn state(&self) -> CoreState {
+        self.state
+    }
+
+    /// Begin an invocation: copy the socket ARG registers into r1..r8,
+    /// reset pc.  (r0 is hardwired zero.)
+    pub fn start(&mut self, args: &[u64; 8]) {
+        self.regs = [0; NUM_REGS];
+        for (i, &a) in args.iter().enumerate() {
+            self.regs[1 + i] = a;
+        }
+        self.pc = 0;
+        self.state = CoreState::Running;
+    }
+
+    /// Acknowledge the Finished state (tile sends the IRQ).
+    pub fn acknowledge_finish(&mut self) {
+        self.state = CoreState::Idle;
+    }
+
+    fn set_reg(&mut self, rd: u8, val: u64) {
+        if rd != 0 {
+            self.regs[rd as usize] = val;
+        }
+    }
+
+    /// Execute at most one instruction this cycle.
+    pub fn tick(&mut self, now: u64, socket: &mut Socket, plm: &mut [u8]) {
+        if self.state != CoreState::Running {
+            return;
+        }
+        let Some(&instr) = self.program.get(self.pc) else {
+            panic!("pc {} past end of program", self.pc);
+        };
+        let mut next_pc = self.pc + 1;
+        match instr {
+            Instr::Seti { rd, imm } => self.set_reg(rd, imm as i64 as u64),
+            Instr::Add { rd, ra, rb } => {
+                self.set_reg(rd, self.regs[ra as usize].wrapping_add(self.regs[rb as usize]))
+            }
+            Instr::Addi { rd, ra, imm } => {
+                self.set_reg(rd, self.regs[ra as usize].wrapping_add(imm as i64 as u64))
+            }
+            Instr::Idma { rd, dir, vaddr, plm: plm_r, len, user } => {
+                let vaddr = self.regs[vaddr as usize];
+                let plm_addr = self.regs[plm_r as usize] as u32;
+                let len = self.regs[len as usize] as u32;
+                let user = self.regs[user as usize] as u16;
+                let tag = match dir {
+                    DmaDir::Read => socket.submit_read(vaddr, len, user, plm_addr),
+                    DmaDir::Write => socket.submit_write(vaddr, len, user, plm_addr),
+                };
+                match tag {
+                    Some(t) => self.set_reg(rd, t as u64),
+                    None => {
+                        // Control channel full: retry this instruction.
+                        self.stats.dma_stall_cycles += 1;
+                        next_pc = self.pc;
+                    }
+                }
+            }
+            Instr::Cdma { rd, tag } => {
+                let t = self.regs[tag as usize];
+                let done = t == TAG_NONE as u64 || socket.is_done(t as u32);
+                self.set_reg(rd, done as u64);
+            }
+            Instr::Wdma { tag } => {
+                let t = self.regs[tag as usize];
+                if !(t == TAG_NONE as u64 || socket.is_done(t as u32)) {
+                    self.stats.dma_stall_cycles += 1;
+                    next_pc = self.pc; // spin
+                }
+            }
+            Instr::RunDp { call } => {
+                if now < self.dp_busy_until {
+                    self.stats.dp_stall_cycles += 1;
+                    next_pc = self.pc; // datapath busy: wait to launch
+                } else {
+                    let call = self
+                        .dp_calls
+                        .get(call as usize)
+                        .unwrap_or_else(|| panic!("RunDp: no descriptor {call}"))
+                        .clone();
+                    let busy = datapath::execute(&call, plm);
+                    self.dp_busy_until = now + busy;
+                    self.stats.dp_busy_cycles += busy;
+                }
+            }
+            Instr::Wdp => {
+                if now < self.dp_busy_until {
+                    self.stats.dp_stall_cycles += 1;
+                    next_pc = self.pc;
+                }
+            }
+            Instr::Blt { ra, rb, off } => {
+                if self.regs[ra as usize] < self.regs[rb as usize] {
+                    next_pc = (self.pc as i64 + off as i64) as usize;
+                }
+            }
+            Instr::Bge { ra, rb, off } => {
+                if self.regs[ra as usize] >= self.regs[rb as usize] {
+                    next_pc = (self.pc as i64 + off as i64) as usize;
+                }
+            }
+            Instr::Beq { ra, rb, off } => {
+                if self.regs[ra as usize] == self.regs[rb as usize] {
+                    next_pc = (self.pc as i64 + off as i64) as usize;
+                }
+            }
+            Instr::Jmp { off } => next_pc = (self.pc as i64 + off as i64) as usize,
+            Instr::Done => {
+                self.state = CoreState::Finished;
+            }
+        }
+        if next_pc != self.pc || matches!(instr, Instr::Jmp { off: 0 }) {
+            self.stats.instrs += 1;
+        }
+        self.pc = next_pc;
+    }
+}
+
+impl Default for AccCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AccConfig;
+
+    fn harness() -> (AccCore, Socket, Vec<u8>) {
+        let mut s = Socket::new((1, 1), 0, 0, AccConfig::default(), (0, 3), (0, 0), 16);
+        s.tlb.map_linear(0, 1 << 20);
+        (AccCore::new(), s, vec![0u8; 64 << 10])
+    }
+
+    fn run(core: &mut AccCore, socket: &mut Socket, plm: &mut Vec<u8>, max: u64) -> u64 {
+        use crate::noc::{Message, MsgKind};
+        // Fake memory with a small response latency so CDMA can observe an
+        // in-flight transaction.
+        let mut pending: Vec<(u64, Message)> = Vec::new();
+        let mut now = 0;
+        while core.state() == CoreState::Running {
+            core.tick(now, socket, plm);
+            socket.tick(now, plm);
+            for (_, msg) in socket.drain_out() {
+                match msg.kind {
+                    MsgKind::DmaReadReq { len, tag, slot, .. } => pending.push((
+                        now + 4,
+                        Message::data(
+                            (0, 3),
+                            (1, 1),
+                            MsgKind::DmaReadRsp { tag, slot },
+                            std::sync::Arc::new(vec![0xCD; len as usize]),
+                        ),
+                    )),
+                    MsgKind::DmaWriteReq { tag, slot, .. } => pending.push((
+                        now + 4,
+                        Message::ctrl((0, 3), (1, 1), MsgKind::DmaWriteAck { tag, slot }),
+                    )),
+                    _ => {}
+                }
+            }
+            let mut i = 0;
+            while i < pending.len() {
+                if pending[i].0 <= now {
+                    let (_, msg) = pending.swap_remove(i);
+                    socket.handle_msg(&msg, plm);
+                } else {
+                    i += 1;
+                }
+            }
+            now += 1;
+            assert!(now < max, "program did not finish in {max} cycles");
+        }
+        now
+    }
+
+    #[test]
+    fn scalar_ops_and_branches() {
+        let (mut core, mut s, mut plm) = harness();
+        // sum 0..5 into r2.
+        core.load_program(vec![
+            Instr::Seti { rd: 1, imm: 0 },  // i
+            Instr::Seti { rd: 2, imm: 0 },  // acc
+            Instr::Seti { rd: 3, imm: 5 },  // bound
+            Instr::Add { rd: 2, ra: 2, rb: 1 },
+            Instr::Addi { rd: 1, ra: 1, imm: 1 },
+            Instr::Blt { ra: 1, rb: 3, off: -2 },
+            Instr::Done,
+        ]);
+        core.start(&[0; 8]);
+        run(&mut core, &mut s, &mut plm, 1000);
+        assert_eq!(core.regs[2], 0 + 1 + 2 + 3 + 4);
+        assert_eq!(core.state(), CoreState::Finished);
+    }
+
+    #[test]
+    fn idma_wdma_roundtrip() {
+        let (mut core, mut s, mut plm) = harness();
+        core.load_program(vec![
+            Instr::Seti { rd: 4, imm: 0 },    // vaddr
+            Instr::Seti { rd: 5, imm: 256 },  // plm
+            Instr::Seti { rd: 6, imm: 512 },  // len
+            Instr::Seti { rd: 7, imm: 0 },    // user = mem
+            Instr::Idma { rd: 8, dir: DmaDir::Read, vaddr: 4, plm: 5, len: 6, user: 7 },
+            Instr::Wdma { tag: 8 },
+            Instr::Done,
+        ]);
+        core.start(&[0; 8]);
+        run(&mut core, &mut s, &mut plm, 1000);
+        assert_eq!(plm[256], 0xCD);
+        assert_eq!(plm[256 + 511], 0xCD);
+        assert!(core.stats.instrs >= 7);
+    }
+
+    #[test]
+    fn cdma_polls_status() {
+        let (mut core, mut s, mut plm) = harness();
+        core.load_program(vec![
+            Instr::Seti { rd: 4, imm: 0 },
+            Instr::Seti { rd: 5, imm: 0 },
+            Instr::Seti { rd: 6, imm: 64 },
+            Instr::Seti { rd: 7, imm: 0 },
+            Instr::Idma { rd: 8, dir: DmaDir::Read, vaddr: 4, plm: 5, len: 6, user: 7 },
+            Instr::Cdma { rd: 9, tag: 8 }, // immediately after issue: not done
+            Instr::Wdma { tag: 8 },
+            Instr::Cdma { rd: 10, tag: 8 }, // after join: done
+            Instr::Done,
+        ]);
+        core.start(&[0; 8]);
+        run(&mut core, &mut s, &mut plm, 1000);
+        assert_eq!(core.regs[9], 0, "CDMA right after IDMA sees in-flight");
+        assert_eq!(core.regs[10], 1, "CDMA after WDMA sees done");
+    }
+
+    #[test]
+    fn datapath_identity_runs() {
+        let (mut core, mut s, mut plm) = harness();
+        plm[0..4].copy_from_slice(&[1, 2, 3, 4]);
+        core.dp_calls = vec![DpCall {
+            kind: crate::accel::datapath::DpKind::Identity,
+            inputs: vec![(0, 4)],
+            out_offset: 100,
+            cycles: 10,
+        }];
+        core.load_program(vec![Instr::RunDp { call: 0 }, Instr::Wdp, Instr::Done]);
+        core.start(&[0; 8]);
+        let cycles = run(&mut core, &mut s, &mut plm, 1000);
+        assert_eq!(&plm[100..104], &[1, 2, 3, 4]);
+        assert!(cycles >= 10, "Wdp stalls for the charged latency");
+        assert_eq!(core.stats.dp_busy_cycles, 10);
+    }
+
+    #[test]
+    fn args_land_in_registers() {
+        let (mut core, mut s, mut plm) = harness();
+        core.load_program(vec![Instr::Done]);
+        core.start(&[11, 22, 33, 44, 55, 66, 77, 88]);
+        assert_eq!(core.regs[1], 11);
+        assert_eq!(core.regs[8], 88);
+        run(&mut core, &mut s, &mut plm, 10);
+    }
+
+    #[test]
+    fn r0_is_hardwired_zero() {
+        let (mut core, mut s, mut plm) = harness();
+        core.load_program(vec![Instr::Seti { rd: 0, imm: 42 }, Instr::Done]);
+        core.start(&[0; 8]);
+        run(&mut core, &mut s, &mut plm, 10);
+        assert_eq!(core.regs[0], 0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Accelerator datapath backends.
+//!
+//! A programmable accelerator's datapath is launched by the `RunDp`
+//! instruction through a *descriptor table* (`DpCall`): each descriptor
+//! names the PLM regions the datapath reads/writes and how many cycles the
+//! operation occupies.  Two backends:
+//!
+//! - [`DpKind::Identity`] — the paper's traffic generator ("writes the same
+//!   data as output that it receives as input");
+//! - [`DpKind::Xla`] — real compute: an AOT-compiled JAX/Pallas stage
+//!   executed via PJRT ([`crate::runtime::Executable`]).  The *numerics*
+//!   run for real; the *timing* charged to the simulation is an analytic
+//!   cycle count supplied by the descriptor (MXU-style roofline estimate),
+//!   since host wall-clock is meaningless to the simulated SoC.
+
+use std::sync::Arc;
+
+use crate::runtime::Executable;
+
+/// What the datapath does for one descriptor.
+#[derive(Clone)]
+pub enum DpKind {
+    /// Copy `len` bytes from the input region to the output region.
+    Identity,
+    /// Execute a compiled HLO stage; inputs are f32 PLM regions.
+    Xla(Arc<Executable>),
+}
+
+impl std::fmt::Debug for DpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DpKind::Identity => write!(f, "Identity"),
+            DpKind::Xla(e) => write!(f, "Xla({})", e.name()),
+        }
+    }
+}
+
+/// One datapath descriptor (indexed by `RunDp { call }`).
+#[derive(Debug, Clone)]
+pub struct DpCall {
+    /// Backend.
+    pub kind: DpKind,
+    /// Input PLM regions: `(offset_bytes, len_bytes)` per artifact input.
+    pub inputs: Vec<(u32, u32)>,
+    /// Output PLM offset (outputs are written back-to-back from here).
+    pub out_offset: u32,
+    /// Cycles the datapath is busy (analytic estimate; see DESIGN.md §Perf).
+    pub cycles: u64,
+}
+
+/// Estimate datapath cycles for a dense `M x K x N` matmul stage on an
+/// MXU-like array sustaining `flops_per_cycle` (2 ops per MAC).
+pub fn matmul_cycles(m: u64, k: u64, n: u64, flops_per_cycle: u64) -> u64 {
+    (2 * m * k * n).div_ceil(flops_per_cycle.max(1))
+}
+
+/// Estimate datapath cycles for a streaming op over `bytes` at
+/// `words_per_cycle` 4-byte words.
+pub fn stream_cycles(bytes: u64, words_per_cycle: u64) -> u64 {
+    (bytes / 4).div_ceil(words_per_cycle.max(1))
+}
+
+/// Execute a descriptor against the PLM.  Returns the busy time in cycles.
+/// Panics on malformed descriptors (launcher bugs, not runtime conditions).
+pub fn execute(call: &DpCall, plm: &mut [u8]) -> u64 {
+    match &call.kind {
+        DpKind::Identity => {
+            let (in_off, len) = call.inputs[0];
+            let (in_off, len, out) = (in_off as usize, len as usize, call.out_offset as usize);
+            plm.copy_within(in_off..in_off + len, out);
+        }
+        DpKind::Xla(exe) => {
+            // Gather f32 inputs from the PLM regions.
+            let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(call.inputs.len());
+            for &(off, len) in &call.inputs {
+                let bytes = &plm[off as usize..(off + len) as usize];
+                inputs.push(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                );
+            }
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let outs = exe
+                .execute_f32(&refs)
+                .unwrap_or_else(|e| panic!("datapath {}: {e}", exe.name()));
+            let mut off = call.out_offset as usize;
+            for out in outs {
+                for v in out {
+                    plm[off..off + 4].copy_from_slice(&v.to_le_bytes());
+                    off += 4;
+                }
+            }
+        }
+    }
+    call.cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_copies_within_plm() {
+        let call = DpCall {
+            kind: DpKind::Identity,
+            inputs: vec![(0, 16)],
+            out_offset: 32,
+            cycles: 4,
+        };
+        let mut plm = (0..64u8).collect::<Vec<_>>();
+        let c = execute(&call, &mut plm);
+        assert_eq!(c, 4);
+        assert_eq!(&plm[32..48], &(0..16u8).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn cycle_estimates() {
+        // 32x256x256 matmul on a 256-flop/cycle MXU.
+        assert_eq!(matmul_cycles(32, 256, 256, 256), 16384);
+        assert_eq!(stream_cycles(4096, 8), 128);
+        assert_eq!(matmul_cycles(1, 1, 1, 0), 2, "zero rate clamps to 1");
+    }
+}

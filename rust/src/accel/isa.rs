@@ -1,0 +1,179 @@
+//! The example ISA extension of the paper (§3, *Example ISA*) plus the
+//! minimal scalar scaffolding a programmable accelerator needs to drive it.
+//!
+//! The two paper instructions:
+//!
+//! - **IDMA** — initiate a DMA transaction: direction, length, word size,
+//!   source / number-of-destinations (the `user` field), virtual address in
+//!   the accelerator's buffer, and PLM address.  Returns a **tag**.
+//! - **CDMA** — check a DMA transaction: takes a tag, returns status, so the
+//!   accelerator can overlap DMA with compute and branch on completion.
+//!
+//! Plus `WDMA` (spin on CDMA until done — the common idiom), datapath
+//! launch/wait, and a small scalar RISC subset (set/add/branch) so real
+//! loops can be expressed.  Every instruction encodes to one 64-bit word
+//! ([`encode`]/[`decode`] round-trip exactly), which is how a RoCC-style
+//! extension would carry them.
+
+use crate::socket::DmaDir;
+
+/// Number of scalar registers.
+pub const NUM_REGS: usize = 32;
+
+/// One instruction.  All DMA operands come from registers so programs can
+/// loop over bursts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// `rd = imm` (sign-extended).
+    Seti { rd: u8, imm: i32 },
+    /// `rd = ra + rb`.
+    Add { rd: u8, ra: u8, rb: u8 },
+    /// `rd = ra + imm` (sign-extended).
+    Addi { rd: u8, ra: u8, imm: i32 },
+    /// Initiate DMA: `rd = tag`.  Registers: `vaddr`, `plm`, `len`, `user`.
+    Idma { rd: u8, dir: DmaDir, vaddr: u8, plm: u8, len: u8, user: u8 },
+    /// Check DMA: `rd = 1` if the transaction in register `tag` is done.
+    Cdma { rd: u8, tag: u8 },
+    /// Wait (spin) until the transaction in register `tag` is done.
+    Wdma { tag: u8 },
+    /// Launch datapath descriptor `call` (see `DpCall`).
+    RunDp { call: u8 },
+    /// Wait for the datapath to finish.
+    Wdp,
+    /// Branch by `off` instructions when `ra < rb`.
+    Blt { ra: u8, rb: u8, off: i16 },
+    /// Branch by `off` instructions when `ra >= rb`.
+    Bge { ra: u8, rb: u8, off: i16 },
+    /// Branch by `off` instructions when `ra == rb`.
+    Beq { ra: u8, rb: u8, off: i16 },
+    /// Unconditional branch by `off` instructions.
+    Jmp { off: i16 },
+    /// Invocation complete.
+    Done,
+}
+
+// Opcode bytes.
+const OP_SETI: u8 = 0x01;
+const OP_ADD: u8 = 0x02;
+const OP_ADDI: u8 = 0x03;
+const OP_IDMA_R: u8 = 0x04;
+const OP_IDMA_W: u8 = 0x05;
+const OP_CDMA: u8 = 0x06;
+const OP_WDMA: u8 = 0x07;
+const OP_RUNDP: u8 = 0x08;
+const OP_WDP: u8 = 0x09;
+const OP_BLT: u8 = 0x0A;
+const OP_BGE: u8 = 0x0B;
+const OP_BEQ: u8 = 0x0C;
+const OP_JMP: u8 = 0x0D;
+const OP_DONE: u8 = 0x0E;
+
+/// Encode an instruction to its 64-bit form:
+/// `[63:56] opcode | [55:48] rd | [47:40] ra | [39:32] rb | [31:0] imm`.
+pub fn encode(i: Instr) -> u64 {
+    let pack = |op: u8, rd: u8, ra: u8, rb: u8, imm: u32| -> u64 {
+        ((op as u64) << 56)
+            | ((rd as u64) << 48)
+            | ((ra as u64) << 40)
+            | ((rb as u64) << 32)
+            | imm as u64
+    };
+    match i {
+        Instr::Seti { rd, imm } => pack(OP_SETI, rd, 0, 0, imm as u32),
+        Instr::Add { rd, ra, rb } => pack(OP_ADD, rd, ra, rb, 0),
+        Instr::Addi { rd, ra, imm } => pack(OP_ADDI, rd, ra, 0, imm as u32),
+        Instr::Idma { rd, dir, vaddr, plm, len, user } => {
+            let op = if dir == DmaDir::Read { OP_IDMA_R } else { OP_IDMA_W };
+            // vaddr/plm in ra/rb; len/user packed into imm.
+            pack(op, rd, vaddr, plm, ((len as u32) << 8) | user as u32)
+        }
+        Instr::Cdma { rd, tag } => pack(OP_CDMA, rd, tag, 0, 0),
+        Instr::Wdma { tag } => pack(OP_WDMA, 0, tag, 0, 0),
+        Instr::RunDp { call } => pack(OP_RUNDP, 0, 0, 0, call as u32),
+        Instr::Wdp => pack(OP_WDP, 0, 0, 0, 0),
+        Instr::Blt { ra, rb, off } => pack(OP_BLT, 0, ra, rb, off as u16 as u32),
+        Instr::Bge { ra, rb, off } => pack(OP_BGE, 0, ra, rb, off as u16 as u32),
+        Instr::Beq { ra, rb, off } => pack(OP_BEQ, 0, ra, rb, off as u16 as u32),
+        Instr::Jmp { off } => pack(OP_JMP, 0, 0, 0, off as u16 as u32),
+        Instr::Done => pack(OP_DONE, 0, 0, 0, 0),
+    }
+}
+
+/// Decode a 64-bit instruction word.  Returns `None` on an unknown opcode.
+pub fn decode(w: u64) -> Option<Instr> {
+    let op = (w >> 56) as u8;
+    let rd = (w >> 48) as u8;
+    let ra = (w >> 40) as u8;
+    let rb = (w >> 32) as u8;
+    let imm = w as u32;
+    Some(match op {
+        OP_SETI => Instr::Seti { rd, imm: imm as i32 },
+        OP_ADD => Instr::Add { rd, ra, rb },
+        OP_ADDI => Instr::Addi { rd, ra, imm: imm as i32 },
+        OP_IDMA_R | OP_IDMA_W => Instr::Idma {
+            rd,
+            dir: if op == OP_IDMA_R { DmaDir::Read } else { DmaDir::Write },
+            vaddr: ra,
+            plm: rb,
+            len: (imm >> 8) as u8,
+            user: imm as u8,
+        },
+        OP_CDMA => Instr::Cdma { rd, tag: ra },
+        OP_WDMA => Instr::Wdma { tag: ra },
+        OP_RUNDP => Instr::RunDp { call: imm as u8 },
+        OP_WDP => Instr::Wdp,
+        OP_BLT => Instr::Blt { ra, rb, off: imm as u16 as i16 },
+        OP_BGE => Instr::Bge { ra, rb, off: imm as u16 as i16 },
+        OP_BEQ => Instr::Beq { ra, rb, off: imm as u16 as i16 },
+        OP_JMP => Instr::Jmp { off: imm as u16 as i16 },
+        OP_DONE => Instr::Done,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_samples() -> Vec<Instr> {
+        vec![
+            Instr::Seti { rd: 3, imm: -1 },
+            Instr::Seti { rd: 31, imm: i32::MAX },
+            Instr::Add { rd: 1, ra: 2, rb: 3 },
+            Instr::Addi { rd: 4, ra: 5, imm: -4096 },
+            Instr::Idma { rd: 6, dir: DmaDir::Read, vaddr: 7, plm: 8, len: 9, user: 10 },
+            Instr::Idma { rd: 11, dir: DmaDir::Write, vaddr: 12, plm: 13, len: 14, user: 2 },
+            Instr::Cdma { rd: 15, tag: 16 },
+            Instr::Wdma { tag: 17 },
+            Instr::RunDp { call: 3 },
+            Instr::Wdp,
+            Instr::Blt { ra: 1, rb: 2, off: -5 },
+            Instr::Bge { ra: 3, rb: 4, off: 100 },
+            Instr::Beq { ra: 5, rb: 6, off: -32768 },
+            Instr::Jmp { off: 32767 },
+            Instr::Done,
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for i in all_samples() {
+            assert_eq!(decode(encode(i)), Some(i), "{i:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_opcode_decodes_none() {
+        assert_eq!(decode(0xFF00_0000_0000_0000), None);
+        assert_eq!(decode(0), None);
+    }
+
+    #[test]
+    fn opcodes_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for i in all_samples() {
+            seen.insert((encode(i) >> 56) as u8);
+        }
+        assert!(seen.len() >= 14);
+    }
+}

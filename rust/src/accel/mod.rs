@@ -1,0 +1,15 @@
+//! Programmable accelerators: the example ISA (IDMA/CDMA), the in-order
+//! core, datapath backends (identity / compiled JAX-Pallas stages), and
+//! program builders (traffic generator, NN stages).
+
+pub mod core;
+pub mod datapath;
+pub mod isa;
+pub mod program;
+pub mod traffic_gen;
+
+pub use core::{AccCore, CoreState, CoreStats};
+pub use datapath::{matmul_cycles, stream_cycles, DpCall, DpKind};
+pub use isa::{decode, encode, Instr};
+pub use program::{stage_program, Xfer};
+pub use traffic_gen::TgenArgs;

@@ -1,0 +1,186 @@
+//! The paper's traffic-generator accelerator.
+//!
+//! "The traffic generator is used to mimic the communication patterns of an
+//! accelerator in the SoC, but does not perform any computation.  In
+//! particular, our traffic generator accelerator performs the identity
+//! function [...] The traffic generator accelerator is capable of loading
+//! 4KB of data at a time; hence, larger data set sizes require multiple
+//! read and write bursts."
+//!
+//! [`program`] emits a double-buffered (ping-pong PLM banks, two
+//! outstanding transfers) stream loop in the accelerator ISA, which gives
+//! the burst-granularity pipelining the paper credits for the speedup
+//! growth with data size.  [`program_single_buffered`] is the ablation
+//! variant without overlap.
+//!
+//! Invocation arguments (socket ARG registers -> core r1..r6):
+//! `r1 = n_bursts, r2 = burst_bytes, r3 = read user, r4 = write user,
+//!  r5 = input vaddr, r6 = output vaddr`.
+
+use crate::accel::isa::Instr;
+use crate::socket::DmaDir;
+
+/// Argument-register meanings for the traffic-generator program.
+pub mod args {
+    /// ARG0: number of bursts.
+    pub const N_BURSTS: usize = 0;
+    /// ARG1: bytes per burst (<= socket max, 4 KB in the paper).
+    pub const BURST_BYTES: usize = 1;
+    /// ARG2: read `user` (0 = memory, k = P2P source index).
+    pub const RD_USER: usize = 2;
+    /// ARG3: write `user` (0 = memory, 1 = unicast, n>=2 = multicast).
+    pub const WR_USER: usize = 3;
+    /// ARG4: input virtual address.
+    pub const VADDR_IN: usize = 4;
+    /// ARG5: output virtual address.
+    pub const VADDR_OUT: usize = 5;
+}
+
+/// Double-buffered stream program (two PLM banks at offsets 0 and
+/// `burst_bytes`; up to two reads and two writes outstanding).
+pub fn program() -> Vec<Instr> {
+    use Instr::*;
+    let r = DmaDir::Read;
+    let w = DmaDir::Write;
+    vec![
+        /*  0 */ Seti { rd: 14, imm: -1 },            // wr tag A = NONE
+        /*  1 */ Seti { rd: 15, imm: -1 },            // wr tag B = NONE
+        /*  2 */ Seti { rd: 11, imm: 0 },             // i = 0
+        /*  3 */ Seti { rd: 9, imm: 0 },              // bank A plm offset
+        /*  4 */ Add { rd: 10, ra: 0, rb: 2 },        // bank B plm offset
+        /*  5 */ Bge { ra: 11, rb: 1, off: 18 },      // -> drain (23)
+        // body: burst i via bank A
+        /*  6 */ Wdma { tag: 14 },                    // bank A free?
+        /*  7 */ Idma { rd: 12, dir: r, vaddr: 5, plm: 9, len: 2, user: 3 },
+        /*  8 */ Add { rd: 5, ra: 5, rb: 2 },
+        /*  9 */ Addi { rd: 16, ra: 11, imm: 1 },     // i+1
+        /* 10 */ Bge { ra: 16, rb: 1, off: 4 },       // no burst i+1 -> 14
+        // burst i+1 via bank B (issued while burst i is in flight)
+        /* 11 */ Wdma { tag: 15 },
+        /* 12 */ Idma { rd: 13, dir: r, vaddr: 5, plm: 10, len: 2, user: 3 },
+        /* 13 */ Add { rd: 5, ra: 5, rb: 2 },
+        // write-back burst i
+        /* 14 */ Wdma { tag: 12 },
+        /* 15 */ Idma { rd: 14, dir: w, vaddr: 6, plm: 9, len: 2, user: 4 },
+        /* 16 */ Add { rd: 6, ra: 6, rb: 2 },
+        /* 17 */ Bge { ra: 16, rb: 1, off: 4 },       // -> 21
+        // write-back burst i+1
+        /* 18 */ Wdma { tag: 13 },
+        /* 19 */ Idma { rd: 15, dir: w, vaddr: 6, plm: 10, len: 2, user: 4 },
+        /* 20 */ Add { rd: 6, ra: 6, rb: 2 },
+        /* 21 */ Addi { rd: 11, ra: 11, imm: 2 },
+        /* 22 */ Blt { ra: 11, rb: 1, off: -16 },     // -> 6
+        // drain
+        /* 23 */ Wdma { tag: 14 },
+        /* 24 */ Wdma { tag: 15 },
+        /* 25 */ Done,
+    ]
+}
+
+/// Single-buffered ablation: strictly read, wait, write, wait per burst.
+pub fn program_single_buffered() -> Vec<Instr> {
+    use Instr::*;
+    let r = DmaDir::Read;
+    let w = DmaDir::Write;
+    vec![
+        /* 0 */ Seti { rd: 11, imm: 0 },
+        /* 1 */ Seti { rd: 9, imm: 0 },
+        /* 2 */ Bge { ra: 11, rb: 1, off: 9 }, // -> 11
+        /* 3 */ Idma { rd: 12, dir: r, vaddr: 5, plm: 9, len: 2, user: 3 },
+        /* 4 */ Wdma { tag: 12 },
+        /* 5 */ Idma { rd: 14, dir: w, vaddr: 6, plm: 9, len: 2, user: 4 },
+        /* 6 */ Wdma { tag: 14 },
+        /* 7 */ Add { rd: 5, ra: 5, rb: 2 },
+        /* 8 */ Add { rd: 6, ra: 6, rb: 2 },
+        /* 9 */ Addi { rd: 11, ra: 11, imm: 1 },
+        /* 10 */ Blt { ra: 11, rb: 1, off: -8 }, // -> 2
+        /* 11 */ Done,
+    ]
+}
+
+/// ARG values for a traffic-generator invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct TgenArgs {
+    /// Total bytes to stream through.
+    pub total_bytes: u32,
+    /// Bytes per burst.
+    pub burst_bytes: u32,
+    /// Read `user` field.
+    pub rd_user: u16,
+    /// Write `user` field.
+    pub wr_user: u16,
+    /// Input virtual address.
+    pub vaddr_in: u64,
+    /// Output virtual address.
+    pub vaddr_out: u64,
+}
+
+impl TgenArgs {
+    /// Pack into the socket ARG registers.
+    pub fn pack(&self) -> [u64; 8] {
+        assert_eq!(self.total_bytes % self.burst_bytes, 0, "partial bursts unsupported");
+        let mut a = [0u64; 8];
+        a[args::N_BURSTS] = (self.total_bytes / self.burst_bytes) as u64;
+        a[args::BURST_BYTES] = self.burst_bytes as u64;
+        a[args::RD_USER] = self.rd_user as u64;
+        a[args::WR_USER] = self.wr_user as u64;
+        a[args::VADDR_IN] = self.vaddr_in;
+        a[args::VADDR_OUT] = self.vaddr_out;
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branch_targets_in_range() {
+        for prog in [program(), program_single_buffered()] {
+            for (pc, i) in prog.iter().enumerate() {
+                let off = match i {
+                    Instr::Blt { off, .. }
+                    | Instr::Bge { off, .. }
+                    | Instr::Beq { off, .. }
+                    | Instr::Jmp { off } => *off as i64,
+                    _ => continue,
+                };
+                let tgt = pc as i64 + off;
+                assert!(
+                    tgt >= 0 && (tgt as usize) < prog.len(),
+                    "branch at {pc} targets {tgt} (len {})",
+                    prog.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn args_pack() {
+        let a = TgenArgs {
+            total_bytes: 16384,
+            burst_bytes: 4096,
+            rd_user: 0,
+            wr_user: 2,
+            vaddr_in: 0,
+            vaddr_out: 16384,
+        }
+        .pack();
+        assert_eq!(a[args::N_BURSTS], 4);
+        assert_eq!(a[args::WR_USER], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "partial bursts")]
+    fn partial_bursts_rejected() {
+        TgenArgs {
+            total_bytes: 5000,
+            burst_bytes: 4096,
+            rd_user: 0,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: 0,
+        }
+        .pack();
+    }
+}

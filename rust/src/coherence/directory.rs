@@ -1,0 +1,332 @@
+//! Full-map blocking directory, embedded in the LLC of the memory tile.
+//!
+//! Per line the directory is Invalid (memory owns), Shared (a sharer
+//! list), or Owned (one cache holds E/M).  A line with an outstanding
+//! owner-downgrade (GetS hitting Owned) is *busy*: further requests queue
+//! until the copyback arrives, which serializes the racy cases.  Forward
+//! and invalidate messages carry the **requester** as their source
+//! coordinate so the responding cache can target acknowledgements
+//! directly, as in ESP's directory protocol.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::noc::{CohOp, Coord, Message, MsgKind, Plane};
+
+/// Directory state for one line (absent from the map = Invalid).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum DirLine {
+    /// Clean copies at these caches; memory is current.
+    Shared(Vec<Coord>),
+    /// One cache holds the line Exclusive/Modified.
+    Owned(Coord),
+}
+
+/// An in-flight owner downgrade.
+#[derive(Debug)]
+struct BusyToken {
+    old_owner: Coord,
+    requester: Coord,
+}
+
+/// The directory controller.
+pub struct Directory {
+    /// Memory-tile coordinate (this controller's home).
+    pub coord: Coord,
+    line_bytes: usize,
+    states: HashMap<u64, DirLine>,
+    busy: HashMap<u64, BusyToken>,
+    queued: HashMap<u64, VecDeque<Message>>,
+    out: Vec<(Plane, Message)>,
+    /// Stats: requests served / forwards issued / invalidations issued.
+    pub requests: u64,
+    /// Stats.
+    pub forwards: u64,
+    /// Stats.
+    pub invalidations: u64,
+}
+
+impl Directory {
+    /// Empty directory.
+    pub fn new(coord: Coord, line_bytes: u32) -> Self {
+        Self {
+            coord,
+            line_bytes: line_bytes as usize,
+            states: HashMap::new(),
+            busy: HashMap::new(),
+            queued: HashMap::new(),
+            out: Vec::new(),
+            requests: 0,
+            forwards: 0,
+            invalidations: 0,
+        }
+    }
+
+    fn read_line(&self, dram: &[u8], laddr: u64) -> Vec<u8> {
+        let a = laddr as usize;
+        dram[a..a + self.line_bytes].to_vec()
+    }
+
+    fn write_line(&self, dram: &mut [u8], laddr: u64, data: &[u8]) {
+        let a = laddr as usize;
+        dram[a..a + self.line_bytes].copy_from_slice(data);
+    }
+
+    fn send_data(&mut self, to: Coord, laddr: u64, op: CohOp, acks: u16, data: Vec<u8>) {
+        let kind = MsgKind::Coh { op, line: laddr, ack_count: acks };
+        self.out.push((Plane::CohRsp, Message::data(self.coord, to, kind, Arc::new(data))));
+    }
+
+    /// Handle one coherence message; `dram` is the backing store.
+    pub fn handle_msg(&mut self, msg: &Message, dram: &mut [u8]) {
+        let MsgKind::Coh { op, line: laddr, ack_count } = msg.kind else { return };
+        // Copybacks resolve busy lines; everything else queues when busy.
+        let is_copyback = op == CohOp::PutM && ack_count == 1;
+        if self.busy.contains_key(&laddr) && !is_copyback {
+            self.queued.entry(laddr).or_default().push_back(msg.clone());
+            return;
+        }
+        match op {
+            CohOp::GetS => {
+                self.requests += 1;
+                match self.states.get(&laddr).cloned() {
+                    None => {
+                        // Sole reader: grant Exclusive (the E of MESI).
+                        let data = self.read_line(dram, laddr);
+                        self.send_data(msg.src, laddr, CohOp::DataM, 0, data);
+                        self.states.insert(laddr, DirLine::Owned(msg.src));
+                    }
+                    Some(DirLine::Shared(mut sharers)) => {
+                        let data = self.read_line(dram, laddr);
+                        self.send_data(msg.src, laddr, CohOp::Data, 0, data);
+                        if !sharers.contains(&msg.src) {
+                            sharers.push(msg.src);
+                        }
+                        self.states.insert(laddr, DirLine::Shared(sharers));
+                    }
+                    Some(DirLine::Owned(owner)) => {
+                        if owner == msg.src {
+                            // Owner silently dropped E and re-reads.
+                            let data = self.read_line(dram, laddr);
+                            self.send_data(msg.src, laddr, CohOp::DataM, 0, data);
+                        } else {
+                            // Downgrade the owner; block until copyback.
+                            self.forwards += 1;
+                            let kind =
+                                MsgKind::Coh { op: CohOp::FwdGetS, line: laddr, ack_count: 0 };
+                            // src = requester so the owner can reply directly.
+                            self.out.push((
+                                Plane::CohFwd,
+                                Message::ctrl(msg.src, owner, kind),
+                            ));
+                            self.busy.insert(
+                                laddr,
+                                BusyToken { old_owner: owner, requester: msg.src },
+                            );
+                        }
+                    }
+                }
+            }
+            CohOp::GetM => {
+                self.requests += 1;
+                match self.states.get(&laddr).cloned() {
+                    None => {
+                        let data = self.read_line(dram, laddr);
+                        self.send_data(msg.src, laddr, CohOp::DataM, 0, data);
+                        self.states.insert(laddr, DirLine::Owned(msg.src));
+                    }
+                    Some(DirLine::Shared(sharers)) => {
+                        let others: Vec<Coord> =
+                            sharers.iter().copied().filter(|&c| c != msg.src).collect();
+                        for &s in &others {
+                            self.invalidations += 1;
+                            let kind = MsgKind::Coh { op: CohOp::Inv, line: laddr, ack_count: 0 };
+                            // src = requester: sharers ack the requester.
+                            self.out.push((Plane::CohFwd, Message::ctrl(msg.src, s, kind)));
+                        }
+                        let data = self.read_line(dram, laddr);
+                        self.send_data(msg.src, laddr, CohOp::DataM, others.len() as u16, data);
+                        self.states.insert(laddr, DirLine::Owned(msg.src));
+                    }
+                    Some(DirLine::Owned(owner)) => {
+                        if owner == msg.src {
+                            // Silent E drop followed by a write miss.
+                            let data = self.read_line(dram, laddr);
+                            self.send_data(msg.src, laddr, CohOp::DataM, 0, data);
+                        } else {
+                            self.forwards += 1;
+                            let kind =
+                                MsgKind::Coh { op: CohOp::FwdGetM, line: laddr, ack_count: 0 };
+                            self.out.push((Plane::CohFwd, Message::ctrl(msg.src, owner, kind)));
+                            self.states.insert(laddr, DirLine::Owned(msg.src));
+                        }
+                    }
+                }
+            }
+            CohOp::PutM if is_copyback => {
+                // Copyback from a FwdGetS downgrade: memory becomes current,
+                // the line is Shared by {old owner, requester}.
+                self.write_line(dram, laddr, &msg.payload);
+                let token = self.busy.remove(&laddr).expect("copyback without busy token");
+                debug_assert_eq!(token.old_owner, msg.src);
+                self.states.insert(
+                    laddr,
+                    DirLine::Shared(vec![token.old_owner, token.requester]),
+                );
+                // Replay queued requests in order.
+                if let Some(mut q) = self.queued.remove(&laddr) {
+                    while let Some(m) = q.pop_front() {
+                        self.handle_msg(&m, dram);
+                        if self.busy.contains_key(&laddr) {
+                            // Re-blocked: requeue the rest.
+                            if !q.is_empty() {
+                                self.queued.entry(laddr).or_default().extend(q.drain(..));
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+            CohOp::PutM => {
+                // Eviction writeback.  Only the current owner's data counts;
+                // stale Puts (ownership already moved) are acked and dropped.
+                if self.states.get(&laddr) == Some(&DirLine::Owned(msg.src)) {
+                    self.write_line(dram, laddr, &msg.payload);
+                    self.states.remove(&laddr);
+                }
+                let kind = MsgKind::Coh { op: CohOp::PutAck, line: laddr, ack_count: 0 };
+                self.out.push((Plane::CohFwd, Message::ctrl(self.coord, msg.src, kind)));
+            }
+            _ => panic!("directory received response {op:?}"),
+        }
+    }
+
+    /// Drain outgoing messages (the memory tile injects them with LLC
+    /// latency).
+    pub fn drain_out(&mut self) -> Vec<(Plane, Message)> {
+        std::mem::take(&mut self.out)
+    }
+
+    /// Any busy lines (diagnostics)?
+    pub fn quiescent(&self) -> bool {
+        self.busy.is_empty() && self.queued.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gets(src: Coord, line: u64) -> Message {
+        Message::ctrl(src, (0, 0), MsgKind::Coh { op: CohOp::GetS, line, ack_count: 0 })
+    }
+
+    fn getm(src: Coord, line: u64) -> Message {
+        Message::ctrl(src, (0, 0), MsgKind::Coh { op: CohOp::GetM, line, ack_count: 0 })
+    }
+
+    #[test]
+    fn cold_gets_grants_exclusive() {
+        let mut d = Directory::new((0, 0), 64);
+        let mut dram = vec![0u8; 4096];
+        dram[0] = 0x77;
+        d.handle_msg(&gets((1, 1), 0), &mut dram);
+        let out = d.drain_out();
+        assert_eq!(out.len(), 1);
+        let MsgKind::Coh { op, ack_count, .. } = out[0].1.kind else { panic!() };
+        assert_eq!(op, CohOp::DataM, "sole reader gets E");
+        assert_eq!(ack_count, 0);
+        assert_eq!(out[0].1.payload[0], 0x77);
+    }
+
+    #[test]
+    fn second_reader_triggers_downgrade_and_blocks() {
+        let mut d = Directory::new((0, 0), 64);
+        let mut dram = vec![0u8; 4096];
+        d.handle_msg(&gets((1, 1), 0), &mut dram);
+        d.drain_out();
+        d.handle_msg(&gets((2, 2), 0), &mut dram);
+        let out = d.drain_out();
+        assert_eq!(out.len(), 1);
+        let MsgKind::Coh { op, .. } = out[0].1.kind else { panic!() };
+        assert_eq!(op, CohOp::FwdGetS);
+        assert_eq!(out[0].1.src, (2, 2), "forward carries the requester");
+        assert_eq!(out[0].1.dests.as_slice(), &[(1, 1)]);
+        assert!(!d.quiescent());
+        // A third request queues while busy.
+        d.handle_msg(&gets((0, 1), 0), &mut dram);
+        assert!(d.drain_out().is_empty());
+        // Copyback resolves and replays the queued request.
+        let mut cb = Message::data(
+            (1, 1),
+            (0, 0),
+            MsgKind::Coh { op: CohOp::PutM, line: 0, ack_count: 1 },
+            Arc::new(vec![9u8; 64]),
+        );
+        cb.src = (1, 1);
+        d.handle_msg(&cb, &mut dram);
+        assert_eq!(dram[0], 9, "copyback updates memory");
+        let out = d.drain_out();
+        assert_eq!(out.len(), 1, "queued GetS replayed");
+        assert!(d.quiescent());
+    }
+
+    #[test]
+    fn getm_invalidates_sharers() {
+        let mut d = Directory::new((0, 0), 64);
+        let mut dram = vec![0u8; 4096];
+        // Two sharers: first E-grant, downgrade via copyback, second share.
+        d.handle_msg(&gets((1, 1), 64), &mut dram);
+        d.drain_out();
+        d.handle_msg(&gets((2, 2), 64), &mut dram);
+        d.drain_out();
+        let cb = Message::data(
+            (1, 1),
+            (0, 0),
+            MsgKind::Coh { op: CohOp::PutM, line: 64, ack_count: 1 },
+            Arc::new(vec![0u8; 64]),
+        );
+        d.handle_msg(&cb, &mut dram);
+        d.drain_out();
+        // Now (3,3) writes.
+        d.handle_msg(&getm((3, 3), 64), &mut dram);
+        let out = d.drain_out();
+        let invs: Vec<_> = out
+            .iter()
+            .filter(|(_, m)| {
+                matches!(m.kind, MsgKind::Coh { op: CohOp::Inv, .. })
+            })
+            .collect();
+        assert_eq!(invs.len(), 2);
+        for (_, m) in &invs {
+            assert_eq!(m.src, (3, 3), "Inv carries requester for direct acks");
+        }
+        let datam = out
+            .iter()
+            .find(|(_, m)| matches!(m.kind, MsgKind::Coh { op: CohOp::DataM, .. }))
+            .unwrap();
+        let MsgKind::Coh { ack_count, .. } = datam.1.kind else { panic!() };
+        assert_eq!(ack_count, 2);
+    }
+
+    #[test]
+    fn stale_putm_is_acked_but_ignored() {
+        let mut d = Directory::new((0, 0), 64);
+        let mut dram = vec![0u8; 4096];
+        d.handle_msg(&getm((1, 1), 0), &mut dram);
+        d.drain_out();
+        d.handle_msg(&getm((2, 2), 0), &mut dram); // ownership moves (FwdGetM)
+        d.drain_out();
+        // Old owner's eviction PutM arrives late.
+        let put = Message::data(
+            (1, 1),
+            (0, 0),
+            MsgKind::Coh { op: CohOp::PutM, line: 0, ack_count: 0 },
+            Arc::new(vec![5u8; 64]),
+        );
+        d.handle_msg(&put, &mut dram);
+        assert_eq!(dram[0], 0, "stale data not written");
+        let out = d.drain_out();
+        assert!(matches!(out[0].1.kind, MsgKind::Coh { op: CohOp::PutAck, .. }));
+    }
+}

@@ -1,0 +1,485 @@
+//! MESI coherence over the three coherence NoC planes.
+//!
+//! ESP optionally instantiates an L2 in the accelerator socket, letting the
+//! accelerator participate in the system's MESI protocol.  The paper's
+//! synchronization proposal (§3, *Accelerator Synchronization*) reserves a
+//! small portion of the dataset for **coherent** flag words while bulk data
+//! uses DMA — so this module implements a compact but complete MESI:
+//!
+//! - [`CacheCtl`]: an L1/L2 cache controller (stable states I/S/E/M, the
+//!   transient states needed for loads, stores, upgrades and evictions).
+//! - [`Directory`]: a full-map **blocking** directory embedded in the LLC:
+//!   a line with an outstanding transaction queues subsequent requests,
+//!   which sidesteps most protocol races; the eviction/forward race is
+//!   handled with an eviction buffer on the cache side.
+//!
+//! Message classes ride dedicated physical planes (requests on
+//! [`Plane::CohReq`], forwards on [`Plane::CohFwd`], responses on
+//! [`Plane::CohRsp`]), which breaks message-dependent deadlock exactly as
+//! in ESP.
+
+pub mod directory;
+
+pub use directory::Directory;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::noc::{CohOp, Coord, Message, MsgKind, Plane};
+
+/// Stable MESI states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mesi {
+    Modified,
+    Exclusive,
+    Shared,
+}
+
+/// A cached line.
+#[derive(Debug, Clone)]
+struct Line {
+    state: Mesi,
+    data: Vec<u8>,
+}
+
+/// An in-flight transaction at the cache.
+#[derive(Debug)]
+struct Pending {
+    /// Store to apply once writable (word offset in line, value).
+    store: Option<(usize, u64)>,
+    /// InvAcks still expected (GetM); may go negative transiently when
+    /// acks arrive before the directory's count.
+    acks_needed: i32,
+    /// Directory ack-count received?
+    count_known: bool,
+    /// Data received?
+    data: Option<Vec<u8>>,
+    /// Granted state when complete.
+    grant: Mesi,
+}
+
+/// One cache controller (CPU L1 or accelerator-socket L2).
+pub struct CacheCtl {
+    /// This cache's tile (coherence endpoint id).
+    pub coord: Coord,
+    dir_tile: Coord,
+    line_bytes: usize,
+    capacity_lines: usize,
+    lines: HashMap<u64, Line>,
+    lru: VecDeque<u64>,
+    pending: HashMap<u64, Pending>,
+    /// Forwards/invalidations that arrived while their line's transaction
+    /// was still in flight; replayed at completion.
+    deferred: HashMap<u64, Vec<Message>>,
+    /// Lines mid-writeback, kept until PutAck so forwards can be served.
+    evicting: HashMap<u64, Vec<u8>>,
+    out: Vec<(Plane, Message)>,
+    /// Stats: hits / misses / writebacks / forwards served.
+    pub hits: u64,
+    /// Stats.
+    pub misses: u64,
+    /// Stats.
+    pub writebacks: u64,
+    /// Stats.
+    pub forwards_served: u64,
+}
+
+impl CacheCtl {
+    /// Build a cache of `capacity_bytes` with `line_bytes` lines.
+    pub fn new(coord: Coord, dir_tile: Coord, capacity_bytes: u32, line_bytes: u32) -> Self {
+        Self {
+            coord,
+            dir_tile,
+            line_bytes: line_bytes as usize,
+            capacity_lines: (capacity_bytes / line_bytes).max(2) as usize,
+            lines: HashMap::new(),
+            lru: VecDeque::new(),
+            pending: HashMap::new(),
+            deferred: HashMap::new(),
+            evicting: HashMap::new(),
+            out: Vec::new(),
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+            forwards_served: 0,
+        }
+    }
+
+    fn line_of(&self, addr: u64) -> (u64, usize) {
+        let line = addr & !(self.line_bytes as u64 - 1);
+        (line, (addr - line) as usize)
+    }
+
+    fn touch(&mut self, line: u64) {
+        if let Some(p) = self.lru.iter().position(|&l| l == line) {
+            self.lru.remove(p);
+        }
+        self.lru.push_back(line);
+    }
+
+    fn maybe_evict(&mut self) {
+        while self.lines.len() >= self.capacity_lines {
+            let Some(victim) = self.lru.pop_front() else { break };
+            if self.pending.contains_key(&victim) {
+                self.lru.push_back(victim); // never evict a pending line
+                continue;
+            }
+            let line = self.lines.remove(&victim).expect("lru tracks lines");
+            match line.state {
+                Mesi::Modified => {
+                    self.writebacks += 1;
+                    self.evicting.insert(victim, line.data.clone());
+                    let kind = MsgKind::Coh { op: CohOp::PutM, line: victim, ack_count: 0 };
+                    self.out.push((
+                        Plane::CohReq,
+                        Message::data(self.coord, self.dir_tile, kind, Arc::new(line.data)),
+                    ));
+                }
+                // E and S evict silently (clean); the directory's sharer
+                // list goes stale, which Inv/InvAck tolerates.
+                Mesi::Exclusive | Mesi::Shared => {}
+            }
+        }
+    }
+
+    /// Coherent load of the 8-byte word at `addr`.  Returns the value on a
+    /// hit; on a miss, starts a GetS and returns `None` (retry later).
+    pub fn load(&mut self, addr: u64) -> Option<u64> {
+        let (laddr, off) = self.line_of(addr);
+        if let Some(line) = self.lines.get(&laddr) {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(&line.data[off..off + 8]);
+            self.hits += 1;
+            self.touch(laddr);
+            return Some(u64::from_le_bytes(w));
+        }
+        if !self.pending.contains_key(&laddr) {
+            self.misses += 1;
+            self.pending.insert(
+                laddr,
+                Pending {
+                    store: None,
+                    acks_needed: 0,
+                    count_known: true,
+                    data: None,
+                    grant: Mesi::Shared,
+                },
+            );
+            let kind = MsgKind::Coh { op: CohOp::GetS, line: laddr, ack_count: 0 };
+            self.out.push((Plane::CohReq, Message::ctrl(self.coord, self.dir_tile, kind)));
+        }
+        None
+    }
+
+    /// Coherent store of the 8-byte word at `addr`.  Returns `true` when
+    /// the store is performed; on a miss/upgrade, starts a GetM and returns
+    /// `false` (retry later).
+    pub fn store(&mut self, addr: u64, val: u64) -> bool {
+        let (laddr, off) = self.line_of(addr);
+        if let Some(line) = self.lines.get_mut(&laddr) {
+            match line.state {
+                Mesi::Modified | Mesi::Exclusive => {
+                    line.data[off..off + 8].copy_from_slice(&val.to_le_bytes());
+                    line.state = Mesi::Modified; // E -> M silently
+                    self.hits += 1;
+                    self.touch(laddr);
+                    return true;
+                }
+                Mesi::Shared => {} // upgrade needed
+            }
+        }
+        if !self.pending.contains_key(&laddr) {
+            self.misses += 1;
+            self.pending.insert(
+                laddr,
+                Pending {
+                    store: Some((off, val)),
+                    acks_needed: 0,
+                    count_known: false,
+                    data: None,
+                    grant: Mesi::Modified,
+                },
+            );
+            let kind = MsgKind::Coh { op: CohOp::GetM, line: laddr, ack_count: 0 };
+            self.out.push((Plane::CohReq, Message::ctrl(self.coord, self.dir_tile, kind)));
+        } else if let Some(p) = self.pending.get_mut(&laddr) {
+            // Fold the store into the outstanding transaction if it is
+            // (or upgrades to) a write transaction.
+            if p.grant == Mesi::Modified && p.store.is_none() {
+                p.store = Some((off, val));
+            }
+        }
+        false
+    }
+
+    /// Is any transaction outstanding?
+    pub fn quiescent(&self) -> bool {
+        self.pending.is_empty() && self.evicting.is_empty() && self.deferred.is_empty()
+    }
+
+    fn try_complete(&mut self, laddr: u64) {
+        let Some(p) = self.pending.get(&laddr) else { return };
+        if p.data.is_none() || !p.count_known || p.acks_needed > 0 {
+            return;
+        }
+        let p = self.pending.remove(&laddr).unwrap();
+        let mut data = p.data.unwrap();
+        let mut state = p.grant;
+        if let Some((off, val)) = p.store {
+            data[off..off + 8].copy_from_slice(&val.to_le_bytes());
+            state = Mesi::Modified;
+        }
+        self.maybe_evict();
+        self.lines.insert(laddr, Line { state, data });
+        self.touch(laddr);
+        // Serve forwards that raced ahead of our data grant.
+        if let Some(msgs) = self.deferred.remove(&laddr) {
+            for m in msgs {
+                self.handle_msg(&m);
+            }
+        }
+    }
+
+    /// Handle a coherence message addressed to this cache.
+    pub fn handle_msg(&mut self, msg: &Message) {
+        let MsgKind::Coh { op, line: laddr, ack_count } = msg.kind else { return };
+        // A forward or invalidation can overtake the data grant of our own
+        // outstanding transaction (the directory does not block on GetM):
+        // defer it until the transaction completes.
+        if matches!(op, CohOp::FwdGetS | CohOp::FwdGetM | CohOp::Inv)
+            && self.pending.contains_key(&laddr)
+        {
+            self.deferred.entry(laddr).or_default().push(msg.clone());
+            return;
+        }
+        match op {
+            CohOp::Data | CohOp::DataM => {
+                let grant = if op == CohOp::Data { Mesi::Shared } else { Mesi::Exclusive };
+                let p = self.pending.get_mut(&laddr).expect("data without transaction");
+                p.data = Some(msg.payload.to_vec());
+                if op == CohOp::DataM {
+                    p.acks_needed += ack_count as i32;
+                    p.count_known = true;
+                    p.grant = Mesi::Exclusive;
+                } else if p.grant != Mesi::Modified {
+                    p.grant = grant;
+                }
+                self.try_complete(laddr);
+            }
+            CohOp::InvAck => {
+                let p = self.pending.get_mut(&laddr).expect("ack without transaction");
+                p.acks_needed -= 1;
+                self.try_complete(laddr);
+            }
+            CohOp::Inv => {
+                // Invalidate (silently tolerate a stale sharer-list Inv) and
+                // ack the *requester* (msg carries it as src).
+                self.lines.remove(&laddr);
+                let kind = MsgKind::Coh { op: CohOp::InvAck, line: laddr, ack_count: 0 };
+                self.out.push((Plane::CohRsp, Message::ctrl(self.coord, msg.src, kind)));
+            }
+            CohOp::FwdGetS => {
+                // Requester in src.  Serve from line or eviction buffer;
+                // downgrade to Shared and send a copy to the directory.
+                let data = if let Some(line) = self.lines.get_mut(&laddr) {
+                    line.state = Mesi::Shared;
+                    line.data.clone()
+                } else if let Some(d) = self.evicting.get(&laddr) {
+                    d.clone()
+                } else {
+                    panic!("FwdGetS for line {laddr:#x} not held at {:?}", self.coord)
+                };
+                self.forwards_served += 1;
+                let kind = MsgKind::Coh { op: CohOp::Data, line: laddr, ack_count: 0 };
+                self.out.push((
+                    Plane::CohRsp,
+                    Message::data(self.coord, msg.src, kind, Arc::new(data.clone())),
+                ));
+                // Copy back to the directory so memory is current.
+                let kind = MsgKind::Coh { op: CohOp::PutM, line: laddr, ack_count: 1 };
+                self.out.push((
+                    Plane::CohRsp,
+                    Message::data(self.coord, self.dir_tile, kind, Arc::new(data)),
+                ));
+            }
+            CohOp::FwdGetM => {
+                let data = if let Some(line) = self.lines.remove(&laddr) {
+                    line.data
+                } else if let Some(d) = self.evicting.get(&laddr) {
+                    d.clone()
+                } else {
+                    panic!("FwdGetM for line {laddr:#x} not held at {:?}", self.coord)
+                };
+                self.forwards_served += 1;
+                let kind = MsgKind::Coh { op: CohOp::DataM, line: laddr, ack_count: 0 };
+                self.out
+                    .push((Plane::CohRsp, Message::data(self.coord, msg.src, kind, Arc::new(data))));
+            }
+            CohOp::PutAck => {
+                self.evicting.remove(&laddr);
+            }
+            CohOp::GetS | CohOp::GetM | CohOp::PutM => {
+                panic!("request {op:?} delivered to a cache controller");
+            }
+        }
+    }
+
+    /// Drain outgoing coherence messages.
+    pub fn drain_out(&mut self) -> Vec<(Plane, Message)> {
+        std::mem::take(&mut self.out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Single-cache harness driving CacheCtl against Directory + memory.
+    struct World {
+        caches: Vec<CacheCtl>,
+        dir: Directory,
+        dram: Vec<u8>,
+    }
+
+    impl World {
+        fn new(n: usize) -> Self {
+            let caches =
+                (0..n).map(|i| CacheCtl::new((1, i as u8), (0, 0), 4096, 64)).collect();
+            Self { caches, dir: Directory::new((0, 0), 64), dram: vec![0u8; 1 << 16] }
+        }
+
+        /// Deliver all in-flight messages until quiescent (zero-latency NoC).
+        fn settle(&mut self) {
+            for _ in 0..1000 {
+                let mut msgs: Vec<(Plane, Message)> = Vec::new();
+                for c in &mut self.caches {
+                    msgs.extend(c.drain_out());
+                }
+                msgs.extend(self.dir.drain_out());
+                if msgs.is_empty() {
+                    return;
+                }
+                for (_, m) in msgs {
+                    for d in m.dests.iter() {
+                        if d == (0, 0) {
+                            self.dir.handle_msg(&m, &mut self.dram);
+                        } else {
+                            let c = self
+                                .caches
+                                .iter_mut()
+                                .find(|c| c.coord == d)
+                                .expect("dest cache");
+                            c.handle_msg(&m);
+                        }
+                    }
+                }
+            }
+            panic!("coherence did not settle");
+        }
+
+        fn load(&mut self, c: usize, addr: u64) -> u64 {
+            for _ in 0..100 {
+                if let Some(v) = self.caches[c].load(addr) {
+                    return v;
+                }
+                self.settle();
+            }
+            panic!("load did not complete");
+        }
+
+        fn store(&mut self, c: usize, addr: u64, val: u64) {
+            for _ in 0..100 {
+                if self.caches[c].store(addr, val) {
+                    return;
+                }
+                self.settle();
+            }
+            panic!("store did not complete");
+        }
+    }
+
+    #[test]
+    fn cold_load_returns_memory_value() {
+        let mut w = World::new(1);
+        w.dram[64..72].copy_from_slice(&0xDEAD_BEEFu64.to_le_bytes());
+        assert_eq!(w.load(0, 64), 0xDEAD_BEEF);
+        // Second load hits.
+        let h = w.caches[0].hits;
+        assert_eq!(w.load(0, 64), 0xDEAD_BEEF);
+        assert!(w.caches[0].hits > h);
+    }
+
+    #[test]
+    fn store_then_load_same_cache() {
+        let mut w = World::new(1);
+        w.store(0, 128, 42);
+        assert_eq!(w.load(0, 128), 42);
+    }
+
+    #[test]
+    fn producer_consumer_flag() {
+        // The paper's sync pattern: producer sets a flag, consumer spins.
+        let mut w = World::new(2);
+        assert_eq!(w.load(1, 0), 0, "consumer sees flag clear");
+        w.store(0, 0, 1); // producer sets (invalidates consumer's copy)
+        assert_eq!(w.load(1, 0), 1, "consumer re-fetches and sees flag set");
+    }
+
+    #[test]
+    fn write_write_transfer() {
+        let mut w = World::new(3);
+        w.store(0, 256, 7);
+        w.store(1, 256, 8);
+        w.store(2, 256, 9);
+        assert_eq!(w.load(0, 256), 9);
+        assert_eq!(w.load(1, 256), 9);
+    }
+
+    #[test]
+    fn read_sharers_then_writer_invalidates() {
+        let mut w = World::new(4);
+        w.dram[0..8].copy_from_slice(&5u64.to_le_bytes());
+        for c in 0..3 {
+            assert_eq!(w.load(c, 0), 5);
+        }
+        w.store(3, 0, 6);
+        for c in 0..3 {
+            assert_eq!(w.load(c, 0), 6, "cache {c} sees the new value");
+        }
+    }
+
+    #[test]
+    fn exclusive_grant_on_sole_reader() {
+        let mut w = World::new(2);
+        w.load(0, 512);
+        // Store without further traffic means we got E (silent E->M).
+        let misses_before = w.caches[0].misses;
+        w.store(0, 512, 1);
+        assert_eq!(w.caches[0].misses, misses_before, "E->M upgrade is silent");
+    }
+
+    #[test]
+    fn eviction_writes_back_dirty_data() {
+        let mut w = World::new(1);
+        // Cache holds 4096/64 = 64 lines; write 70 distinct lines.
+        for i in 0..70u64 {
+            w.store(0, i * 64, i + 1);
+        }
+        w.settle();
+        assert!(w.caches[0].writebacks > 0);
+        // Evicted values must be recoverable (from dram via directory).
+        for i in 0..70u64 {
+            assert_eq!(w.load(0, i * 64), i + 1, "line {i}");
+        }
+    }
+
+    #[test]
+    fn distinct_words_same_line() {
+        let mut w = World::new(2);
+        w.store(0, 0, 1);
+        w.store(1, 8, 2); // same line, different word
+        assert_eq!(w.load(0, 0), 1);
+        assert_eq!(w.load(0, 8), 2);
+        assert_eq!(w.load(1, 0), 1);
+    }
+}

@@ -1,0 +1,563 @@
+//! SoC configuration: grid shape, tile map, NoC parameters, memory system,
+//! accelerator socket parameters, and host-cost model.
+//!
+//! Configs are plain structs with hand-rolled JSON encode/decode (the
+//! offline build has no serde; see [`crate::util::json`]) and are
+//! validated before a [`crate::coordinator::Soc`] is assembled.  The
+//! defaults reproduce the paper's evaluation platform: a 3x4 mesh with one
+//! CPU, one memory, one I/O tile and nine accelerator tiles hosting up to
+//! two accelerators each (the paper's 17 traffic generators), a 256-bit
+//! NoC, and multicast up to 16 destinations.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::Json;
+
+use crate::noc::{header_dest_capacity, Coord, MAX_DESTS};
+
+/// What occupies one mesh tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileKind {
+    /// Host CPU (invocation issue + IRQ handling).
+    Cpu,
+    /// Memory tile: LLC + directory + DRAM channel.
+    Mem,
+    /// I/O tile (boot, peripherals; a NoC endpoint but mostly idle here).
+    Io,
+    /// Accelerator tile hosting `accs` accelerator sockets (1 or 2).
+    Acc {
+        /// Number of accelerator instances sharing this tile's NoC port.
+        accs: u8,
+    },
+    /// Empty/spare tile.
+    Empty,
+}
+
+impl TileKind {
+    /// Short config-file code ("cpu", "mem", "io", "acc1", "acc2", "empty").
+    pub fn code(&self) -> &'static str {
+        match self {
+            TileKind::Cpu => "cpu",
+            TileKind::Mem => "mem",
+            TileKind::Io => "io",
+            TileKind::Acc { accs: 1 } => "acc1",
+            TileKind::Acc { .. } => "acc2",
+            TileKind::Empty => "empty",
+        }
+    }
+
+    /// Parse a config-file code.
+    pub fn from_code(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cpu" => TileKind::Cpu,
+            "mem" => TileKind::Mem,
+            "io" => TileKind::Io,
+            "acc1" => TileKind::Acc { accs: 1 },
+            "acc2" => TileKind::Acc { accs: 2 },
+            "empty" => TileKind::Empty,
+            _ => bail!("unknown tile kind {s:?}"),
+        })
+    }
+}
+
+/// Apply a `u64` field from a JSON object if present.
+fn set_u64(j: &Json, key: &str, mut set: impl FnMut(u64)) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        set(v.as_u64().map_err(|e| anyhow!("{key}: {e}"))?);
+    }
+    Ok(())
+}
+
+/// NoC parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NocConfig {
+    /// Flit bitwidth (64 / 128 / 256 in the paper).
+    pub bitwidth: u32,
+    /// Router input-queue depth, flits.
+    pub queue_depth: usize,
+    /// Maximum multicast destinations this SoC enables (further bounded by
+    /// the header capacity of `bitwidth`).
+    pub max_mcast_dests: usize,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        Self { bitwidth: 256, queue_depth: 4, max_mcast_dests: MAX_DESTS }
+    }
+}
+
+/// Memory-tile parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MemConfig {
+    /// DRAM size in bytes (backing store).
+    pub dram_bytes: u64,
+    /// DRAM access latency, cycles.
+    pub dram_latency: u32,
+    /// LLC capacity in bytes (0 disables the LLC).
+    pub llc_bytes: u64,
+    /// LLC associativity.
+    pub llc_ways: u16,
+    /// LLC hit latency, cycles.
+    pub llc_latency: u32,
+    /// Cache-line bytes (also the coherence granularity).
+    pub line_bytes: u32,
+    /// New memory requests accepted per cycle (ingress bandwidth).
+    pub requests_per_cycle: u32,
+    /// DRAM channel bandwidth, bytes per NoC cycle.
+    pub channel_bytes_per_cycle: u32,
+    /// Route DMA through the LLC.  ESP's non-coherent DMA mode (the one the
+    /// paper's traffic generators use) goes directly to external memory, so
+    /// the default is `false`; the LLC still backs the coherence directory.
+    pub dma_through_llc: bool,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        Self {
+            dram_bytes: 64 << 20,
+            dram_latency: 100,
+            llc_bytes: 512 << 10,
+            llc_ways: 8,
+            llc_latency: 12,
+            line_bytes: 64,
+            requests_per_cycle: 1,
+            channel_bytes_per_cycle: 16,
+            dma_through_llc: false,
+        }
+    }
+}
+
+/// Accelerator-socket parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AccConfig {
+    /// Private local memory per accelerator, bytes.
+    pub plm_bytes: u32,
+    /// Maximum DMA burst, bytes (the paper's traffic generator: 4 KB).
+    pub max_burst_bytes: u32,
+    /// TLB entries.
+    pub tlb_entries: u16,
+    /// Page size for the accelerator's virtual buffer.
+    pub page_bytes: u32,
+    /// Instantiate the optional private L2 (enables fully-coherent mode
+    /// and coherence-based synchronization).
+    pub l2_enabled: bool,
+    /// L2 capacity, bytes.
+    pub l2_bytes: u32,
+    /// Datapath throughput: words processed per cycle once running.
+    pub dp_words_per_cycle: u32,
+}
+
+impl Default for AccConfig {
+    fn default() -> Self {
+        Self {
+            plm_bytes: 64 << 10,
+            max_burst_bytes: 4 << 10,
+            tlb_entries: 32,
+            page_bytes: 64 << 10,
+            l2_enabled: false,
+            l2_bytes: 32 << 10,
+            dp_words_per_cycle: 8,
+        }
+    }
+}
+
+/// Host (CPU tile) software-cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct HostConfig {
+    /// Cycles of software work to prepare one accelerator invocation
+    /// (driver call, argument marshalling) before the register writes.
+    pub invocation_overhead: u32,
+    /// Cycles to service one interrupt.
+    pub irq_overhead: u32,
+    /// Cycles between consecutive uncached register writes.
+    pub reg_write_gap: u32,
+    /// Register writes needed to configure one invocation.
+    pub reg_writes_per_invocation: u32,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        Self {
+            invocation_overhead: 200,
+            irq_overhead: 150,
+            reg_write_gap: 4,
+            reg_writes_per_invocation: 12,
+        }
+    }
+}
+
+/// Full SoC description.
+#[derive(Debug, Clone)]
+pub struct SocConfig {
+    /// Mesh columns.
+    pub width: u8,
+    /// Mesh rows.
+    pub height: u8,
+    /// Row-major tile map (`width * height` entries).
+    pub tiles: Vec<TileKind>,
+    /// NoC parameters.
+    pub noc: NocConfig,
+    /// Memory system.
+    pub mem: MemConfig,
+    /// Accelerator sockets.
+    pub acc: AccConfig,
+    /// Host cost model.
+    pub host: HostConfig,
+}
+
+impl SocConfig {
+    /// The paper's evaluation platform (Fig. 5): 3 rows x 4 columns, CPU +
+    /// Mem + IO + 9 accelerator tiles with two sockets each (up to 18
+    /// accelerators; the paper uses 17).
+    pub fn paper_3x4() -> Self {
+        let mut tiles = vec![TileKind::Acc { accs: 2 }; 12];
+        tiles[0] = TileKind::Cpu; // (0,0)
+        tiles[3] = TileKind::Mem; // (0,3)
+        tiles[8] = TileKind::Io; // (2,0)
+        Self {
+            width: 4,
+            height: 3,
+            tiles,
+            noc: NocConfig::default(),
+            mem: MemConfig::default(),
+            acc: AccConfig::default(),
+            host: HostConfig::default(),
+        }
+    }
+
+    /// A small 3x3 SoC (Fig. 1 of the paper): CPU, Mem, IO + 6 single-socket
+    /// accelerator tiles.
+    pub fn small_3x3() -> Self {
+        let mut tiles = vec![TileKind::Acc { accs: 1 }; 9];
+        tiles[0] = TileKind::Cpu;
+        tiles[2] = TileKind::Mem;
+        tiles[6] = TileKind::Io;
+        Self {
+            width: 3,
+            height: 3,
+            tiles,
+            noc: NocConfig::default(),
+            mem: MemConfig::default(),
+            acc: AccConfig::default(),
+            host: HostConfig::default(),
+        }
+    }
+
+    /// Load a JSON config file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let cfg = Self::from_json(&text).with_context(|| format!("parse {}", path.display()))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse a config from JSON text.  Missing sections fall back to the
+    /// defaults, so config files only need to state what they change.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut cfg = Self::paper_3x4();
+        if let Some(v) = j.get("width") {
+            cfg.width = v.as_u64()? as u8;
+        }
+        if let Some(v) = j.get("height") {
+            cfg.height = v.as_u64()? as u8;
+        }
+        if let Some(tiles) = j.get("tiles") {
+            cfg.tiles = tiles
+                .as_arr()?
+                .iter()
+                .map(|t| TileKind::from_code(t.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(n) = j.get("noc") {
+            set_u64(n, "bitwidth", |v| cfg.noc.bitwidth = v as u32)?;
+            set_u64(n, "queue_depth", |v| cfg.noc.queue_depth = v as usize)?;
+            set_u64(n, "max_mcast_dests", |v| cfg.noc.max_mcast_dests = v as usize)?;
+        }
+        if let Some(m) = j.get("mem") {
+            set_u64(m, "dram_bytes", |v| cfg.mem.dram_bytes = v)?;
+            set_u64(m, "dram_latency", |v| cfg.mem.dram_latency = v as u32)?;
+            set_u64(m, "llc_bytes", |v| cfg.mem.llc_bytes = v)?;
+            set_u64(m, "llc_ways", |v| cfg.mem.llc_ways = v as u16)?;
+            set_u64(m, "llc_latency", |v| cfg.mem.llc_latency = v as u32)?;
+            set_u64(m, "line_bytes", |v| cfg.mem.line_bytes = v as u32)?;
+            set_u64(m, "requests_per_cycle", |v| cfg.mem.requests_per_cycle = v as u32)?;
+            set_u64(m, "channel_bytes_per_cycle", |v| {
+                cfg.mem.channel_bytes_per_cycle = v as u32
+            })?;
+            if let Some(b) = m.get("dma_through_llc") {
+                cfg.mem.dma_through_llc = b.as_bool()?;
+            }
+        }
+        if let Some(a) = j.get("acc") {
+            set_u64(a, "plm_bytes", |v| cfg.acc.plm_bytes = v as u32)?;
+            set_u64(a, "max_burst_bytes", |v| cfg.acc.max_burst_bytes = v as u32)?;
+            set_u64(a, "tlb_entries", |v| cfg.acc.tlb_entries = v as u16)?;
+            set_u64(a, "page_bytes", |v| cfg.acc.page_bytes = v as u32)?;
+            set_u64(a, "l2_bytes", |v| cfg.acc.l2_bytes = v as u32)?;
+            set_u64(a, "dp_words_per_cycle", |v| cfg.acc.dp_words_per_cycle = v as u32)?;
+            if let Some(b) = a.get("l2_enabled") {
+                cfg.acc.l2_enabled = b.as_bool()?;
+            }
+        }
+        if let Some(h) = j.get("host") {
+            set_u64(h, "invocation_overhead", |v| cfg.host.invocation_overhead = v as u32)?;
+            set_u64(h, "irq_overhead", |v| cfg.host.irq_overhead = v as u32)?;
+            set_u64(h, "reg_write_gap", |v| cfg.host.reg_write_gap = v as u32)?;
+            set_u64(h, "reg_writes_per_invocation", |v| {
+                cfg.host.reg_writes_per_invocation = v as u32
+            })?;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to JSON (parseable by [`SocConfig::from_json`]).
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let obj = |pairs: Vec<(&str, Json)>| {
+            Json::Obj(
+                pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+            )
+        };
+        obj(vec![
+            ("width", Json::from(self.width as u64)),
+            ("height", Json::from(self.height as u64)),
+            ("tiles", Json::Arr(self.tiles.iter().map(|t| Json::from(t.code())).collect())),
+            (
+                "noc",
+                obj(vec![
+                    ("bitwidth", Json::from(self.noc.bitwidth as u64)),
+                    ("queue_depth", Json::from(self.noc.queue_depth as u64)),
+                    ("max_mcast_dests", Json::from(self.noc.max_mcast_dests as u64)),
+                ]),
+            ),
+            (
+                "mem",
+                obj(vec![
+                    ("dram_bytes", Json::from(self.mem.dram_bytes)),
+                    ("dram_latency", Json::from(self.mem.dram_latency as u64)),
+                    ("llc_bytes", Json::from(self.mem.llc_bytes)),
+                    ("llc_ways", Json::from(self.mem.llc_ways as u64)),
+                    ("llc_latency", Json::from(self.mem.llc_latency as u64)),
+                    ("line_bytes", Json::from(self.mem.line_bytes as u64)),
+                    ("requests_per_cycle", Json::from(self.mem.requests_per_cycle as u64)),
+                    (
+                        "channel_bytes_per_cycle",
+                        Json::from(self.mem.channel_bytes_per_cycle as u64),
+                    ),
+                    ("dma_through_llc", Json::from(self.mem.dma_through_llc)),
+                ]),
+            ),
+            (
+                "acc",
+                obj(vec![
+                    ("plm_bytes", Json::from(self.acc.plm_bytes as u64)),
+                    ("max_burst_bytes", Json::from(self.acc.max_burst_bytes as u64)),
+                    ("tlb_entries", Json::from(self.acc.tlb_entries as u64)),
+                    ("page_bytes", Json::from(self.acc.page_bytes as u64)),
+                    ("l2_enabled", Json::from(self.acc.l2_enabled)),
+                    ("l2_bytes", Json::from(self.acc.l2_bytes as u64)),
+                    ("dp_words_per_cycle", Json::from(self.acc.dp_words_per_cycle as u64)),
+                ]),
+            ),
+            (
+                "host",
+                obj(vec![
+                    ("invocation_overhead", Json::from(self.host.invocation_overhead as u64)),
+                    ("irq_overhead", Json::from(self.host.irq_overhead as u64)),
+                    ("reg_write_gap", Json::from(self.host.reg_write_gap as u64)),
+                    (
+                        "reg_writes_per_invocation",
+                        Json::from(self.host.reg_writes_per_invocation as u64),
+                    ),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+
+    /// Effective multicast destination bound: min(user cap, header capacity).
+    pub fn mcast_capacity(&self) -> usize {
+        self.noc.max_mcast_dests.min(header_dest_capacity(self.noc.bitwidth))
+    }
+
+    /// Payload bytes per flit.
+    pub fn flit_bytes(&self) -> u32 {
+        self.noc.bitwidth / 8
+    }
+
+    /// Coordinate of tile index `i` (row-major).
+    pub fn coord_of(&self, i: usize) -> Coord {
+        ((i / self.width as usize) as u8, (i % self.width as usize) as u8)
+    }
+
+    /// Tile index of coordinate `c`.
+    pub fn index_of(&self, c: Coord) -> usize {
+        c.0 as usize * self.width as usize + c.1 as usize
+    }
+
+    /// Coordinate of the (single) memory tile.
+    pub fn mem_tile(&self) -> Coord {
+        let i = self
+            .tiles
+            .iter()
+            .position(|t| matches!(t, TileKind::Mem))
+            .expect("validated config has a Mem tile");
+        self.coord_of(i)
+    }
+
+    /// Coordinate of the (single) CPU tile.
+    pub fn cpu_tile(&self) -> Coord {
+        let i = self
+            .tiles
+            .iter()
+            .position(|t| matches!(t, TileKind::Cpu))
+            .expect("validated config has a Cpu tile");
+        self.coord_of(i)
+    }
+
+    /// `(tile coord, slot)` of every accelerator socket, in a stable order.
+    pub fn acc_sockets(&self) -> Vec<(Coord, u8)> {
+        let mut v = Vec::new();
+        for (i, t) in self.tiles.iter().enumerate() {
+            if let TileKind::Acc { accs } = t {
+                for s in 0..*accs {
+                    v.push((self.coord_of(i), s));
+                }
+            }
+        }
+        v
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.width >= 2 && self.height >= 2, "mesh must be at least 2x2");
+        ensure!(self.width <= 8 && self.height <= 8, "coords are 3-bit: max 8x8");
+        ensure!(
+            self.tiles.len() == self.width as usize * self.height as usize,
+            "tile map has {} entries for a {}x{} mesh",
+            self.tiles.len(),
+            self.width,
+            self.height
+        );
+        let count = |f: fn(&TileKind) -> bool| self.tiles.iter().filter(|t| f(t)).count();
+        ensure!(count(|t| matches!(t, TileKind::Cpu)) == 1, "exactly one CPU tile");
+        ensure!(count(|t| matches!(t, TileKind::Mem)) == 1, "exactly one Mem tile");
+        ensure!(
+            matches!(self.noc.bitwidth, 64 | 128 | 256),
+            "NoC bitwidth must be 64, 128, or 256"
+        );
+        ensure!(self.noc.queue_depth >= 2, "queue depth >= 2 for wormhole progress");
+        ensure!(self.noc.max_mcast_dests <= MAX_DESTS, "multicast cap is {MAX_DESTS}");
+        for t in &self.tiles {
+            if let TileKind::Acc { accs } = t {
+                ensure!(*accs >= 1 && *accs <= 2, "1 or 2 accelerators per tile");
+            }
+        }
+        ensure!(self.acc.max_burst_bytes <= self.acc.plm_bytes / 2, "PLM must fit 2 bursts");
+        ensure!(self.mem.line_bytes.is_power_of_two(), "line size power of two");
+        ensure!(self.acc.page_bytes.is_power_of_two(), "page size power of two");
+        Ok(())
+    }
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        Self::paper_3x4()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_platform_validates() {
+        let c = SocConfig::paper_3x4();
+        c.validate().unwrap();
+        assert_eq!(c.acc_sockets().len(), 18); // paper uses 17 of them
+        assert_eq!(c.mcast_capacity(), 16);
+        assert_eq!(c.mem_tile(), (0, 3));
+        assert_eq!(c.cpu_tile(), (0, 0));
+    }
+
+    #[test]
+    fn small_platform_validates() {
+        let c = SocConfig::small_3x3();
+        c.validate().unwrap();
+        assert_eq!(c.acc_sockets().len(), 6);
+    }
+
+    #[test]
+    fn bitwidth_bounds_multicast() {
+        let mut c = SocConfig::paper_3x4();
+        c.noc.bitwidth = 64;
+        assert_eq!(c.mcast_capacity(), 5);
+        c.noc.bitwidth = 128;
+        assert_eq!(c.mcast_capacity(), 14);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = SocConfig::paper_3x4();
+        c.noc.bitwidth = 128;
+        c.mem.dma_through_llc = true;
+        c.acc.l2_enabled = true;
+        c.host.irq_overhead = 77;
+        let j = c.to_json();
+        let c2 = SocConfig::from_json(&j).unwrap();
+        assert_eq!(c2.width, c.width);
+        assert_eq!(c2.tiles, c.tiles);
+        assert_eq!(c2.noc.bitwidth, 128);
+        assert!(c2.mem.dma_through_llc);
+        assert!(c2.acc.l2_enabled);
+        assert_eq!(c2.host.irq_overhead, 77);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let c = SocConfig::from_json(r#"{"noc": {"bitwidth": 64}}"#).unwrap();
+        assert_eq!(c.noc.bitwidth, 64);
+        assert_eq!(c.width, 4, "rest defaults to the paper platform");
+    }
+
+    #[test]
+    fn tile_codes_roundtrip() {
+        for t in [
+            TileKind::Cpu,
+            TileKind::Mem,
+            TileKind::Io,
+            TileKind::Acc { accs: 1 },
+            TileKind::Acc { accs: 2 },
+            TileKind::Empty,
+        ] {
+            assert_eq!(TileKind::from_code(t.code()).unwrap(), t);
+        }
+        assert!(TileKind::from_code("bogus").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = SocConfig::paper_3x4();
+        c.tiles[5] = TileKind::Cpu; // second CPU
+        assert!(c.validate().is_err());
+
+        let mut c = SocConfig::paper_3x4();
+        c.noc.bitwidth = 96;
+        assert!(c.validate().is_err());
+
+        let mut c = SocConfig::paper_3x4();
+        c.tiles.pop();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn coord_index_roundtrip() {
+        let c = SocConfig::paper_3x4();
+        for i in 0..12 {
+            assert_eq!(c.index_of(c.coord_of(i)), i);
+        }
+    }
+}

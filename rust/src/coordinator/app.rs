@@ -1,0 +1,198 @@
+//! Application description: dataflow graphs of accelerator invocations and
+//! their lowering to host scripts + accelerator programs.
+//!
+//! An [`App`] is a sequence of *phases*; each phase starts a set of
+//! accelerator invocations (host setup is serialized on the CPU, execution
+//! is concurrent) and then waits for all of their IRQs.  Data dependencies
+//! *within* a phase are expressed through P2P/multicast pull edges — this
+//! is exactly how the paper's multicast experiment runs its producer and
+//! consumers together, synchronized by the pull protocol rather than the
+//! host.
+
+use anyhow::{ensure, Result};
+
+use crate::accel::{traffic_gen, DpCall, Instr};
+use crate::socket::{make_reg, pack_src, regs::regno};
+use crate::tile::HostOp;
+
+use super::soc::Soc;
+
+/// The program an invocation runs.
+#[derive(Debug, Clone)]
+pub enum ProgramKind {
+    /// Double-buffered traffic-generator stream.
+    Tgen,
+    /// Single-buffered traffic generator (ablation).
+    TgenSingle,
+    /// Explicit instruction sequence.
+    Custom(Vec<Instr>),
+}
+
+/// One accelerator invocation.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    /// Global accelerator id.
+    pub acc: u16,
+    /// Program to run.
+    pub program: ProgramKind,
+    /// ARG registers (program-specific meaning).
+    pub args: [u64; 8],
+    /// Source-LUT entries: `(lut index, producer accelerator id)`.
+    pub srcs: Vec<(u16, u16)>,
+    /// Datapath descriptors (for `Custom` programs with `RunDp`).
+    pub dp_calls: Vec<DpCall>,
+}
+
+impl Invocation {
+    /// A traffic-generator invocation.
+    pub fn tgen(acc: u16, args: traffic_gen::TgenArgs) -> Self {
+        Self { acc, program: ProgramKind::Tgen, args: args.pack(), srcs: Vec::new(), dp_calls: Vec::new() }
+    }
+
+    /// Add a source-LUT entry (consumer side of a P2P edge).
+    pub fn with_src(mut self, lut_idx: u16, producer: u16) -> Self {
+        self.srcs.push((lut_idx, producer));
+        self
+    }
+}
+
+/// A phase: invocations started together, joined on their IRQs.
+#[derive(Debug, Clone, Default)]
+pub struct Phase {
+    /// Invocations in this phase.
+    pub invocations: Vec<Invocation>,
+}
+
+/// A multi-phase application.
+#[derive(Debug, Clone, Default)]
+pub struct App {
+    /// Phases, executed in order with an IRQ barrier between them.
+    pub phases: Vec<Phase>,
+}
+
+impl App {
+    /// Empty app.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a phase.
+    pub fn phase(mut self, invocations: Vec<Invocation>) -> Self {
+        self.phases.push(Phase { invocations });
+        self
+    }
+
+    /// Validate against a SoC and install everything: accelerator programs
+    /// and datapath tables via the setup backdoor, then the host script
+    /// (register writes, starts, IRQ waits) that drives the run.
+    pub fn launch(&self, soc: &mut Soc) -> Result<()> {
+        let host = soc.cfg.host;
+        let mcast_cap = soc.cfg.mcast_capacity();
+        let mut script: Vec<HostOp> = Vec::new();
+        for phase in &self.phases {
+            ensure!(!phase.invocations.is_empty(), "empty phase");
+            let mut irqs = Vec::new();
+            for inv in &phase.invocations {
+                ensure!((inv.acc as usize) < soc.acc_count(), "unknown accelerator {}", inv.acc);
+                // Multicast fan-out bounded by the NoC header capacity.
+                let wr_user = inv.args[traffic_gen::args::WR_USER];
+                ensure!(
+                    wr_user as usize <= mcast_cap.max(1),
+                    "write user {} exceeds multicast capacity {}",
+                    wr_user,
+                    mcast_cap
+                );
+                let program = match &inv.program {
+                    ProgramKind::Tgen => traffic_gen::program(),
+                    ProgramKind::TgenSingle => traffic_gen::program_single_buffered(),
+                    ProgramKind::Custom(p) => p.clone(),
+                };
+                soc.setup_acc(inv.acc, program, inv.dp_calls.clone());
+                let (tile, slot) = soc.acc_location(inv.acc);
+                // Driver overhead, then the uncached register writes.
+                script.push(HostOp::Delay(host.invocation_overhead as u64));
+                for (i, &a) in inv.args.iter().enumerate() {
+                    script.push(HostOp::WriteReg {
+                        tile,
+                        reg: make_reg(slot, regno::ARG0 + i as u16),
+                        val: a,
+                    });
+                }
+                for &(idx, producer) in &inv.srcs {
+                    ensure!(idx >= 1 && idx <= 15, "source LUT index {idx} out of range");
+                    let (pc, ps) = soc.acc_location(producer);
+                    script.push(HostOp::WriteReg {
+                        tile,
+                        reg: make_reg(slot, regno::SRC_LUT + idx),
+                        val: pack_src(pc, ps),
+                    });
+                }
+                script.push(HostOp::WriteReg { tile, reg: make_reg(slot, regno::CMD), val: 1 });
+                irqs.push(inv.acc);
+            }
+            script.push(HostOp::WaitIrqs(irqs));
+        }
+        soc.push_host_script(script);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SocConfig;
+
+    #[test]
+    fn launch_builds_script_and_programs() {
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        let app = App::new().phase(vec![Invocation::tgen(
+            0,
+            traffic_gen::TgenArgs {
+                total_bytes: 4096,
+                burst_bytes: 4096,
+                rd_user: 0,
+                wr_user: 0,
+                vaddr_in: 0,
+                vaddr_out: 8192,
+            },
+        )]);
+        app.launch(&mut soc).unwrap();
+        assert!(!soc.cpu_mut().done(), "script pending");
+    }
+
+    #[test]
+    fn rejects_unknown_accelerator() {
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        let app = App::new().phase(vec![Invocation::tgen(
+            99,
+            traffic_gen::TgenArgs {
+                total_bytes: 4096,
+                burst_bytes: 4096,
+                rd_user: 0,
+                wr_user: 0,
+                vaddr_in: 0,
+                vaddr_out: 0,
+            },
+        )]);
+        assert!(app.launch(&mut soc).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_multicast() {
+        let mut cfg = SocConfig::paper_3x4();
+        cfg.noc.bitwidth = 64; // capacity 5
+        let mut soc = Soc::new(cfg).unwrap();
+        let app = App::new().phase(vec![Invocation::tgen(
+            0,
+            traffic_gen::TgenArgs {
+                total_bytes: 4096,
+                burst_bytes: 4096,
+                rd_user: 0,
+                wr_user: 8, // 8 > 5
+                vaddr_in: 0,
+                vaddr_out: 0,
+            },
+        )]);
+        assert!(app.launch(&mut soc).is_err());
+    }
+}

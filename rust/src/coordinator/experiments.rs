@@ -1,0 +1,237 @@
+//! Reusable experiment drivers for the paper's evaluation (shared by
+//! `examples/` and `rust/benches/`).
+//!
+//! The Fig. 6 experiment: a producer traffic-generator creates data
+//! consumed by N consumer traffic-generators, comparing **multicast P2P**
+//! against the **shared-memory baseline** (producer writes to main memory,
+//! then the N consumers read it back), sweeping N and the data size.  Both
+//! variants verify end-to-end data integrity: every consumer's output
+//! region must equal the producer's input.
+
+use anyhow::{ensure, Result};
+
+use crate::accel::traffic_gen::TgenArgs;
+use crate::config::SocConfig;
+use crate::coordinator::{App, Invocation, ProgramKind, Soc};
+
+/// DRAM layout for the Fig. 6 workload.
+pub mod layout {
+    /// Producer input region.
+    pub const IN: u64 = 0x0010_0000;
+    /// Shared-memory staging region (baseline only).
+    pub const MID: u64 = 0x0080_0000;
+    /// Consumer output regions, 2 MiB apart.
+    pub const OUT_BASE: u64 = 0x0100_0000;
+    /// Stride between consumer outputs.
+    pub const OUT_STRIDE: u64 = 0x0020_0000;
+
+    /// Output region of consumer `i`.
+    pub fn out(i: usize) -> u64 {
+        OUT_BASE + i as u64 * OUT_STRIDE
+    }
+}
+
+/// One measured point of the Fig. 6 sweep.
+#[derive(Debug, Clone)]
+pub struct Fig6Point {
+    /// Number of consumers (1 = unicast P2P, no multicast).
+    pub consumers: usize,
+    /// Bytes produced/consumed.
+    pub bytes: u32,
+    /// Cycles for the shared-memory baseline.
+    pub baseline_cycles: u64,
+    /// Cycles for the multicast-P2P version.
+    pub multicast_cycles: u64,
+}
+
+impl Fig6Point {
+    /// Speedup of multicast over the baseline (the paper's y-axis; its
+    /// "72% speedup" == 1.72x here).
+    pub fn speedup(&self) -> f64 {
+        self.baseline_cycles as f64 / self.multicast_cycles as f64
+    }
+}
+
+/// Options for the Fig. 6 runner.
+#[derive(Debug, Clone)]
+pub struct Fig6Options {
+    /// SoC platform (defaults to the paper's 3x4).
+    pub soc: SocConfig,
+    /// Burst size (the paper's traffic generator: 4 KB).
+    pub burst_bytes: u32,
+    /// Use the single-buffered traffic generator (ablation).
+    pub single_buffered: bool,
+    /// Invoke baseline consumers one at a time (start, wait IRQ, next)
+    /// instead of concurrently.  This models a host whose driver
+    /// serializes invocations (the paper's Linux-on-CVA6 software stack);
+    /// with it the speedup *grows* with the consumer count as in Fig. 6,
+    /// while a fully concurrent baseline flattens the trend — see
+    /// EXPERIMENTS.md for the comparison.
+    pub baseline_sequential: bool,
+    /// Check data integrity after each run.
+    pub verify: bool,
+    /// Simulation cycle budget per run.
+    pub max_cycles: u64,
+}
+
+impl Default for Fig6Options {
+    fn default() -> Self {
+        Self {
+            soc: SocConfig::paper_3x4(),
+            burst_bytes: 4 << 10,
+            single_buffered: false,
+            baseline_sequential: true,
+            verify: true,
+            max_cycles: 500_000_000,
+        }
+    }
+}
+
+fn tgen_program(opts: &Fig6Options) -> ProgramKind {
+    if opts.single_buffered {
+        ProgramKind::TgenSingle
+    } else {
+        ProgramKind::Tgen
+    }
+}
+
+fn fill_input(soc: &mut Soc, bytes: u32) -> Vec<u8> {
+    // Deterministic, position-dependent pattern (catches reordering bugs).
+    let data: Vec<u8> =
+        (0..bytes as u64).map(|i| (i.wrapping_mul(0x9E37_79B9) >> 16) as u8).collect();
+    soc.write_mem(layout::IN, &data);
+    data
+}
+
+fn verify_outputs(soc: &mut Soc, consumers: usize, data: &[u8]) -> Result<()> {
+    for c in 0..consumers {
+        let got = soc.read_mem(layout::out(c), data.len());
+        ensure!(
+            got == data,
+            "consumer {c}: output mismatch (first divergence at byte {:?})",
+            got.iter().zip(data).position(|(a, b)| a != b)
+        );
+    }
+    Ok(())
+}
+
+/// Run the shared-memory baseline: producer streams IN -> MID through
+/// memory; after its IRQ the consumers stream MID -> OUT_i.
+pub fn run_baseline(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<u64> {
+    let mut soc = Soc::new(opts.soc.clone())?;
+    ensure!(consumers + 1 <= soc.acc_count(), "not enough accelerator sockets");
+    let data = fill_input(&mut soc, bytes);
+    let mut producer = Invocation::tgen(
+        0,
+        TgenArgs {
+            total_bytes: bytes,
+            burst_bytes: opts.burst_bytes,
+            rd_user: 0,
+            wr_user: 0,
+            vaddr_in: layout::IN,
+            vaddr_out: layout::MID,
+        },
+    );
+    producer.program = tgen_program(opts);
+    let mut consumer_invs = Vec::new();
+    for c in 0..consumers {
+        let mut inv = Invocation::tgen(
+            (c + 1) as u16,
+            TgenArgs {
+                total_bytes: bytes,
+                burst_bytes: opts.burst_bytes,
+                rd_user: 0,
+                wr_user: 0,
+                vaddr_in: layout::MID,
+                vaddr_out: layout::out(c),
+            },
+        );
+        inv.program = tgen_program(opts);
+        consumer_invs.push(inv);
+    }
+    let mut app = App::new().phase(vec![producer]);
+    if opts.baseline_sequential {
+        for inv in consumer_invs {
+            app = app.phase(vec![inv]);
+        }
+    } else {
+        app = app.phase(consumer_invs);
+    }
+    app.launch(&mut soc)?;
+    let cycles = soc.run(opts.max_cycles)?;
+    if opts.verify {
+        verify_outputs(&mut soc, consumers, &data)?;
+    }
+    Ok(cycles)
+}
+
+/// Run the multicast-P2P version: producer reads IN from memory and
+/// multicasts to the N consumers (pull-based), which write OUT_i; all in
+/// one phase, synchronized by the P2P protocol.
+pub fn run_multicast(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<u64> {
+    let mut soc = Soc::new(opts.soc.clone())?;
+    ensure!(consumers + 1 <= soc.acc_count(), "not enough accelerator sockets");
+    ensure!(
+        consumers <= soc.cfg.mcast_capacity(),
+        "{} consumers exceed multicast capacity {}",
+        consumers,
+        soc.cfg.mcast_capacity()
+    );
+    let data = fill_input(&mut soc, bytes);
+    let mut invocations = Vec::new();
+    let mut producer = Invocation::tgen(
+        0,
+        TgenArgs {
+            total_bytes: bytes,
+            burst_bytes: opts.burst_bytes,
+            rd_user: 0,
+            wr_user: consumers as u16, // 1 = unicast P2P, n >= 2 = multicast
+            vaddr_in: layout::IN,
+            vaddr_out: 0, // P2P writes don't touch memory
+        },
+    );
+    producer.program = tgen_program(opts);
+    invocations.push(producer);
+    for c in 0..consumers {
+        let mut inv = Invocation::tgen(
+            (c + 1) as u16,
+            TgenArgs {
+                total_bytes: bytes,
+                burst_bytes: opts.burst_bytes,
+                rd_user: 1, // LUT entry 1 -> producer
+                wr_user: 0,
+                vaddr_in: 0,
+                vaddr_out: layout::out(c),
+            },
+        )
+        .with_src(1, 0);
+        inv.program = tgen_program(opts);
+        invocations.push(inv);
+    }
+    App::new().phase(invocations).launch(&mut soc)?;
+    let cycles = soc.run(opts.max_cycles)?;
+    if opts.verify {
+        verify_outputs(&mut soc, consumers, &data)?;
+    }
+    Ok(cycles)
+}
+
+/// Measure one Fig. 6 point (baseline + multicast).
+pub fn run_fig6_point(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<Fig6Point> {
+    Ok(Fig6Point {
+        consumers,
+        bytes,
+        baseline_cycles: run_baseline(consumers, bytes, opts)?,
+        multicast_cycles: run_multicast(consumers, bytes, opts)?,
+    })
+}
+
+/// The paper's sweep axes.
+pub fn paper_consumer_counts() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16]
+}
+
+/// Data sizes from one burst (4 KB) to the 1 MB plateau.
+pub fn paper_data_sizes() -> Vec<u32> {
+    vec![4 << 10, 16 << 10, 64 << 10, 256 << 10, 1 << 20]
+}

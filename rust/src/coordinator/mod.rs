@@ -1,0 +1,12 @@
+//! The coordinator: SoC assembly, the cycle loop, application launching,
+//! statistics, and the paper's experiment drivers.
+
+pub mod app;
+pub mod experiments;
+pub mod soc;
+pub mod stats;
+pub mod workloads;
+
+pub use app::{App, Invocation, Phase, ProgramKind};
+pub use soc::Soc;
+pub use stats::Report;

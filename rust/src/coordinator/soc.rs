@@ -1,0 +1,195 @@
+//! SoC assembly and the global simulation loop.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::accel::{AccCore, DpCall};
+use crate::config::{SocConfig, TileKind};
+use crate::noc::{Coord, MeshParams, Noc};
+use crate::socket::Socket;
+use crate::tile::{AccTile, CpuTile, HostOp, IoTile, MemTile, Tile};
+
+use super::stats::Report;
+
+/// The simulated SoC: tiles + multi-plane NoC + the cycle loop.
+pub struct Soc {
+    /// Configuration this SoC was built from.
+    pub cfg: SocConfig,
+    /// The six-plane NoC.
+    pub noc: Noc,
+    /// Tiles, row-major.
+    pub tiles: Vec<Tile>,
+    /// Current cycle.
+    pub now: u64,
+    /// Accelerator id -> (tile index, slot).
+    acc_index: Vec<(usize, u8)>,
+}
+
+impl Soc {
+    /// Build an idle SoC from a validated configuration.
+    pub fn new(cfg: SocConfig) -> Result<Self> {
+        cfg.validate()?;
+        let noc = Noc::new(MeshParams {
+            width: cfg.width,
+            height: cfg.height,
+            flit_bytes: cfg.flit_bytes(),
+            queue_depth: cfg.noc.queue_depth,
+        });
+        let mut tiles = Vec::with_capacity(cfg.tiles.len());
+        let mut acc_index = Vec::new();
+        let mut next_acc: u16 = 0;
+        for (i, kind) in cfg.tiles.iter().enumerate() {
+            let coord = cfg.coord_of(i);
+            tiles.push(match kind {
+                TileKind::Cpu => {
+                    Tile::Cpu(CpuTile::new(coord, cfg.mem_tile(), cfg.host, cfg.mem.line_bytes))
+                }
+                TileKind::Mem => Tile::Mem(MemTile::new(coord, cfg.mem)),
+                TileKind::Io => Tile::Io(IoTile::new(coord)),
+                TileKind::Acc { accs } => {
+                    let t = AccTile::new(coord, *accs, next_acc, &cfg);
+                    for s in 0..*accs {
+                        acc_index.push((i, s));
+                    }
+                    next_acc += *accs as u16;
+                    Tile::Acc(t)
+                }
+                TileKind::Empty => Tile::Empty,
+            });
+        }
+        Ok(Self { cfg, noc, tiles, now: 0, acc_index })
+    }
+
+    /// Number of accelerator sockets.
+    pub fn acc_count(&self) -> usize {
+        self.acc_index.len()
+    }
+
+    /// `(tile coord, slot)` of accelerator `acc`.
+    pub fn acc_location(&self, acc: u16) -> (Coord, u8) {
+        let (t, s) = self.acc_index[acc as usize];
+        (self.cfg.coord_of(t), s)
+    }
+
+    /// Mutable access to the memory tile.
+    pub fn mem_mut(&mut self) -> &mut MemTile {
+        let i = self.cfg.index_of(self.cfg.mem_tile());
+        match &mut self.tiles[i] {
+            Tile::Mem(m) => m,
+            _ => unreachable!("validated config"),
+        }
+    }
+
+    /// Mutable access to the CPU tile.
+    pub fn cpu_mut(&mut self) -> &mut CpuTile {
+        let i = self.cfg.index_of(self.cfg.cpu_tile());
+        match &mut self.tiles[i] {
+            Tile::Cpu(c) => c,
+            _ => unreachable!("validated config"),
+        }
+    }
+
+    /// Mutable access to accelerator `acc`'s socket, core and PLM.
+    pub fn acc_mut(&mut self, acc: u16) -> (&mut Socket, &mut AccCore, &mut Vec<u8>) {
+        let (t, s) = self.acc_index[acc as usize];
+        match &mut self.tiles[t] {
+            Tile::Acc(a) => {
+                let s = s as usize;
+                // Split borrows across the parallel vectors.
+                (&mut a.sockets[s], &mut a.cores[s], &mut a.plms[s])
+            }
+            _ => unreachable!("acc_index points at Acc tiles"),
+        }
+    }
+
+    /// Backdoor: load an accelerator program + datapath descriptors and map
+    /// its virtual buffer linearly over the whole DRAM (identity mapping;
+    /// scattered mappings are exercised at the TLB unit level).
+    pub fn setup_acc(
+        &mut self,
+        acc: u16,
+        program: Vec<crate::accel::Instr>,
+        dp_calls: Vec<DpCall>,
+    ) {
+        let dram = self.cfg.mem.dram_bytes;
+        let (socket, core, _) = self.acc_mut(acc);
+        socket.tlb.map_linear(0, dram);
+        core.load_program(program);
+        core.dp_calls = dp_calls;
+    }
+
+    /// Backdoor: write initial data into DRAM.
+    pub fn write_mem(&mut self, addr: u64, data: &[u8]) {
+        self.mem_mut().write_backdoor(addr, data);
+    }
+
+    /// Backdoor: read DRAM.
+    pub fn read_mem(&mut self, addr: u64, len: usize) -> Vec<u8> {
+        self.mem_mut().read_backdoor(addr, len).to_vec()
+    }
+
+    /// Append host operations to the CPU script.
+    pub fn push_host_script(&mut self, ops: Vec<HostOp>) {
+        self.cpu_mut().push_script(ops);
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self) {
+        let now = self.now;
+        for t in &mut self.tiles {
+            t.tick(now, &mut self.noc);
+        }
+        self.noc.tick(now);
+        self.now += 1;
+    }
+
+    /// Everything drained and the host script finished?
+    pub fn idle(&self) -> bool {
+        self.noc.is_idle() && self.tiles.iter().all(|t| t.idle())
+    }
+
+    /// Run until idle; errors out after `max_cycles`.
+    pub fn run(&mut self, max_cycles: u64) -> Result<u64> {
+        let start = self.now;
+        // Let the first ops enter the system before testing idleness.
+        self.tick();
+        while !self.idle() {
+            self.tick();
+            ensure!(
+                self.now - start < max_cycles,
+                "SoC did not quiesce within {max_cycles} cycles (deadlock or runaway)"
+            );
+        }
+        Ok(self.now - start)
+    }
+
+    /// Collect a statistics report.
+    pub fn report(&mut self) -> Report {
+        let mut r = Report { cycles: self.now, planes: self.noc.stats(), ..Report::default() };
+        for t in &self.tiles {
+            match t {
+                Tile::Mem(m) => r.mem = m.stats.clone(),
+                Tile::Cpu(c) => r.cpu = c.stats.clone(),
+                Tile::Acc(a) => {
+                    for s in &a.sockets {
+                        r.sockets.push((s.acc_id, s.stats.clone()));
+                    }
+                    r.invocations.extend(a.invocation_log.iter().copied());
+                }
+                _ => {}
+            }
+        }
+        r.invocations.sort();
+        r.sockets.sort_by_key(|(id, _)| *id);
+        r
+    }
+
+    /// Locate an accelerator id from a `(coord, slot)` pair.
+    pub fn acc_at(&self, coord: Coord, slot: u8) -> Result<u16> {
+        let ti = self.cfg.index_of(coord);
+        self.acc_index
+            .iter()
+            .position(|&(t, s)| t == ti && s == slot)
+            .map(|i| i as u16)
+            .ok_or_else(|| anyhow!("no accelerator at {coord:?} slot {slot}"))
+    }
+}

@@ -1,0 +1,112 @@
+//! Run statistics: one [`Report`] per simulation, printable as a table or
+//! serializable for the benchmark harnesses.
+
+use crate::noc::{MeshStats, NUM_PLANES};
+use crate::socket::SocketStats;
+use crate::tile::cpu::CpuStats;
+use crate::tile::MemStats;
+
+/// Aggregated statistics of one run.
+#[derive(Debug, Default, Clone)]
+pub struct Report {
+    /// Final cycle count.
+    pub cycles: u64,
+    /// Per-plane NoC statistics.
+    pub planes: [MeshStats; NUM_PLANES],
+    /// Memory-tile statistics.
+    pub mem: MemStats,
+    /// Host statistics.
+    pub cpu: CpuStats,
+    /// Per-accelerator socket statistics.
+    pub sockets: Vec<(u16, SocketStats)>,
+    /// Invocation spans `(acc, start, end)`.
+    pub invocations: Vec<(u16, u64, u64)>,
+}
+
+impl Report {
+    /// Total flit-hops across planes.
+    pub fn total_flit_hops(&self) -> u64 {
+        self.planes.iter().map(|p| p.flit_hops).sum()
+    }
+
+    /// Sum of DMA bytes moved (read + write).
+    pub fn dma_bytes(&self) -> u64 {
+        self.mem.read_bytes + self.mem.write_bytes
+    }
+
+    /// Sum of P2P bytes delivered.
+    pub fn p2p_bytes(&self) -> u64 {
+        self.sockets.iter().map(|(_, s)| s.p2p_write_bytes).sum()
+    }
+
+    /// Latency of accelerator `acc`'s first invocation, if logged.
+    pub fn invocation_latency(&self, acc: u16) -> Option<u64> {
+        self.invocations.iter().find(|(a, _, _)| *a == acc).map(|(_, s, e)| e - s)
+    }
+
+    /// Render a human-readable summary.
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "cycles: {}", self.cycles);
+        let names = ["coh-req", "coh-fwd", "coh-rsp", "dma-req", "dma-rsp", "misc"];
+        let _ = writeln!(s, "{:8} {:>12} {:>10} {:>10}", "plane", "flit-hops", "delivered", "busy");
+        for (n, p) in names.iter().zip(&self.planes) {
+            let _ = writeln!(
+                s,
+                "{:8} {:>12} {:>10} {:>10}",
+                n, p.flit_hops, p.delivered, p.busy_cycles
+            );
+        }
+        let _ = writeln!(
+            s,
+            "mem: {} reads / {} writes, {} B read, {} B written, llc {}h/{}m, dram busy {}",
+            self.mem.reads,
+            self.mem.writes,
+            self.mem.read_bytes,
+            self.mem.write_bytes,
+            self.mem.llc_hits,
+            self.mem.llc_misses,
+            self.mem.dram_busy_cycles
+        );
+        let _ = writeln!(
+            s,
+            "host: {} reg writes, {} irqs, done at {:?}",
+            self.cpu.reg_writes, self.cpu.irqs, self.cpu.done_at
+        );
+        for (acc, st) in &self.sockets {
+            if st.bursts == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                s,
+                "acc{:<3} bursts {:>5}  dma rd/wr {:>9}/{:>9} B  p2p rd/wr {:>9}/{:>9} B",
+                acc, st.bursts, st.dma_read_bytes, st.dma_write_bytes, st.p2p_read_bytes,
+                st.p2p_write_bytes
+            );
+        }
+        for (acc, start, end) in &self.invocations {
+            let _ = writeln!(s, "inv acc{:<3} [{start:>8} .. {end:>8}]  {:>8} cy", acc, end - start);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_and_renders() {
+        let mut r = Report { cycles: 100, ..Report::default() };
+        r.planes[3].flit_hops = 40;
+        r.planes[4].flit_hops = 2;
+        r.invocations.push((0, 10, 60));
+        assert_eq!(r.total_flit_hops(), 42);
+        assert_eq!(r.invocation_latency(0), Some(50));
+        assert_eq!(r.invocation_latency(9), None);
+        let t = r.table();
+        assert!(t.contains("cycles: 100"));
+        assert!(t.contains("dma-req"));
+    }
+}

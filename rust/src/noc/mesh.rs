@@ -1,0 +1,633 @@
+//! A single physical NoC plane: 2D mesh of routers + tile inject/eject
+//! boundaries, advanced one cycle at a time.
+//!
+//! The tick is plan/apply: first every router (immutable pass) decides which
+//! input ports win which output ports this cycle — including multicast forks
+//! that claim several output ports at once — then all planned moves commit.
+//! Flits are stamped with their arrival cycle so a flit traverses at most
+//! one router per cycle, giving the ESP NoC's one-cycle-per-hop (lookahead)
+//! timing.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::flit::{Coord, Dir, Flit, Message};
+#[cfg(test)]
+use super::flit::DestList;
+use super::router::{Move, Router, StampedFlit};
+use super::routing::{neighbor, partition_dests};
+
+/// Static parameters of one plane.
+#[derive(Debug, Clone, Copy)]
+pub struct MeshParams {
+    /// Mesh width (columns).
+    pub width: u8,
+    /// Mesh height (rows).
+    pub height: u8,
+    /// Payload bytes carried per body flit (= NoC bitwidth / 8).
+    pub flit_bytes: u32,
+    /// Input-queue depth per router port, in flits.
+    pub queue_depth: usize,
+}
+
+impl MeshParams {
+    fn n(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+}
+
+/// Packetizer state for one tile's injection port.
+#[derive(Debug, Default)]
+struct Inject {
+    /// Messages waiting to be serialized onto the local input port.
+    queue: VecDeque<Arc<Message>>,
+    /// (message, next flit index, total flits) currently streaming.
+    cur: Option<(Arc<Message>, u32, u32)>,
+}
+
+/// Per-plane statistics.
+#[derive(Debug, Default, Clone)]
+pub struct MeshStats {
+    /// Flit-hops: one per flit per output port traversal.
+    pub flit_hops: u64,
+    /// Messages fully delivered (tail ejected) to a tile.
+    pub delivered: u64,
+    /// Flits injected from tiles.
+    pub injected: u64,
+    /// Cycles in which at least one flit moved.
+    pub busy_cycles: u64,
+}
+
+/// One NoC plane.
+pub struct Mesh {
+    p: MeshParams,
+    routers: Vec<Router>,
+    inject: Vec<Inject>,
+    eject: Vec<VecDeque<Arc<Message>>>,
+    /// Scratch: planned pushes into each router input port this cycle.
+    planned: Vec<[u8; 5]>,
+    /// Items in flight: flits in router/branch queues + messages waiting
+    /// to inject.  O(1) idle detection and an early-out for idle planes.
+    work: u64,
+    /// Reused plan scratch (avoids two allocations per active cycle).
+    scratch_drains: Vec<(usize, usize)>,
+    scratch_moves: Vec<Move>,
+    /// Messages queued or streaming at injection ports.
+    inject_msgs: u64,
+    /// Stats for this plane.
+    pub stats: MeshStats,
+}
+
+impl Mesh {
+    /// Build an idle mesh.
+    pub fn new(p: MeshParams) -> Self {
+        let n = p.n();
+        let mut routers = Vec::with_capacity(n);
+        for y in 0..p.height {
+            for x in 0..p.width {
+                routers.push(Router::new((y, x)));
+            }
+        }
+        Self {
+            p,
+            routers,
+            inject: (0..n).map(|_| Inject::default()).collect(),
+            eject: (0..n).map(|_| VecDeque::new()).collect(),
+            planned: vec![[0; 5]; n],
+            work: 0,
+            scratch_drains: Vec::new(),
+            scratch_moves: Vec::new(),
+            inject_msgs: 0,
+            stats: MeshStats::default(),
+        }
+    }
+
+    /// Plane parameters.
+    pub fn params(&self) -> &MeshParams {
+        &self.p
+    }
+
+    #[inline]
+    fn idx(&self, c: Coord) -> usize {
+        c.0 as usize * self.p.width as usize + c.1 as usize
+    }
+
+    /// Queue a message for injection at `tile`.  Protocol layers self-limit
+    /// (consumption assumption); the injection queue itself is unbounded but
+    /// serializes at one flit per cycle.
+    pub fn send(&mut self, tile: Coord, msg: Message) {
+        debug_assert!(!msg.dests.is_empty(), "message with no destinations");
+        let i = self.idx(tile);
+        self.inject[i].queue.push_back(Arc::new(msg));
+        self.work += 1;
+        self.inject_msgs += 1;
+    }
+
+    /// Pop the next fully-delivered message at `tile`, if any.
+    pub fn recv(&mut self, tile: Coord) -> Option<Arc<Message>> {
+        let i = self.idx(tile);
+        self.eject[i].pop_front()
+    }
+
+    /// Peek whether `tile` has a delivered message waiting.
+    pub fn has_rx(&self, tile: Coord) -> bool {
+        !self.eject[self.idx(tile)].is_empty()
+    }
+
+    /// True when no flit or pending injection remains anywhere (O(1)).
+    pub fn is_idle(&self) -> bool {
+        self.work == 0
+    }
+
+    /// Per-router forwarded-flit counters (for utilization reports).
+    pub fn router_loads(&self) -> Vec<(Coord, u64)> {
+        self.routers.iter().map(|r| (r.coord, r.flits_forwarded)).collect()
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self, now: u64) {
+        if self.work == 0 {
+            return; // idle plane: nothing can move
+        }
+        self.planned.iter_mut().for_each(|p| *p = [0; 5]);
+        let mut moved = false;
+
+        // --- Injection: stream one flit per tile into the local input port.
+        if self.inject_msgs > 0 {
+            for i in 0..self.routers.len() {
+                let depth_ok =
+                    self.routers[i].inq[Dir::Local.idx()].len() < self.p.queue_depth;
+                if !depth_ok {
+                    continue;
+                }
+                let inj = &mut self.inject[i];
+                if inj.cur.is_none() {
+                    if let Some(msg) = inj.queue.pop_front() {
+                        let total = msg.flit_count(self.p.flit_bytes);
+                        inj.cur = Some((msg, 0, total));
+                    }
+                }
+                if let Some((msg, next, total)) = inj.cur.take() {
+                    let flit = Flit::of_message(&msg, next, total);
+                    self.routers[i].inq[Dir::Local.idx()]
+                        .push_back(StampedFlit { flit, arrived: now });
+                    self.stats.injected += 1;
+                    self.work += 1; // flit enters the network
+                    self.routers[i].occupancy += 1;
+                    moved = true;
+                    if next + 1 < total {
+                        inj.cur = Some((msg, next + 1, total));
+                    } else {
+                        self.work -= 1; // message fully streamed out of inject
+                        self.inject_msgs -= 1;
+                    }
+                }
+            }
+        }
+
+        // --- Plan: per router — first drain replication buffers toward
+        // their output ports, then arbitrate input ports.
+        let mut drains = std::mem::take(&mut self.scratch_drains);
+        let mut moves = std::mem::take(&mut self.scratch_moves);
+        drains.clear();
+        moves.clear();
+        for r in 0..self.routers.len() {
+            let router = &self.routers[r];
+            if router.occupancy == 0 {
+                continue; // nothing queued at this router
+            }
+            let mut out_busy = [false; 5];
+            // Output-port allocations claimed by heads earlier in this
+            // cycle's arbitration (forks don't occupy the link yet, so
+            // out_busy alone cannot serialize them).
+            let mut claimed = [false; 5];
+            // 1. Replication-buffer drains (forked packets): one flit per
+            //    output port per cycle, subject to downstream space.
+            for d in Dir::ALL {
+                let o = d.idx();
+                let Some(sf) = router.branch_q[o].front() else { continue };
+                if sf.arrived >= now {
+                    continue;
+                }
+                if d != Dir::Local {
+                    let nc = neighbor(router.coord, d, self.p.width, self.p.height)
+                        .expect("fork branch routes off mesh edge");
+                    let ni = self.idx(nc);
+                    let np = d.opposite().idx();
+                    if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
+                        >= self.p.queue_depth
+                    {
+                        continue;
+                    }
+                    self.planned[ni][np] += 1;
+                }
+                out_busy[o] = true;
+                drains.push((r, o));
+            }
+            // 2. Input arbitration.
+            for k in 0..5 {
+                let in_port = (router.rr as usize + k) % 5;
+                let Some(sf) = router.inq[in_port].front() else { continue };
+                if sf.arrived >= now {
+                    continue; // arrived this cycle; eligible next cycle
+                }
+                let flit = &sf.flit;
+                let is_fork_body = !flit.is_head && router.in_buffered[in_port];
+                let (mask, branch_dests) = if flit.is_head {
+                    debug_assert_eq!(router.in_branches[in_port], 0, "head while allocated");
+                    partition_dests(router.coord, &flit.dests)
+                } else {
+                    (router.in_branches[in_port], Default::default())
+                };
+                if mask == 0 {
+                    // Body flit whose head was not yet granted: wait.
+                    continue;
+                }
+                let is_fork = mask.count_ones() > 1 || is_fork_body;
+                if is_fork {
+                    // Fork path: the header claims every branch port's
+                    // allocation; flits then copy into the replication
+                    // buffers unconditionally (the buffers absorb
+                    // backpressure, keeping the dependency graph acyclic).
+                    if flit.is_head {
+                        let clash = Dir::ALL.iter().any(|d| {
+                            let o = d.idx();
+                            mask & (1 << o) != 0
+                                && (router.out_alloc[o].is_some() || claimed[o])
+                        });
+                        if clash {
+                            continue; // a branch port is held by another packet
+                        }
+                        for o in 0..5 {
+                            if mask & (1 << o) != 0 {
+                                claimed[o] = true;
+                            }
+                        }
+                    }
+                    moves.push(Move { router: r, in_port, out_mask: mask, branch_dests });
+                    continue;
+                }
+                // Direct (unicast continuation) path: single output port.
+                let o = mask.trailing_zeros() as usize;
+                let d = Dir::ALL[o];
+                if out_busy[o] {
+                    continue;
+                }
+                if flit.is_head && (router.out_alloc[o].is_some() || claimed[o]) {
+                    continue;
+                }
+                if d != Dir::Local {
+                    let Some(nc) = neighbor(router.coord, d, self.p.width, self.p.height)
+                    else {
+                        panic!(
+                            "route off mesh edge at {:?} dir {:?} (dests {:?})",
+                            router.coord,
+                            d,
+                            flit.dests.as_slice()
+                        );
+                    };
+                    let ni = self.idx(nc);
+                    let np = d.opposite().idx();
+                    if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
+                        >= self.p.queue_depth
+                    {
+                        continue;
+                    }
+                    self.planned[ni][np] += 1;
+                }
+                out_busy[o] = true;
+                if flit.is_head {
+                    claimed[o] = true;
+                }
+                moves.push(Move { router: r, in_port, out_mask: mask, branch_dests });
+            }
+        }
+
+        // --- Apply: replication-buffer drains.
+        for &(r, o) in &drains {
+            let StampedFlit { flit, .. } =
+                self.routers[r].branch_q[o].pop_front().expect("planned drain");
+            self.work -= 1;
+            self.routers[r].occupancy -= 1;
+            let coord = self.routers[r].coord;
+            self.routers[r].flits_forwarded += 1;
+            self.stats.flit_hops += 1;
+            let d = Dir::ALL[o];
+            if d == Dir::Local {
+                if flit.is_tail {
+                    self.eject[r].push_back(flit.msg.clone());
+                    self.stats.delivered += 1;
+                }
+            } else {
+                let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
+                let ni = self.idx(nc);
+                self.routers[ni].inq[d.opposite().idx()]
+                    .push_back(StampedFlit { flit: flit.clone(), arrived: now });
+                self.work += 1;
+                self.routers[ni].occupancy += 1;
+            }
+            if flit.is_tail {
+                // Branch complete: release the output port.
+                self.routers[r].out_alloc[o] = None;
+            }
+            moved = true;
+        }
+
+        // --- Apply: input-port moves.
+        for m in &moves {
+            let StampedFlit { flit, .. } =
+                self.routers[m.router].inq[m.in_port].pop_front().expect("planned flit");
+            self.work -= 1;
+            self.routers[m.router].occupancy -= 1;
+            let coord = self.routers[m.router].coord;
+            let is_head = flit.is_head;
+            let is_tail = flit.is_tail;
+            let is_fork =
+                m.out_mask.count_ones() > 1 || self.routers[m.router].in_buffered[m.in_port];
+            if is_fork {
+                // Copy into every branch's replication buffer.
+                for d in Dir::ALL {
+                    let o = d.idx();
+                    if m.out_mask & (1 << o) == 0 {
+                        continue;
+                    }
+                    let mut fwd = flit.clone();
+                    if is_head {
+                        fwd.dests = m.branch_dests[o];
+                    }
+                    self.routers[m.router].branch_q[o]
+                        .push_back(StampedFlit { flit: fwd, arrived: now });
+                    self.work += 1;
+                    self.routers[m.router].occupancy += 1;
+                }
+                let router = &mut self.routers[m.router];
+                if is_head {
+                    for o in 0..5 {
+                        if m.out_mask & (1 << o) != 0 {
+                            router.out_alloc[o] = Some(m.in_port as u8);
+                        }
+                    }
+                    if !is_tail {
+                        router.in_branches[m.in_port] = m.out_mask;
+                        router.in_buffered[m.in_port] = true;
+                    }
+                } else if is_tail {
+                    router.in_branches[m.in_port] = 0;
+                    router.in_buffered[m.in_port] = false;
+                }
+                moved = true;
+                continue;
+            }
+            // Direct move.
+            let o = m.out_mask.trailing_zeros() as usize;
+            let d = Dir::ALL[o];
+            self.routers[m.router].flits_forwarded += 1;
+            self.stats.flit_hops += 1;
+            if d == Dir::Local {
+                if is_tail {
+                    // Deliver the whole message at tail-ejection time.
+                    self.eject[m.router].push_back(flit.msg.clone());
+                    self.stats.delivered += 1;
+                }
+            } else {
+                let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
+                let ni = self.idx(nc);
+                let mut fwd = flit.clone();
+                if is_head {
+                    fwd.dests = m.branch_dests[o];
+                }
+                self.routers[ni].inq[d.opposite().idx()]
+                    .push_back(StampedFlit { flit: fwd, arrived: now });
+                self.work += 1;
+                self.routers[ni].occupancy += 1;
+            }
+            // Wormhole allocation bookkeeping.
+            let router = &mut self.routers[m.router];
+            if is_head && !is_tail {
+                router.in_branches[m.in_port] = m.out_mask;
+                router.out_alloc[o] = Some(m.in_port as u8);
+            } else if is_tail && !is_head {
+                router.in_branches[m.in_port] = 0;
+                router.out_alloc[o] = None;
+            }
+            moved = true;
+        }
+
+        // Return the scratch buffers for the next cycle.
+        self.scratch_drains = drains;
+        self.scratch_moves = moves;
+        // Rotate arbitration priority.
+        for r in &mut self.routers {
+            r.rr = (r.rr + 1) % 5;
+        }
+        if moved {
+            self.stats.busy_cycles += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::flit::MsgKind;
+
+    fn mesh3x3() -> Mesh {
+        Mesh::new(MeshParams { width: 3, height: 3, flit_bytes: 32, queue_depth: 4 })
+    }
+
+    fn run_until_idle(m: &mut Mesh, max: u64) -> u64 {
+        let mut t = 0;
+        while !m.is_idle() {
+            m.tick(t);
+            t += 1;
+            assert!(t < max, "mesh did not drain in {max} cycles");
+        }
+        t
+    }
+
+    #[test]
+    fn unicast_single_flit_delivery() {
+        let mut m = mesh3x3();
+        m.send((0, 0), Message::ctrl((0, 0), (2, 2), MsgKind::P2pReq { len: 4, prod_slot: 0, cons_slot: 0 }));
+        run_until_idle(&mut m, 100);
+        let got = m.recv((2, 2)).expect("delivered");
+        assert_eq!(got.src, (0, 0));
+        assert!(matches!(got.kind, MsgKind::P2pReq { len: 4, prod_slot: 0, cons_slot: 0 }));
+        assert!(m.recv((2, 2)).is_none());
+    }
+
+    #[test]
+    fn payload_arrives_intact() {
+        let mut m = mesh3x3();
+        let data: Vec<u8> = (0..200u16).map(|i| i as u8).collect();
+        m.send(
+            (1, 0),
+            Message::data((1, 0), (1, 2), MsgKind::P2pData { seq: 7, prod_slot: 0 }, Arc::new(data.clone())),
+        );
+        run_until_idle(&mut m, 200);
+        let got = m.recv((1, 2)).expect("delivered");
+        assert_eq!(*got.payload, data);
+        assert!(matches!(got.kind, MsgKind::P2pData { seq: 7, prod_slot: 0 }));
+    }
+
+    #[test]
+    fn self_send_delivers_locally() {
+        let mut m = mesh3x3();
+        m.send((1, 1), Message::ctrl((1, 1), (1, 1), MsgKind::Irq { acc: 3 }));
+        run_until_idle(&mut m, 50);
+        assert!(m.recv((1, 1)).is_some());
+    }
+
+    #[test]
+    fn multicast_reaches_every_destination_once() {
+        let mut m = mesh3x3();
+        let dests = DestList::from_slice(&[(0, 2), (2, 2), (2, 0), (1, 1)]);
+        let payload: Vec<u8> = (0..128u8).collect();
+        m.send(
+            (0, 0),
+            Message::multicast(
+                (0, 0),
+                dests,
+                MsgKind::P2pData { seq: 0, prod_slot: 0 },
+                Arc::new(payload.clone()),
+            ),
+        );
+        run_until_idle(&mut m, 300);
+        for c in dests.iter() {
+            let got = m.recv(c).unwrap_or_else(|| panic!("no delivery at {c:?}"));
+            assert_eq!(*got.payload, payload);
+            assert!(m.recv(c).is_none(), "duplicate delivery at {c:?}");
+        }
+        // Non-destinations see nothing.
+        assert!(m.recv((0, 1)).is_none());
+        assert!(m.recv((2, 1)).is_none());
+    }
+
+    #[test]
+    fn multicast_cheaper_than_serial_unicasts() {
+        // Same data to 4 dests: one multicast must use fewer flit-hops than
+        // 4 unicasts (the shared prefix is traversed once).
+        let payload = Arc::new(vec![0u8; 512]);
+        let dests = [(2, 2), (2, 1), (2, 0), (0, 2)];
+
+        let mut mc = mesh3x3();
+        mc.send(
+            (0, 0),
+            Message::multicast(
+                (0, 0),
+                DestList::from_slice(&dests),
+                MsgKind::P2pData { seq: 0, prod_slot: 0 },
+                payload.clone(),
+            ),
+        );
+        run_until_idle(&mut mc, 1000);
+
+        let mut uc = mesh3x3();
+        for &d in &dests {
+            uc.send((0, 0), Message::data((0, 0), d, MsgKind::P2pData { seq: 0, prod_slot: 0 }, payload.clone()));
+        }
+        run_until_idle(&mut uc, 2000);
+
+        assert!(
+            mc.stats.flit_hops < uc.stats.flit_hops,
+            "multicast {} hops !< unicast {} hops",
+            mc.stats.flit_hops,
+            uc.stats.flit_hops
+        );
+    }
+
+    #[test]
+    fn one_cycle_per_hop_when_uncontended() {
+        let mut m = mesh3x3();
+        // (0,0) -> (0,2): 2 hops, single-flit message.
+        m.send((0, 0), Message::ctrl((0, 0), (0, 2), MsgKind::P2pReq { len: 0, prod_slot: 0, cons_slot: 0 }));
+        let mut t = 0;
+        let mut delivered_at = None;
+        while delivered_at.is_none() && t < 50 {
+            m.tick(t);
+            t += 1;
+            if m.has_rx((0, 2)) {
+                delivered_at = Some(t);
+            }
+        }
+        // inject(1) + router (0,0) + (0,1) + (0,2)-eject: ~4-5 cycles.
+        let d = delivered_at.expect("delivered");
+        assert!(d <= 6, "took {d} cycles for 2 hops");
+    }
+
+    #[test]
+    fn wormhole_packets_do_not_interleave_per_link() {
+        let mut m = mesh3x3();
+        // Two multi-flit packets from the same source to the same dest:
+        // delivery order must match send order and both arrive intact.
+        for seq in 0..2u32 {
+            m.send(
+                (0, 0),
+                Message::data(
+                    (0, 0),
+                    (2, 2),
+                    MsgKind::P2pData { seq, prod_slot: 0 },
+                    Arc::new(vec![seq as u8; 160]),
+                ),
+            );
+        }
+        run_until_idle(&mut m, 500);
+        let a = m.recv((2, 2)).unwrap();
+        let b = m.recv((2, 2)).unwrap();
+        assert!(matches!(a.kind, MsgKind::P2pData { seq: 0, prod_slot: 0 }));
+        assert!(matches!(b.kind, MsgKind::P2pData { seq: 1, .. }));
+        assert!(a.payload.iter().all(|&x| x == 0));
+        assert!(b.payload.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn contended_output_serializes_but_delivers_all() {
+        let mut m = mesh3x3();
+        // Three senders target the same column destination.
+        for (i, src) in [(0u8, 0u8), (1, 0), (2, 0)].into_iter().enumerate() {
+            m.send(
+                src,
+                Message::data(
+                    src,
+                    (1, 2),
+                    MsgKind::P2pData { seq: i as u32, prod_slot: 0 },
+                    Arc::new(vec![i as u8; 96]),
+                ),
+            );
+        }
+        run_until_idle(&mut m, 1000);
+        let mut got = Vec::new();
+        while let Some(msg) = m.recv((1, 2)) {
+            got.push(msg);
+        }
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn backpressure_never_drops_flits() {
+        // Tiny queues + many packets: everything still arrives.
+        let mut m = Mesh::new(MeshParams { width: 3, height: 3, flit_bytes: 8, queue_depth: 2 });
+        for i in 0..10u32 {
+            m.send(
+                (0, 0),
+                Message::data((0, 0), (2, 2), MsgKind::P2pData { seq: i, prod_slot: 0 }, Arc::new(vec![0; 64])),
+            );
+        }
+        run_until_idle(&mut m, 5000);
+        let mut n = 0;
+        while m.recv((2, 2)).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn stats_count_hops_and_deliveries() {
+        let mut m = mesh3x3();
+        m.send((0, 0), Message::ctrl((0, 0), (0, 1), MsgKind::P2pReq { len: 1, prod_slot: 0, cons_slot: 0 }));
+        run_until_idle(&mut m, 100);
+        assert_eq!(m.stats.delivered, 1);
+        assert!(m.stats.flit_hops >= 2); // at least src router + dest eject
+        assert!(m.stats.injected >= 1);
+    }
+}

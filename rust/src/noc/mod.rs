@@ -1,0 +1,19 @@
+//! The ESP-style multi-plane 2D-mesh NoC with the paper's multicast
+//! extension.
+//!
+//! - [`flit`]: messages, flits, destination lists, header-capacity math.
+//! - [`routing`]: dimension-ordered XY + lookahead, multicast partitioning.
+//! - [`router`]/[`mesh`]: the wormhole router and one physical plane.
+//! - [`planes`]: the six-plane bundle (3 coherence, 2 DMA, 1 misc).
+
+pub mod flit;
+pub mod mesh;
+pub mod planes;
+pub mod router;
+pub mod routing;
+
+pub use flit::{header_dest_capacity, CohOp, Coord, DestList, Dir, Flit, Message, MsgKind,
+               MAX_DESTS};
+pub use mesh::{Mesh, MeshParams, MeshStats};
+pub use planes::{Noc, Plane, NUM_PLANES};
+pub use routing::{hop_count, partition_dests, xy_dir};

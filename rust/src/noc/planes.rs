@@ -1,0 +1,128 @@
+//! The multi-plane NoC bundle.
+//!
+//! ESP uses multiple *physical* planes instead of virtual channels, which is
+//! what makes the single-cycle lookahead hop possible and breaks
+//! message-dependent deadlock by construction: requests and responses (and
+//! the three coherence message classes) never share a network.  We keep
+//! ESP's six planes and assignment.
+
+use super::flit::{Coord, Message};
+use super::mesh::{Mesh, MeshParams, MeshStats};
+
+/// Plane indices (fixed, as in ESP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plane {
+    /// Coherence requests (GetS/GetM/PutM).
+    CohReq = 0,
+    /// Coherence forwards (FwdGetS/FwdGetM/Inv).
+    CohFwd = 1,
+    /// Coherence responses (Data/InvAck/PutAck).
+    CohRsp = 2,
+    /// DMA + P2P requests.
+    DmaReq = 3,
+    /// DMA + P2P responses (bulk data).
+    DmaRsp = 4,
+    /// Misc: config registers, interrupts.
+    Misc = 5,
+}
+
+/// Number of physical planes.
+pub const NUM_PLANES: usize = 6;
+
+impl Plane {
+    /// All planes, index order.
+    pub const ALL: [Plane; NUM_PLANES] =
+        [Plane::CohReq, Plane::CohFwd, Plane::CohRsp, Plane::DmaReq, Plane::DmaRsp, Plane::Misc];
+
+    /// Plane index.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// The six-plane NoC.
+pub struct Noc {
+    meshes: Vec<Mesh>,
+}
+
+impl Noc {
+    /// Build all planes with identical parameters.
+    pub fn new(p: MeshParams) -> Self {
+        Self { meshes: (0..NUM_PLANES).map(|_| Mesh::new(p)).collect() }
+    }
+
+    /// Plane parameters.
+    pub fn params(&self) -> &MeshParams {
+        self.meshes[0].params()
+    }
+
+    /// Inject `msg` at `tile` on `plane`.
+    pub fn send(&mut self, plane: Plane, tile: Coord, msg: Message) {
+        self.meshes[plane.idx()].send(tile, msg);
+    }
+
+    /// Pop a delivered message at `tile` on `plane`.
+    pub fn recv(&mut self, plane: Plane, tile: Coord) -> Option<std::sync::Arc<Message>> {
+        self.meshes[plane.idx()].recv(tile)
+    }
+
+    /// Any message waiting at `tile` on `plane`?
+    pub fn has_rx(&self, plane: Plane, tile: Coord) -> bool {
+        self.meshes[plane.idx()].has_rx(tile)
+    }
+
+    /// Advance every plane one cycle.
+    pub fn tick(&mut self, now: u64) {
+        for m in &mut self.meshes {
+            m.tick(now);
+        }
+    }
+
+    /// True when all planes are drained.
+    pub fn is_idle(&self) -> bool {
+        self.meshes.iter().all(|m| m.is_idle())
+    }
+
+    /// Per-plane statistics snapshot.
+    pub fn stats(&self) -> [MeshStats; NUM_PLANES] {
+        std::array::from_fn(|i| self.meshes[i].stats.clone())
+    }
+
+    /// Per-router forwarded-flit loads on one plane.
+    pub fn router_loads(&self, plane: Plane) -> Vec<(Coord, u64)> {
+        self.meshes[plane.idx()].router_loads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::flit::MsgKind;
+
+    #[test]
+    fn planes_are_independent() {
+        let mut noc =
+            Noc::new(MeshParams { width: 3, height: 3, flit_bytes: 32, queue_depth: 4 });
+        noc.send(Plane::DmaReq, (0, 0), Message::ctrl((0, 0), (1, 1), MsgKind::P2pReq { len: 8, prod_slot: 0, cons_slot: 0 }));
+        noc.send(Plane::Misc, (0, 0), Message::ctrl((0, 0), (1, 1), MsgKind::Irq { acc: 0 }));
+        let mut t = 0;
+        while !noc.is_idle() {
+            noc.tick(t);
+            t += 1;
+            assert!(t < 100);
+        }
+        assert!(matches!(noc.recv(Plane::DmaReq, (1, 1)).unwrap().kind, MsgKind::P2pReq { .. }));
+        assert!(matches!(noc.recv(Plane::Misc, (1, 1)).unwrap().kind, MsgKind::Irq { .. }));
+        assert!(noc.recv(Plane::CohReq, (1, 1)).is_none());
+    }
+
+    #[test]
+    fn plane_indices_stable() {
+        assert_eq!(Plane::CohReq.idx(), 0);
+        assert_eq!(Plane::Misc.idx(), 5);
+        for (i, p) in Plane::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! The 5-port wormhole router with multicast fork support.
+//!
+//! Modeled after the ESP NoC router: per-port input queues, dimension-ordered
+//! routing with lookahead (1 cycle per hop), round-robin arbitration, and —
+//! the paper's enhancement — the ability to forward a packet to **multiple
+//! output ports in parallel** when a multicast destination list splits.
+//!
+//! Wormhole semantics: a header flit allocates every output port its branch
+//! needs (all-or-nothing, which keeps the fork deadlock-free); body flits
+//! stream behind it; the tail releases the ports.
+
+use std::collections::VecDeque;
+
+use super::flit::{Coord, DestList, Flit};
+
+/// A flit waiting in an input queue, stamped with its arrival cycle so a
+/// flit cannot traverse two routers in one cycle.
+#[derive(Debug, Clone)]
+pub struct StampedFlit {
+    pub flit: Flit,
+    pub arrived: u64,
+}
+
+/// Per-router state.  The mesh drives the plan/apply cycle; the router is a
+/// passive state holder plus small helpers.
+///
+/// Multicast forks use per-output **replication buffers** (`branch_q`):
+/// synchronized-branch wormhole forking is deadlock-prone (two crossing
+/// multicasts can hold-and-wait each other's branch ports — Lin & Ni), so
+/// a granted fork copies flits into per-branch queues that drain toward
+/// their output ports independently.  The input queue always drains, which
+/// keeps the channel-dependency graph acyclic (plain dimension-ordered
+/// wormhole for every branch); total buffering is bounded by the
+/// pull-based consumption assumption.
+#[derive(Debug)]
+pub struct Router {
+    /// This router's coordinate.
+    pub coord: Coord,
+    /// Input queue per port (N,S,E,W,Local).
+    pub inq: [VecDeque<StampedFlit>; 5],
+    /// Wormhole allocation: output port -> input port currently holding it.
+    pub out_alloc: [Option<u8>; 5],
+    /// Output-port mask held by each input port (multicast branch set).
+    pub in_branches: [u8; 5],
+    /// True when input port `i` holds a *buffered* (forked) packet.
+    pub in_buffered: [bool; 5],
+    /// Replication buffer per output port (forked packets only).
+    pub branch_q: [VecDeque<StampedFlit>; 5],
+    /// Round-robin arbitration pointer.
+    pub rr: u8,
+    /// Flits currently queued here (inq + branch_q), kept incrementally so
+    /// the mesh can skip idle routers.
+    pub occupancy: u32,
+    /// Cumulative flits forwarded (stats).
+    pub flits_forwarded: u64,
+}
+
+impl Router {
+    /// Fresh router at `coord`.
+    pub fn new(coord: Coord) -> Self {
+        Self {
+            coord,
+            inq: Default::default(),
+            out_alloc: [None; 5],
+            in_branches: [0; 5],
+            in_buffered: [false; 5],
+            branch_q: Default::default(),
+            rr: 0,
+            occupancy: 0,
+            flits_forwarded: 0,
+        }
+    }
+
+    /// Total queued flits (for idle detection).
+    pub fn queued(&self) -> usize {
+        self.inq.iter().map(|q| q.len()).sum::<usize>()
+            + self.branch_q.iter().map(|q| q.len()).sum::<usize>()
+    }
+}
+
+/// One planned movement: input port `in_port` of router `router` forwards
+/// its front flit to every output port in `out_mask`; `branch_dests[o]`
+/// holds the destination subset for the header copy sent through port `o`.
+#[derive(Debug, Clone)]
+pub struct Move {
+    pub router: usize,
+    pub in_port: usize,
+    pub out_mask: u8,
+    pub branch_dests: [DestList; 5],
+}

@@ -1,0 +1,101 @@
+//! Dimension-ordered (XY) routing with lookahead, plus the multicast
+//! destination-partitioning step.
+//!
+//! ESP routes X first, then Y: this guarantees the absence of routing
+//! deadlock (no turn cycles).  *Lookahead* routing in the RTL computes the
+//! next hop's output port one hop early so a flit spends a single cycle per
+//! router; we model that by charging one cycle per hop.  For multicast, the
+//! paper replicates the lookahead logic per destination — here
+//! [`partition_dests`] computes every destination's direction in parallel
+//! (one pass) and splits the destination list into per-output-port branches.
+
+use super::flit::{Coord, DestList, Dir};
+
+/// XY output direction from `cur` towards `dest` (X resolved first).
+pub fn xy_dir(cur: Coord, dest: Coord) -> Dir {
+    let (cy, cx) = cur;
+    let (dy, dx) = dest;
+    if dx > cx {
+        Dir::East
+    } else if dx < cx {
+        Dir::West
+    } else if dy > cy {
+        Dir::South
+    } else if dy < cy {
+        Dir::North
+    } else {
+        Dir::Local
+    }
+}
+
+/// Number of hops between two tiles under XY routing.
+pub fn hop_count(a: Coord, b: Coord) -> u32 {
+    (a.0 as i32 - b.0 as i32).unsigned_abs() + (a.1 as i32 - b.1 as i32).unsigned_abs()
+}
+
+/// Split a destination list by the output port each destination takes from
+/// `cur`.  Returns `(directions_present_bitmask, per-port lists)`; this is
+/// the fork decision of the multicast router.
+pub fn partition_dests(cur: Coord, dests: &DestList) -> (u8, [DestList; 5]) {
+    let mut out: [DestList; 5] = Default::default();
+    let mut mask = 0u8;
+    for d in dests.iter() {
+        let dir = xy_dir(cur, d);
+        out[dir.idx()].push(d);
+        mask |= 1 << dir.idx();
+    }
+    (mask, out)
+}
+
+/// Coordinate of the neighbour in direction `d` (None at mesh edge).
+pub fn neighbor(cur: Coord, d: Dir, width: u8, height: u8) -> Option<Coord> {
+    let (y, x) = cur;
+    match d {
+        Dir::North if y > 0 => Some((y - 1, x)),
+        Dir::South if y + 1 < height => Some((y + 1, x)),
+        Dir::East if x + 1 < width => Some((y, x + 1)),
+        Dir::West if x > 0 => Some((y, x - 1)),
+        Dir::Local => Some(cur),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x_before_y() {
+        assert_eq!(xy_dir((0, 0), (2, 2)), Dir::East);
+        assert_eq!(xy_dir((0, 2), (2, 2)), Dir::South);
+        assert_eq!(xy_dir((2, 2), (0, 0)), Dir::West);
+        assert_eq!(xy_dir((2, 0), (0, 0)), Dir::North);
+        assert_eq!(xy_dir((1, 1), (1, 1)), Dir::Local);
+    }
+
+    #[test]
+    fn hops() {
+        assert_eq!(hop_count((0, 0), (2, 3)), 5);
+        assert_eq!(hop_count((1, 1), (1, 1)), 0);
+    }
+
+    #[test]
+    fn partition_groups_by_dir() {
+        let dests = DestList::from_slice(&[(0, 2), (2, 2), (1, 0), (1, 1)]);
+        let (mask, parts) = partition_dests((1, 1), &dests);
+        // (0,2) and (2,2) both go East first (x resolves before y).
+        assert_eq!(parts[Dir::East.idx()].as_slice(), &[(0, 2), (2, 2)]);
+        assert_eq!(parts[Dir::West.idx()].as_slice(), &[(1, 0)]);
+        assert_eq!(parts[Dir::Local.idx()].as_slice(), &[(1, 1)]);
+        assert_eq!(mask.count_ones(), 3);
+    }
+
+    #[test]
+    fn neighbor_edges() {
+        assert_eq!(neighbor((0, 0), Dir::North, 3, 3), None);
+        assert_eq!(neighbor((0, 0), Dir::West, 3, 3), None);
+        assert_eq!(neighbor((0, 0), Dir::South, 3, 3), Some((1, 0)));
+        assert_eq!(neighbor((2, 2), Dir::East, 3, 3), None);
+        assert_eq!(neighbor((1, 1), Dir::Local, 3, 3), Some((1, 1)));
+    }
+}

@@ -1,0 +1,177 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Shape + dtype of one tensor crossing the AOT boundary.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    /// Dimensions.
+    pub shape: Vec<i64>,
+    /// Dtype name (e.g. "float32").
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| Ok(d.as_u64()? as i64))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.req("dtype")?.as_str()?.to_string();
+        Ok(Self { shape, dtype })
+    }
+
+    /// Element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<i64>() as usize
+    }
+}
+
+/// One lowered HLO artifact and its I/O contract.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// File name (relative to the artifact directory).
+    pub file: String,
+    /// Input tensor specs.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs.
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            file: j.req("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Dimensions + dumped tensors of the example NN pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineMeta {
+    /// Batch size.
+    pub batch: usize,
+    /// Input feature width.
+    pub d_in: usize,
+    /// Hidden width.
+    pub d_hid: usize,
+    /// Parallel heads.
+    pub n_heads: usize,
+    /// Per-head width.
+    pub d_head: usize,
+    /// Output width.
+    pub d_out: usize,
+    /// tensor name -> shape, for the raw `.f32` dumps.
+    pub tensors: HashMap<String, Vec<usize>>,
+}
+
+impl PipelineMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let dim = |k: &str| -> usize {
+            j.get(k).and_then(|v| v.as_u64().ok()).unwrap_or(0) as usize
+        };
+        let mut tensors = HashMap::new();
+        if let Some(t) = j.get("tensors") {
+            for (name, shape) in t.as_obj()? {
+                let dims = shape
+                    .as_arr()?
+                    .iter()
+                    .map(|d| Ok(d.as_u64()? as usize))
+                    .collect::<Result<Vec<_>>>()?;
+                tensors.insert(name.clone(), dims);
+            }
+        }
+        Ok(Self {
+            batch: dim("batch"),
+            d_in: dim("d_in"),
+            d_hid: dim("d_hid"),
+            n_heads: dim("n_heads"),
+            d_head: dim("d_head"),
+            d_out: dim("d_out"),
+            tensors,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact name -> spec.
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    /// Pipeline metadata (empty if absent).
+    pub pipeline: PipelineMeta,
+}
+
+impl Manifest {
+    /// Parse a manifest file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut artifacts = HashMap::new();
+        for (name, spec) in j.req("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), ArtifactSpec::from_json(spec)?);
+        }
+        let pipeline = match j.get("pipeline") {
+            Some(p) => PipelineMeta::from_json(p)?,
+            None => PipelineMeta::default(),
+        };
+        Ok(Self { artifacts, pipeline })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal() {
+        let m = Manifest::parse(
+            r#"{"artifacts": {"a": {"file": "a.hlo.txt", "inputs": [{"shape": [2,2], "dtype": "float32"}], "outputs": [{"shape": [2,2], "dtype": "float32"}]}}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.artifacts["a"].inputs[0].shape, vec![2, 2]);
+        assert_eq!(m.artifacts["a"].inputs[0].elements(), 4);
+        assert!(m.pipeline.tensors.is_empty());
+    }
+
+    #[test]
+    fn parses_pipeline_meta() {
+        let m = Manifest::parse(
+            r#"{"artifacts": {}, "pipeline": {"batch": 32, "d_in": 256, "tensors": {"x": [32, 256]}}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.pipeline.batch, 32);
+        assert_eq!(m.pipeline.tensors["x"], vec![32, 256]);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(Manifest::load("/nonexistent/manifest.json").is_err());
+    }
+
+    #[test]
+    fn malformed_is_error() {
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"a": {"file": 3}}}"#).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! The updated ESP accelerator interface (Fig. 3 of the paper).
+//!
+//! Four independent *latency-insensitive* channels connect the accelerator
+//! to its socket: **read control**, **read data**, **write control**, and
+//! **write data**.  Control channels carry length, word size and the
+//! address relative to the accelerator's virtual buffer; the paper adds a
+//! `user` field to each control channel:
+//!
+//! - read channel `user`:  0 = DMA from memory, `k` in 1..N = P2P pull from
+//!   the accelerator at index `k` of the socket's source lookup table
+//!   (virtualized tile coordinates);
+//! - write channel `user`: 0 = DMA to memory, 1 = unicast P2P, `n` in
+//!   2..N = multicast to `n` consumers.
+//!
+//! This gives *per-burst* control over the communication mode — the
+//! "flexible P2P" enhancement — instead of one mode per invocation.
+//!
+//! Channels are modelled as bounded queues with valid/ready semantics: a
+//! full queue deasserts `ready` (the producer stalls), an empty queue
+//! deasserts `valid` (the consumer stalls), exactly the latency-insensitive
+//! contract of the RTL interface.
+
+use std::collections::VecDeque;
+
+/// Transfer direction selector used by the ISA and programs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaDir {
+    /// Memory/P2P -> PLM.
+    Read,
+    /// PLM -> memory/P2P/multicast.
+    Write,
+}
+
+/// Read-control channel beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadCtrl {
+    /// Offset within the accelerator's virtual buffer.
+    pub vaddr: u64,
+    /// Transfer length in bytes.
+    pub len: u32,
+    /// Word size in bytes (log stride; 4 for f32 streams).
+    pub word_bytes: u8,
+    /// 0 = memory DMA; 1..N = P2P source index (socket LUT).
+    pub user: u16,
+    /// Destination offset in the accelerator's PLM.
+    pub plm_addr: u32,
+    /// Transaction tag assigned by the socket at acceptance.
+    pub tag: u32,
+}
+
+/// Write-control channel beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WriteCtrl {
+    /// Offset within the accelerator's virtual buffer.
+    pub vaddr: u64,
+    /// Transfer length in bytes.
+    pub len: u32,
+    /// Word size in bytes.
+    pub word_bytes: u8,
+    /// 0 = memory DMA; 1 = unicast P2P; n>=2 = multicast to n consumers.
+    pub user: u16,
+    /// Source offset in the accelerator's PLM.
+    pub plm_addr: u32,
+    /// Transaction tag assigned by the socket at acceptance.
+    pub tag: u32,
+}
+
+/// A bounded latency-insensitive channel.
+#[derive(Debug)]
+pub struct LiChannel<T> {
+    q: VecDeque<T>,
+    cap: usize,
+}
+
+impl<T> LiChannel<T> {
+    /// Channel with capacity `cap` beats.
+    pub fn new(cap: usize) -> Self {
+        Self { q: VecDeque::with_capacity(cap), cap }
+    }
+
+    /// `ready`: can the producer push this cycle?
+    pub fn ready(&self) -> bool {
+        self.q.len() < self.cap
+    }
+
+    /// `valid`: does the consumer see a beat this cycle?
+    pub fn valid(&self) -> bool {
+        !self.q.is_empty()
+    }
+
+    /// Push a beat; returns false (and drops nothing) when not ready.
+    pub fn push(&mut self, v: T) -> bool {
+        if !self.ready() {
+            return false;
+        }
+        self.q.push_back(v);
+        true
+    }
+
+    /// Pop the front beat.
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    /// Peek the front beat.
+    pub fn front(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    /// Beats queued.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_valid_contract() {
+        let mut c: LiChannel<u32> = LiChannel::new(2);
+        assert!(c.ready() && !c.valid());
+        assert!(c.push(1));
+        assert!(c.push(2));
+        assert!(!c.ready(), "full channel deasserts ready");
+        assert!(!c.push(3), "push on full channel is refused");
+        assert_eq!(c.pop(), Some(1));
+        assert!(c.ready());
+        assert_eq!(c.pop(), Some(2));
+        assert!(!c.valid());
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut c: LiChannel<ReadCtrl> = LiChannel::new(4);
+        for i in 0..3u32 {
+            c.push(ReadCtrl {
+                vaddr: i as u64,
+                len: 64,
+                word_bytes: 4,
+                user: 0,
+                plm_addr: 0,
+                tag: i,
+            });
+        }
+        assert_eq!(c.pop().unwrap().tag, 0);
+        assert_eq!(c.front().unwrap().tag, 1);
+        assert_eq!(c.len(), 2);
+    }
+}

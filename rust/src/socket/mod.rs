@@ -1,0 +1,617 @@
+//! The ESP accelerator socket.
+//!
+//! The socket decouples the accelerator from the SoC and provides the
+//! platform services of Fig. 2: DMA, address translation (TLB),
+//! configuration registers, interrupts — plus the paper's enhancements:
+//! per-burst selection of memory vs P2P vs multicast through the `user`
+//! fields of the latency-insensitive interface, length-carrying P2P
+//! requests, and producer-side multicast aggregation.
+//!
+//! Dataflow per accepted **read** control beat:
+//! - `user == 0`: translate, split at page boundaries, issue
+//!   [`MsgKind::DmaReadReq`]s on the DMA-request plane; responses fill the
+//!   PLM and complete the tag.
+//! - `user == k`: resolve `(producer, slot)` through the source LUT and
+//!   send a length-carrying [`MsgKind::P2pReq`]; matching
+//!   [`MsgKind::P2pData`] payloads fill the PLM in request order.
+//!
+//! Per accepted **write** control beat:
+//! - `user == 0`: copy the PLM region and issue `DmaWriteReq`s;
+//!   acknowledgements complete the tag.
+//! - `user == n >= 1`: hand the burst to the [`p2p::P2pUnit`], which sends
+//!   one (multi-destination when `n >= 2`) `P2pData` message once `n`
+//!   consumers have pulled — the tag completes at send time.
+
+pub mod interface;
+pub mod p2p;
+pub mod regs;
+pub mod tlb;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::config::AccConfig;
+use crate::noc::{Coord, Message, MsgKind, Plane};
+
+pub use interface::{DmaDir, LiChannel, ReadCtrl, WriteCtrl};
+pub use p2p::{cons_participates, P2pUnit};
+pub use regs::{make_reg, pack_src, split_reg, Regs, Status};
+pub use tlb::Tlb;
+
+/// Sentinel tag meaning "no transaction" (always reported done).
+pub const TAG_NONE: u32 = u32::MAX;
+
+/// Dense completion bitset over per-invocation tags.
+#[derive(Debug, Default)]
+struct TagSet {
+    words: Vec<u64>,
+}
+
+impl TagSet {
+    #[inline]
+    fn insert(&mut self, tag: u32) {
+        let w = (tag / 64) as usize;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1 << (tag % 64);
+    }
+
+    #[inline]
+    fn contains(&self, tag: u32) -> bool {
+        let w = (tag / 64) as usize;
+        self.words.get(w).is_some_and(|x| x & (1 << (tag % 64)) != 0)
+    }
+
+    fn clear(&mut self) {
+        self.words.clear();
+    }
+}
+
+/// Socket statistics.
+#[derive(Debug, Default, Clone)]
+pub struct SocketStats {
+    /// Bytes read from memory via DMA.
+    pub dma_read_bytes: u64,
+    /// Bytes written to memory via DMA.
+    pub dma_write_bytes: u64,
+    /// Bytes received over P2P.
+    pub p2p_read_bytes: u64,
+    /// Bytes sent over P2P/multicast (per destination).
+    pub p2p_write_bytes: u64,
+    /// Read/write control beats accepted.
+    pub bursts: u64,
+}
+
+/// An outstanding P2P pull on the consumer side.
+#[derive(Debug)]
+struct P2pRead {
+    tag: u32,
+    plm_addr: u32,
+    len: u32,
+    received: u32,
+}
+
+/// The accelerator socket for one `(tile, slot)`.
+pub struct Socket {
+    /// Tile coordinate.
+    pub coord: Coord,
+    /// Socket slot on the tile (0 or 1).
+    pub slot: u8,
+    /// Global accelerator id (IRQ payload).
+    pub acc_id: u16,
+    cfg: AccConfig,
+    mem_tile: Coord,
+    cpu_tile: Coord,
+    mcast_capacity: usize,
+    /// Configuration registers (written by the host over the misc plane).
+    pub regs: Regs,
+    /// Address translation for the accelerator's virtual buffer.
+    pub tlb: Tlb,
+    /// Read-control LI channel (core -> socket).
+    rd_ctrl: LiChannel<ReadCtrl>,
+    /// Write-control LI channel (core -> socket).
+    wr_ctrl: LiChannel<WriteCtrl>,
+    next_tag: u32,
+    next_wire: u32,
+    /// Completion scoreboard, indexed by tag (tags are dense per
+    /// invocation, so a bitset beats hashing on the hot CDMA path).
+    done: TagSet,
+    /// Memory-read subrequests: wire tag -> (txn tag, plm offset, len).
+    mem_rd_sub: HashMap<u32, (u32, u32, u32)>,
+    /// Outstanding bytes per read txn.
+    rd_remaining: HashMap<u32, u32>,
+    /// Outstanding acks per write txn.
+    wr_remaining: HashMap<u32, u32>,
+    /// Consumer-side P2P pulls, FIFO per (producer, slot).
+    p2p_rd: HashMap<(Coord, u8), VecDeque<P2pRead>>,
+    /// Outstanding consumer-side pulls (cheap quiescence check).
+    p2p_rd_outstanding: u32,
+    /// Producer-side P2P/multicast unit.
+    pub p2p: P2pUnit,
+    /// Messages delayed by TLB-walk penalties: (ready cycle, plane, msg).
+    delayed: Vec<(u64, Plane, Message)>,
+    out: Vec<(Plane, Message)>,
+    /// Statistics.
+    pub stats: SocketStats,
+}
+
+impl Socket {
+    /// Build a socket.
+    pub fn new(
+        coord: Coord,
+        slot: u8,
+        acc_id: u16,
+        cfg: AccConfig,
+        mem_tile: Coord,
+        cpu_tile: Coord,
+        mcast_capacity: usize,
+    ) -> Self {
+        let tlb = Tlb::new(cfg.tlb_entries, cfg.page_bytes, 0);
+        Self {
+            coord,
+            slot,
+            acc_id,
+            cfg,
+            mem_tile,
+            cpu_tile,
+            mcast_capacity,
+            regs: Regs::default(),
+            tlb,
+            rd_ctrl: LiChannel::new(4),
+            wr_ctrl: LiChannel::new(4),
+            next_tag: 0,
+            next_wire: 0,
+            done: TagSet::default(),
+            mem_rd_sub: HashMap::new(),
+            rd_remaining: HashMap::new(),
+            wr_remaining: HashMap::new(),
+            p2p_rd: HashMap::new(),
+            p2p_rd_outstanding: 0,
+            p2p: P2pUnit::default(),
+            delayed: Vec::new(),
+            out: Vec::new(),
+            stats: SocketStats::default(),
+        }
+    }
+
+    /// Set the TLB miss penalty (page-table walk cost; usually the memory
+    /// round-trip latency).
+    pub fn set_tlb_miss_penalty(&mut self, cycles: u32) {
+        self.tlb.miss_penalty = cycles;
+    }
+
+    fn alloc_tag(&mut self) -> u32 {
+        let t = self.next_tag;
+        self.next_tag += 1;
+        t
+    }
+
+    fn alloc_wire(&mut self) -> u32 {
+        let t = self.next_wire;
+        self.next_wire += 1;
+        t
+    }
+
+    /// Submit a read burst (IDMA read).  Returns the tag, or `None` when
+    /// the read-control channel is full (the core retries next cycle).
+    pub fn submit_read(&mut self, vaddr: u64, len: u32, user: u16, plm_addr: u32) -> Option<u32> {
+        if !self.rd_ctrl.ready() {
+            return None;
+        }
+        assert!(len <= self.cfg.max_burst_bytes, "burst {len} exceeds max");
+        assert!(plm_addr + len <= self.cfg.plm_bytes, "read overflows PLM");
+        let tag = self.alloc_tag();
+        self.rd_ctrl.push(ReadCtrl { vaddr, len, word_bytes: 4, user, plm_addr, tag });
+        Some(tag)
+    }
+
+    /// Submit a write burst (IDMA write).  Returns the tag, or `None` when
+    /// the write-control channel is full.
+    pub fn submit_write(&mut self, vaddr: u64, len: u32, user: u16, plm_addr: u32) -> Option<u32> {
+        if !self.wr_ctrl.ready() {
+            return None;
+        }
+        assert!(len <= self.cfg.max_burst_bytes, "burst {len} exceeds max");
+        assert!(plm_addr + len <= self.cfg.plm_bytes, "write overflows PLM");
+        let tag = self.alloc_tag();
+        self.wr_ctrl.push(WriteCtrl { vaddr, len, word_bytes: 4, user, plm_addr, tag });
+        Some(tag)
+    }
+
+    /// Is transaction `tag` complete?  [`TAG_NONE`] is always complete.
+    pub fn is_done(&self, tag: u32) -> bool {
+        tag == TAG_NONE || self.done.contains(tag)
+    }
+
+    /// Any DMA/P2P activity still outstanding?
+    pub fn quiescent(&self) -> bool {
+        self.rd_ctrl.is_empty()
+            && self.wr_ctrl.is_empty()
+            && self.rd_remaining.is_empty()
+            && self.wr_remaining.is_empty()
+            && self.p2p_rd_outstanding == 0
+            && self.p2p.pending_bursts() == 0
+            && self.delayed.is_empty()
+    }
+
+    /// Reset per-invocation state (called on a new CMD start).
+    pub fn reset_invocation(&mut self) {
+        self.done.clear();
+        self.next_tag = 0;
+        self.p2p.reset();
+        self.p2p_rd.clear();
+        self.p2p_rd_outstanding = 0;
+    }
+
+    /// Would a tick do anything right now?  (Fast path for idle sockets;
+    /// message handling and invocation starts are driven by the tile.)
+    pub fn needs_tick(&self) -> bool {
+        !self.rd_ctrl.is_empty()
+            || !self.wr_ctrl.is_empty()
+            || self.p2p.pending_bursts() > 0
+            || !self.delayed.is_empty()
+            || !self.out.is_empty()
+    }
+
+    /// Handle a NoC message addressed to this socket.  `plm` is the
+    /// accelerator's private local memory.
+    pub fn handle_msg(&mut self, msg: &Message, plm: &mut [u8]) {
+        match msg.kind {
+            MsgKind::DmaReadRsp { tag, slot } if slot == self.slot => {
+                let (txn, plm_addr, len) =
+                    *self.mem_rd_sub.get(&tag).expect("unknown DMA read sub-tag");
+                self.mem_rd_sub.remove(&tag);
+                assert_eq!(msg.payload.len() as u32, len, "short DMA read");
+                plm[plm_addr as usize..(plm_addr + len) as usize]
+                    .copy_from_slice(&msg.payload);
+                self.stats.dma_read_bytes += len as u64;
+                let rem = self.rd_remaining.get_mut(&txn).expect("txn");
+                *rem -= len;
+                if *rem == 0 {
+                    self.rd_remaining.remove(&txn);
+                    self.done.insert(txn);
+                }
+            }
+            MsgKind::DmaWriteAck { tag, slot } if slot == self.slot => {
+                let rem = self.wr_remaining.get_mut(&tag).expect("unknown write ack");
+                *rem -= 1;
+                if *rem == 0 {
+                    self.wr_remaining.remove(&tag);
+                    self.done.insert(tag);
+                }
+            }
+            MsgKind::P2pReq { len, prod_slot, cons_slot } if prod_slot == self.slot => {
+                self.p2p.on_request(msg.src, cons_slot, len);
+            }
+            MsgKind::P2pData { prod_slot, .. } => {
+                if !cons_participates(&msg.dests, msg.cons_slots, self.coord, self.slot) {
+                    return;
+                }
+                let key = (msg.src, prod_slot);
+                let q = self.p2p_rd.entry(key).or_default();
+                let mut off = 0usize;
+                while off < msg.payload.len() {
+                    let Some(txn) = q.front_mut() else {
+                        panic!(
+                            "P2P data beyond outstanding requests at {:?}.{} from {:?}",
+                            self.coord, self.slot, key
+                        );
+                    };
+                    let want = (txn.len - txn.received) as usize;
+                    let take = want.min(msg.payload.len() - off);
+                    let dst = (txn.plm_addr + txn.received) as usize;
+                    plm[dst..dst + take].copy_from_slice(&msg.payload[off..off + take]);
+                    txn.received += take as u32;
+                    off += take;
+                    self.stats.p2p_read_bytes += take as u64;
+                    if txn.received == txn.len {
+                        self.done.insert(txn.tag);
+                        q.pop_front();
+                        self.p2p_rd_outstanding -= 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// One socket cycle: accept at most one read-control and one
+    /// write-control beat, progress the P2P unit, release delayed sends.
+    pub fn tick(&mut self, now: u64, plm: &mut [u8]) {
+        // Accept one read-control beat.
+        if let Some(rc) = self.rd_ctrl.pop() {
+            self.stats.bursts += 1;
+            if rc.user == 0 {
+                self.issue_mem_read(now, rc);
+            } else {
+                let (prod, prod_slot) = self
+                    .regs
+                    .lookup_src(rc.user)
+                    .unwrap_or_else(|| panic!("source LUT entry {} not set", rc.user));
+                self.p2p_rd
+                    .entry((prod, prod_slot))
+                    .or_default()
+                    .push_back(P2pRead { tag: rc.tag, plm_addr: rc.plm_addr, len: rc.len, received: 0 });
+                self.p2p_rd_outstanding += 1;
+                let kind =
+                    MsgKind::P2pReq { len: rc.len, prod_slot, cons_slot: self.slot };
+                self.out.push((Plane::DmaReq, Message::ctrl(self.coord, prod, kind)));
+            }
+        }
+        // Accept one write-control beat.
+        if let Some(wc) = self.wr_ctrl.pop() {
+            self.stats.bursts += 1;
+            let data = plm[wc.plm_addr as usize..(wc.plm_addr + wc.len) as usize].to_vec();
+            if wc.user == 0 {
+                self.issue_mem_write(now, wc, data);
+            } else {
+                self.p2p.submit_burst(Arc::new(data), wc.user, wc.tag);
+            }
+        }
+        // Producer-side P2P progress.
+        let mut sent = Vec::new();
+        let tags = self.p2p.tick(self.coord, self.slot, self.mcast_capacity, &mut sent);
+        for m in sent {
+            self.out.push((Plane::DmaRsp, m));
+        }
+        // Per-consumer byte accounting lives in the unit (distinct dest
+        // coords under-count when two consumer slots share a tile).
+        self.stats.p2p_write_bytes = self.p2p.bytes_sent;
+        for t in tags {
+            self.done.insert(t);
+        }
+        // Release TLB-delayed messages.
+        if !self.delayed.is_empty() {
+            let mut i = 0;
+            while i < self.delayed.len() {
+                if self.delayed[i].0 <= now {
+                    let (_, plane, msg) = self.delayed.swap_remove(i);
+                    self.out.push((plane, msg));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    fn issue_mem_read(&mut self, now: u64, rc: ReadCtrl) {
+        self.rd_remaining.insert(rc.tag, rc.len);
+        let mut vaddr = rc.vaddr;
+        let mut plm_addr = rc.plm_addr;
+        let mut left = rc.len;
+        let mut penalty = 0u32;
+        while left > 0 {
+            let chunk = left.min(self.tlb.page_remaining(vaddr));
+            let (phys, miss) = self.tlb.translate(vaddr).expect("unmapped accelerator vaddr");
+            penalty += miss;
+            let wire = self.alloc_wire();
+            self.mem_rd_sub.insert(wire, (rc.tag, plm_addr, chunk));
+            let kind = MsgKind::DmaReadReq { addr: phys, len: chunk, tag: wire, slot: self.slot };
+            let msg = Message::ctrl(self.coord, self.mem_tile, kind);
+            if penalty == 0 {
+                self.out.push((Plane::DmaReq, msg));
+            } else {
+                self.delayed.push((now + penalty as u64, Plane::DmaReq, msg));
+            }
+            vaddr += chunk as u64;
+            plm_addr += chunk;
+            left -= chunk;
+        }
+    }
+
+    fn issue_mem_write(&mut self, now: u64, wc: WriteCtrl, data: Vec<u8>) {
+        let mut vaddr = wc.vaddr;
+        let mut off = 0u32;
+        let mut left = wc.len;
+        let mut subs = 0u32;
+        let mut penalty = 0u32;
+        while left > 0 {
+            let chunk = left.min(self.tlb.page_remaining(vaddr));
+            let (phys, miss) = self.tlb.translate(vaddr).expect("unmapped accelerator vaddr");
+            penalty += miss;
+            let payload = Arc::new(data[off as usize..(off + chunk) as usize].to_vec());
+            let kind = MsgKind::DmaWriteReq { addr: phys, len: chunk, tag: wc.tag, slot: self.slot };
+            let msg = Message::data(self.coord, self.mem_tile, kind, payload);
+            if penalty == 0 {
+                self.out.push((Plane::DmaReq, msg));
+            } else {
+                self.delayed.push((now + penalty as u64, Plane::DmaReq, msg));
+            }
+            self.stats.dma_write_bytes += chunk as u64;
+            vaddr += chunk as u64;
+            off += chunk;
+            left -= chunk;
+            subs += 1;
+        }
+        self.wr_remaining.insert(wc.tag, subs);
+    }
+
+    /// Send the invocation-complete interrupt to the CPU tile.
+    pub fn send_irq(&mut self) {
+        let kind = MsgKind::Irq { acc: self.acc_id };
+        self.out.push((Plane::Misc, Message::ctrl(self.coord, self.cpu_tile, kind)));
+    }
+
+    /// Drain queued outgoing messages (the tile injects them into the NoC).
+    pub fn drain_out(&mut self) -> Vec<(Plane, Message)> {
+        std::mem::take(&mut self.out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AccConfig;
+
+    fn socket() -> Socket {
+        let mut s =
+            Socket::new((1, 1), 0, 3, AccConfig::default(), (0, 3), (0, 0), 16);
+        s.tlb.map_linear(0x10000, 1 << 20);
+        s
+    }
+
+    #[test]
+    fn mem_read_roundtrip() {
+        let mut s = socket();
+        let mut plm = vec![0u8; 64 << 10];
+        let tag = s.submit_read(0, 256, 0, 128).unwrap();
+        assert!(!s.is_done(tag));
+        s.tick(0, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        let (plane, req) = &out[0];
+        assert_eq!(*plane, Plane::DmaReq);
+        let MsgKind::DmaReadReq { addr, len, tag: wire, slot } = req.kind else {
+            panic!("expected read req")
+        };
+        assert_eq!((addr, len, slot), (0x10000, 256, 0));
+        // Fake the memory response.
+        let data: Vec<u8> = (0..=255u8).collect();
+        let rsp = Message::data(
+            (0, 3),
+            (1, 1),
+            MsgKind::DmaReadRsp { tag: wire, slot: 0 },
+            Arc::new(data.clone()),
+        );
+        s.handle_msg(&rsp, &mut plm);
+        assert!(s.is_done(tag));
+        assert_eq!(&plm[128..384], &data[..]);
+    }
+
+    #[test]
+    fn mem_write_waits_for_ack() {
+        let mut s = socket();
+        let mut plm = vec![7u8; 64 << 10];
+        let tag = s.submit_write(4096, 512, 0, 0).unwrap();
+        s.tick(0, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        let MsgKind::DmaWriteReq { addr, len, .. } = out[0].1.kind else { panic!() };
+        assert_eq!((addr, len), (0x10000 + 4096, 512));
+        assert_eq!(out[0].1.payload.len(), 512);
+        assert!(!s.is_done(tag));
+        let ack = Message::ctrl((0, 3), (1, 1), MsgKind::DmaWriteAck { tag, slot: 0 });
+        s.handle_msg(&ack, &mut plm);
+        assert!(s.is_done(tag));
+    }
+
+    #[test]
+    fn page_crossing_read_splits() {
+        let mut s = socket();
+        let mut plm = vec![0u8; 64 << 10];
+        // Page size 64 KiB: a 4 KiB read starting 1 KiB before the boundary.
+        let vaddr = (64 << 10) - 1024;
+        let tag = s.submit_read(vaddr, 4096, 0, 0).unwrap();
+        s.tick(0, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 2, "split at page boundary");
+        // Complete both halves.
+        for (_, req) in out {
+            let MsgKind::DmaReadReq { len, tag: wire, .. } = req.kind else { panic!() };
+            let rsp = Message::data(
+                (0, 3),
+                (1, 1),
+                MsgKind::DmaReadRsp { tag: wire, slot: 0 },
+                Arc::new(vec![1u8; len as usize]),
+            );
+            s.handle_msg(&rsp, &mut plm);
+        }
+        assert!(s.is_done(tag));
+    }
+
+    #[test]
+    fn p2p_read_sends_length_carrying_request() {
+        let mut s = socket();
+        let mut plm = vec![0u8; 64 << 10];
+        s.regs.write(regs::regno::SRC_LUT + 2, pack_src((2, 2), 1));
+        let tag = s.submit_read(0, 1024, 2, 256).unwrap();
+        s.tick(0, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.dests.as_slice(), &[(2, 2)]);
+        let MsgKind::P2pReq { len, prod_slot, cons_slot } = out[0].1.kind else { panic!() };
+        assert_eq!((len, prod_slot, cons_slot), (1024, 1, 0));
+        // Data arrives (possibly split): two 512-byte messages.
+        for i in 0..2u32 {
+            let mut m = Message::data(
+                (2, 2),
+                (1, 1),
+                MsgKind::P2pData { seq: i, prod_slot: 1 },
+                Arc::new(vec![i as u8 + 1; 512]),
+            );
+            m.cons_slots = p2p::encode_cons_slots(&[(1, 1)], &[((1, 1), 0)]);
+            assert!(!s.is_done(tag));
+            s.handle_msg(&m, &mut plm);
+        }
+        assert!(s.is_done(tag));
+        assert_eq!(plm[256], 1);
+        assert_eq!(plm[256 + 512], 2);
+    }
+
+    #[test]
+    fn p2p_write_completes_on_send() {
+        let mut s = socket();
+        let mut plm = vec![9u8; 64 << 10];
+        let tag = s.submit_write(0, 2048, 1, 0).unwrap();
+        s.tick(0, &mut plm);
+        assert!(!s.is_done(tag), "no consumer request yet");
+        // Consumer pulls.
+        let req = Message::ctrl(
+            (0, 1),
+            (1, 1),
+            MsgKind::P2pReq { len: 2048, prod_slot: 0, cons_slot: 0 },
+        );
+        s.handle_msg(&req, &mut plm);
+        s.tick(1, &mut plm);
+        assert!(s.is_done(tag));
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, Plane::DmaRsp);
+        assert_eq!(out[0].1.payload.len(), 2048);
+    }
+
+    #[test]
+    fn mixed_mode_per_burst() {
+        // The flexible-P2P headline: one invocation mixing memory reads and
+        // P2P reads at burst granularity.
+        let mut s = socket();
+        let mut plm = vec![0u8; 64 << 10];
+        s.regs.write(regs::regno::SRC_LUT + 1, pack_src((2, 0), 0));
+        let t_mem = s.submit_read(0, 128, 0, 0).unwrap();
+        let t_p2p = s.submit_read(0, 128, 1, 128).unwrap();
+        s.tick(0, &mut plm);
+        s.tick(1, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0].1.kind, MsgKind::DmaReadReq { .. }));
+        assert!(matches!(out[1].1.kind, MsgKind::P2pReq { .. }));
+        assert!(!s.is_done(t_mem) && !s.is_done(t_p2p));
+    }
+
+    #[test]
+    fn tag_none_always_done() {
+        let s = socket();
+        assert!(s.is_done(TAG_NONE));
+    }
+
+    #[test]
+    fn quiescent_lifecycle() {
+        let mut s = socket();
+        let mut plm = vec![0u8; 64 << 10];
+        assert!(s.quiescent());
+        s.submit_read(0, 64, 0, 0).unwrap();
+        assert!(!s.quiescent());
+        s.tick(0, &mut plm);
+        let out = s.drain_out();
+        let MsgKind::DmaReadReq { tag: wire, len, .. } = out[0].1.kind else { panic!() };
+        let rsp = Message::data(
+            (0, 3),
+            (1, 1),
+            MsgKind::DmaReadRsp { tag: wire, slot: 0 },
+            Arc::new(vec![0; len as usize]),
+        );
+        s.handle_msg(&rsp, &mut plm);
+        assert!(s.quiescent());
+    }
+}

@@ -1,0 +1,161 @@
+//! Socket configuration registers.
+//!
+//! The host programs an invocation by writing these registers over the misc
+//! NoC plane (each write is an uncached store crossing the NoC — this is
+//! where the invocation overhead the paper talks about comes from).  The
+//! register file includes the **source lookup table** of the updated
+//! accelerator interface: read-channel `user` values 1..N index this table,
+//! which virtualizes P2P sources as `(tile coord, socket slot)` pairs so
+//! accelerator programs are placement-independent.
+
+/// Register numbers (the high nibble of the wire-level register id selects
+/// the socket slot; see [`split_reg`]).
+pub mod regno {
+    /// Write 1 to start the invocation.
+    pub const CMD: u16 = 0x00;
+    /// 0 = idle, 1 = running, 2 = done.
+    pub const STATUS: u16 = 0x01;
+    /// Generic argument registers visible to the accelerator program.
+    pub const ARG0: u16 = 0x10; // ..ARG7 = 0x17
+    /// Source LUT base: entry k lives at SRC_LUT + k (k = 1..15).
+    pub const SRC_LUT: u16 = 0x20; // ..0x2F
+}
+
+/// Split a wire register id into `(slot, regno)`.
+pub fn split_reg(reg: u16) -> (u8, u16) {
+    ((reg >> 12) as u8, reg & 0x0FFF)
+}
+
+/// Build a wire register id from `(slot, regno)`.
+pub fn make_reg(slot: u8, regno: u16) -> u16 {
+    ((slot as u16) << 12) | (regno & 0x0FFF)
+}
+
+/// Pack a source-LUT entry value.
+pub fn pack_src(coord: (u8, u8), slot: u8) -> u64 {
+    ((coord.0 as u64) << 12) | ((coord.1 as u64) << 8) | slot as u64
+}
+
+/// Unpack a source-LUT entry value.
+pub fn unpack_src(v: u64) -> ((u8, u8), u8) {
+    ((((v >> 12) & 0xF) as u8, ((v >> 8) & 0xF) as u8), (v & 0xFF) as u8)
+}
+
+/// Invocation status values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Idle = 0,
+    Running = 1,
+    Done = 2,
+}
+
+/// The socket register file.
+#[derive(Debug, Clone)]
+pub struct Regs {
+    /// Status register.
+    pub status: Status,
+    /// Start pulse pending (consumed by the tile at the next tick).
+    pub start_pending: bool,
+    /// ARG0..ARG7, copied into accelerator registers r1..r8 at start.
+    pub args: [u64; 8],
+    /// Source lookup table (index 0 unused: user==0 means memory).
+    pub src_lut: [u64; 16],
+}
+
+impl Default for Regs {
+    fn default() -> Self {
+        Self { status: Status::Idle, start_pending: false, args: [0; 8], src_lut: [0; 16] }
+    }
+}
+
+impl Regs {
+    /// Apply a register write; unknown registers are ignored (RTL drops
+    /// writes to holes in the address map).
+    pub fn write(&mut self, regno: u16, val: u64) {
+        match regno {
+            regno::CMD => {
+                if val & 1 != 0 {
+                    self.start_pending = true;
+                }
+            }
+            r if (regno::ARG0..regno::ARG0 + 8).contains(&r) => {
+                self.args[(r - regno::ARG0) as usize] = val;
+            }
+            r if (regno::SRC_LUT..regno::SRC_LUT + 16).contains(&r) => {
+                self.src_lut[(r - regno::SRC_LUT) as usize] = val;
+            }
+            _ => {}
+        }
+    }
+
+    /// Read a register.
+    pub fn read(&self, regno: u16) -> u64 {
+        match regno {
+            regno::STATUS => self.status as u64,
+            r if (regno::ARG0..regno::ARG0 + 8).contains(&r) => {
+                self.args[(r - regno::ARG0) as usize]
+            }
+            r if (regno::SRC_LUT..regno::SRC_LUT + 16).contains(&r) => {
+                self.src_lut[(r - regno::SRC_LUT) as usize]
+            }
+            _ => 0,
+        }
+    }
+
+    /// Resolve a read-channel `user` index through the source LUT.
+    pub fn lookup_src(&self, user: u16) -> Option<((u8, u8), u8)> {
+        if user == 0 || user as usize >= self.src_lut.len() {
+            return None;
+        }
+        Some(unpack_src(self.src_lut[user as usize]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reg_id_split_roundtrip() {
+        let r = make_reg(1, regno::CMD);
+        assert_eq!(split_reg(r), (1, regno::CMD));
+        let r = make_reg(0, regno::SRC_LUT + 5);
+        assert_eq!(split_reg(r), (0, regno::SRC_LUT + 5));
+    }
+
+    #[test]
+    fn src_pack_roundtrip() {
+        for c in [(0u8, 0u8), (2, 3), (7, 7)] {
+            for s in [0u8, 1] {
+                assert_eq!(unpack_src(pack_src(c, s)), (c, s));
+            }
+        }
+    }
+
+    #[test]
+    fn cmd_start_pulse() {
+        let mut r = Regs::default();
+        assert!(!r.start_pending);
+        r.write(regno::CMD, 1);
+        assert!(r.start_pending);
+        r.write(regno::CMD, 0);
+        assert!(r.start_pending, "writing 0 does not cancel a pending start");
+    }
+
+    #[test]
+    fn args_and_lut() {
+        let mut r = Regs::default();
+        r.write(regno::ARG0 + 3, 42);
+        assert_eq!(r.read(regno::ARG0 + 3), 42);
+        r.write(regno::SRC_LUT + 2, pack_src((1, 3), 1));
+        assert_eq!(r.lookup_src(2), Some(((1, 3), 1)));
+        assert_eq!(r.lookup_src(0), None, "user==0 is memory, not a source");
+    }
+
+    #[test]
+    fn unknown_regs_ignored() {
+        let mut r = Regs::default();
+        r.write(0x0FFF, 99);
+        assert_eq!(r.read(0x0FFF), 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Socket TLB: accelerator virtual buffer -> global physical addresses.
+//!
+//! ESP allocates each accelerator one contiguous *virtual* buffer scattered
+//! across large physical pages; the socket's TLB translates per access.  We
+//! model a small fully-associative LRU TLB over a per-accelerator page
+//! table (set up by the host before the invocation).  A hit costs nothing
+//! extra; a miss charges a fixed page-table-walk latency to the transfer
+//! that triggered it.
+
+use anyhow::{ensure, Result};
+
+/// Per-accelerator page table + TLB.
+#[derive(Debug, Clone)]
+pub struct Tlb {
+    /// Physical base address of each virtual page (index = vpage).
+    page_table: Vec<u64>,
+    /// Page size, bytes (power of two).
+    page_bytes: u32,
+    /// TLB capacity, entries.
+    entries: usize,
+    /// Cached vpage numbers, most recent last.
+    cached: Vec<u32>,
+    /// Cycles charged per miss (page-table walk in memory).
+    pub miss_penalty: u32,
+    /// Stats.
+    pub hits: u64,
+    /// Stats.
+    pub misses: u64,
+}
+
+impl Tlb {
+    /// Empty TLB with no mappings.
+    pub fn new(entries: u16, page_bytes: u32, miss_penalty: u32) -> Self {
+        assert!(page_bytes.is_power_of_two());
+        Self {
+            page_table: Vec::new(),
+            page_bytes,
+            entries: entries.max(1) as usize,
+            cached: Vec::new(),
+            miss_penalty,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Install the page table for this invocation (host-side setup).
+    pub fn set_page_table(&mut self, phys_page_bases: Vec<u64>) {
+        self.page_table = phys_page_bases;
+        self.cached.clear();
+    }
+
+    /// Map a contiguous virtual buffer of `len` bytes starting at physical
+    /// `phys_base` (convenience for tests and simple launches).
+    pub fn map_linear(&mut self, phys_base: u64, len: u64) {
+        let pages = len.div_ceil(self.page_bytes as u64);
+        self.set_page_table(
+            (0..pages).map(|p| phys_base + p * self.page_bytes as u64).collect(),
+        );
+    }
+
+    /// Translate `vaddr`; returns `(physical address, extra cycles)` where
+    /// the extra cycles are the miss penalty (0 on a hit).
+    pub fn translate(&mut self, vaddr: u64) -> Result<(u64, u32)> {
+        let vpage = (vaddr / self.page_bytes as u64) as u32;
+        let off = vaddr % self.page_bytes as u64;
+        ensure!(
+            (vpage as usize) < self.page_table.len(),
+            "vaddr {vaddr:#x} beyond mapped buffer ({} pages)",
+            self.page_table.len()
+        );
+        let phys = self.page_table[vpage as usize] + off;
+        if let Some(pos) = self.cached.iter().position(|&p| p == vpage) {
+            self.cached.remove(pos);
+            self.cached.push(vpage); // refresh LRU
+            self.hits += 1;
+            Ok((phys, 0))
+        } else {
+            if self.cached.len() >= self.entries {
+                self.cached.remove(0); // evict LRU
+            }
+            self.cached.push(vpage);
+            self.misses += 1;
+            Ok((phys, self.miss_penalty))
+        }
+    }
+
+    /// Bytes remaining in the page containing `vaddr` (transfers must not
+    /// cross physical pages in one NoC request).
+    pub fn page_remaining(&self, vaddr: u64) -> u32 {
+        (self.page_bytes as u64 - (vaddr % self.page_bytes as u64)) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_map_translates() {
+        let mut t = Tlb::new(4, 4096, 50);
+        t.map_linear(0x10000, 3 * 4096);
+        let (p, miss) = t.translate(0).unwrap();
+        assert_eq!(p, 0x10000);
+        assert_eq!(miss, 50, "first access misses");
+        let (p, miss) = t.translate(100).unwrap();
+        assert_eq!(p, 0x10064);
+        assert_eq!(miss, 0, "same page hits");
+        let (p, _) = t.translate(4096 + 8).unwrap();
+        assert_eq!(p, 0x11008);
+    }
+
+    #[test]
+    fn scattered_pages() {
+        let mut t = Tlb::new(4, 4096, 50);
+        t.set_page_table(vec![0x8000, 0x2000, 0xF000]);
+        assert_eq!(t.translate(0).unwrap().0, 0x8000);
+        assert_eq!(t.translate(4096).unwrap().0, 0x2000);
+        assert_eq!(t.translate(2 * 4096 + 4095).unwrap().0, 0xFFFF);
+    }
+
+    #[test]
+    fn out_of_range_errors() {
+        let mut t = Tlb::new(4, 4096, 50);
+        t.map_linear(0, 4096);
+        assert!(t.translate(4096).is_err());
+    }
+
+    #[test]
+    fn lru_eviction_counts_misses() {
+        let mut t = Tlb::new(2, 4096, 50);
+        t.map_linear(0, 4 * 4096);
+        t.translate(0).unwrap(); // miss, cache {0}
+        t.translate(4096).unwrap(); // miss, cache {0,1}
+        t.translate(0).unwrap(); // hit, refresh
+        t.translate(2 * 4096).unwrap(); // miss, evicts 1
+        let (_, m) = t.translate(4096).unwrap(); // miss again
+        assert_eq!(m, 50);
+        assert_eq!(t.hits, 1);
+        assert_eq!(t.misses, 4);
+    }
+
+    #[test]
+    fn page_remaining() {
+        let t = Tlb::new(2, 4096, 0);
+        assert_eq!(t.page_remaining(0), 4096);
+        assert_eq!(t.page_remaining(4000), 96);
+    }
+}

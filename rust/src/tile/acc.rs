@@ -1,0 +1,164 @@
+//! The accelerator tile: up to two `(socket, core, PLM)` triples sharing
+//! one NoC port, plus the optional private L2 for the fully-coherent /
+//! synchronization path.
+//!
+//! Message routing inside the tile:
+//! - `DmaReadRsp`/`DmaWriteAck` -> the socket whose `slot` matches;
+//! - `P2pReq` -> the *producer* socket (`prod_slot`);
+//! - `P2pData` -> every socket (each checks its participation bit — two
+//!   consumers on one tile share the single delivered multicast copy);
+//! - `RegWrite`/`RegRead` -> register file of the addressed slot;
+//! - coherence planes -> the shared L2.
+
+use crate::accel::{AccCore, CoreState};
+use crate::coherence::CacheCtl;
+use crate::config::{AccConfig, SocConfig};
+use crate::noc::{Coord, Message, MsgKind, Noc, Plane};
+use crate::socket::{split_reg, Socket, Status};
+
+/// The accelerator tile.
+pub struct AccTile {
+    /// Tile coordinate.
+    pub coord: Coord,
+    /// Sockets (one per slot).
+    pub sockets: Vec<Socket>,
+    /// Cores (parallel to `sockets`).
+    pub cores: Vec<AccCore>,
+    /// Private local memories (parallel to `sockets`).
+    pub plms: Vec<Vec<u8>>,
+    /// Optional private L2 (coherent mode / synchronization).
+    pub l2: Option<CacheCtl>,
+    /// Invocation spans: (acc id, start cycle, end cycle).
+    pub invocation_log: Vec<(u16, u64, u64)>,
+    started_at: Vec<u64>,
+}
+
+impl AccTile {
+    /// Build a tile with `slots` sockets; `first_acc_id` numbers them.
+    pub fn new(coord: Coord, slots: u8, first_acc_id: u16, soc: &SocConfig) -> Self {
+        let acc: AccConfig = soc.acc;
+        let mem = soc.mem_tile();
+        let cpu = soc.cpu_tile();
+        let mut sockets = Vec::new();
+        let mut cores = Vec::new();
+        let mut plms = Vec::new();
+        for s in 0..slots {
+            let mut sock = Socket::new(
+                coord,
+                s,
+                first_acc_id + s as u16,
+                acc,
+                mem,
+                cpu,
+                soc.mcast_capacity(),
+            );
+            sock.set_tlb_miss_penalty(soc.mem.dram_latency);
+            sockets.push(sock);
+            cores.push(AccCore::new());
+            plms.push(vec![0u8; acc.plm_bytes as usize]);
+        }
+        let l2 = acc
+            .l2_enabled
+            .then(|| CacheCtl::new(coord, mem, acc.l2_bytes, soc.mem.line_bytes));
+        Self {
+            coord,
+            sockets,
+            cores,
+            plms,
+            l2,
+            invocation_log: Vec::new(),
+            started_at: vec![0; slots as usize],
+        }
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+        // ---- Route incoming messages.
+        while let Some(msg) = noc.recv(Plane::DmaRsp, self.coord) {
+            match msg.kind {
+                MsgKind::DmaReadRsp { slot, .. } | MsgKind::DmaWriteAck { slot, .. } => {
+                    let s = slot as usize;
+                    self.sockets[s].handle_msg(&msg, &mut self.plms[s]);
+                }
+                MsgKind::P2pData { .. } => {
+                    for s in 0..self.sockets.len() {
+                        self.sockets[s].handle_msg(&msg, &mut self.plms[s]);
+                    }
+                }
+                _ => {}
+            }
+        }
+        while let Some(msg) = noc.recv(Plane::DmaReq, self.coord) {
+            if let MsgKind::P2pReq { prod_slot, .. } = msg.kind {
+                let s = prod_slot as usize;
+                self.sockets[s].handle_msg(&msg, &mut self.plms[s]);
+            }
+        }
+        while let Some(msg) = noc.recv(Plane::Misc, self.coord) {
+            match msg.kind {
+                MsgKind::RegWrite { reg, val } => {
+                    let (slot, regno) = split_reg(reg);
+                    self.sockets[slot as usize].regs.write(regno, val);
+                }
+                MsgKind::RegRead { reg, tag } => {
+                    let (slot, regno) = split_reg(reg);
+                    let val = self.sockets[slot as usize].regs.read(regno);
+                    let rsp = Message::ctrl(self.coord, msg.src, MsgKind::RegReadRsp { tag, val });
+                    noc.send(Plane::Misc, self.coord, rsp);
+                }
+                _ => {}
+            }
+        }
+        if let Some(l2) = &mut self.l2 {
+            while let Some(msg) = noc.recv(Plane::CohRsp, self.coord) {
+                l2.handle_msg(&msg);
+            }
+            while let Some(msg) = noc.recv(Plane::CohFwd, self.coord) {
+                l2.handle_msg(&msg);
+            }
+            for (plane, m) in l2.drain_out() {
+                noc.send(plane, self.coord, m);
+            }
+        }
+
+        // ---- Per-slot pipeline.
+        for s in 0..self.sockets.len() {
+            let (socket, core, plm) =
+                (&mut self.sockets[s], &mut self.cores[s], &mut self.plms[s]);
+            // Fast path: fully idle slot with nothing pending.
+            if core.state() == CoreState::Idle
+                && !socket.regs.start_pending
+                && !socket.needs_tick()
+            {
+                continue;
+            }
+            // Start pulse?
+            if socket.regs.start_pending && core.state() == CoreState::Idle {
+                socket.regs.start_pending = false;
+                socket.regs.status = Status::Running;
+                socket.reset_invocation();
+                core.start(&socket.regs.args);
+                self.started_at[s] = now;
+            }
+            core.tick(now, socket, plm);
+            socket.tick(now, plm);
+            // Completion: program done and every transfer drained.
+            if core.state() == CoreState::Finished && socket.quiescent() {
+                socket.regs.status = Status::Done;
+                socket.send_irq();
+                core.acknowledge_finish();
+                self.invocation_log.push((socket.acc_id, self.started_at[s], now));
+            }
+            for (plane, m) in socket.drain_out() {
+                noc.send(plane, self.coord, m);
+            }
+        }
+    }
+
+    /// All cores idle and sockets drained?
+    pub fn idle(&self) -> bool {
+        self.cores.iter().all(|c| c.state() == CoreState::Idle)
+            && self.sockets.iter().all(|s| s.quiescent())
+            && self.l2.as_ref().is_none_or(|l| l.quiescent())
+    }
+}

@@ -1,0 +1,234 @@
+//! The host CPU tile.
+//!
+//! Runs a *host script* — the software side of accelerator invocations:
+//! driver overhead, uncached register writes over the misc plane, IRQ
+//! waits, and (for the coherence-based path) flag set/spin operations
+//! through a private L1 participating in MESI.  The per-operation costs
+//! come from [`crate::config::HostConfig`]; they are what makes small
+//! transfers overhead-dominated in Fig. 6.
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::coherence::CacheCtl;
+use crate::config::HostConfig;
+use crate::noc::{Coord, Message, MsgKind, Noc, Plane};
+use crate::sync::FlagOps;
+
+/// One host operation.
+#[derive(Debug, Clone)]
+pub enum HostOp {
+    /// Spin for `0` cycles (software work, driver overhead).
+    Delay(u64),
+    /// Uncached register write to a tile (misc plane).
+    WriteReg { tile: Coord, reg: u16, val: u64 },
+    /// Block until the IRQs of all listed accelerators have arrived.
+    WaitIrqs(Vec<u16>),
+    /// Coherent store of a synchronization flag.
+    SetFlag { addr: u64, val: u64 },
+    /// Spin on a coherent load until the flag equals `val`.
+    WaitFlag { addr: u64, val: u64 },
+}
+
+/// CPU-tile statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CpuStats {
+    /// Register writes issued.
+    pub reg_writes: u64,
+    /// IRQs serviced.
+    pub irqs: u64,
+    /// (acc id, cycle) of each IRQ arrival.
+    pub irq_log: Vec<(u16, u64)>,
+    /// Cycle the script finished.
+    pub done_at: Option<u64>,
+}
+
+/// The host CPU tile.
+pub struct CpuTile {
+    /// Tile coordinate.
+    pub coord: Coord,
+    cfg: HostConfig,
+    script: VecDeque<HostOp>,
+    busy_until: u64,
+    last_now: u64,
+    irqs: HashSet<u16>,
+    /// Private L1 (MESI participant) for flag synchronization.
+    pub l1: CacheCtl,
+    /// Statistics.
+    pub stats: CpuStats,
+}
+
+impl CpuTile {
+    /// Build an idle CPU at `coord`; `mem_tile` is the directory home.
+    pub fn new(coord: Coord, mem_tile: Coord, cfg: HostConfig, line_bytes: u32) -> Self {
+        Self {
+            coord,
+            cfg,
+            script: VecDeque::new(),
+            busy_until: 0,
+            last_now: 0,
+            irqs: HashSet::new(),
+            l1: CacheCtl::new(coord, mem_tile, 32 << 10, line_bytes),
+            stats: CpuStats::default(),
+        }
+    }
+
+    /// Load (append) a host script.
+    pub fn push_script(&mut self, ops: impl IntoIterator<Item = HostOp>) {
+        self.script.extend(ops);
+        self.stats.done_at = None;
+    }
+
+    /// Script finished (including the trailing busy time)?
+    pub fn done(&self) -> bool {
+        self.script.is_empty() && self.last_now >= self.busy_until
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+        self.last_now = now;
+        // IRQs and coherence traffic are serviced even while busy.
+        while let Some(msg) = noc.recv(Plane::Misc, self.coord) {
+            if let MsgKind::Irq { acc } = msg.kind {
+                self.irqs.insert(acc);
+                self.stats.irqs += 1;
+                self.stats.irq_log.push((acc, now));
+            }
+        }
+        while let Some(msg) = noc.recv(Plane::CohRsp, self.coord) {
+            self.l1.handle_msg(&msg);
+        }
+        while let Some(msg) = noc.recv(Plane::CohFwd, self.coord) {
+            self.l1.handle_msg(&msg);
+        }
+        for (plane, m) in self.l1.drain_out() {
+            noc.send(plane, self.coord, m);
+        }
+
+        if now < self.busy_until {
+            return;
+        }
+        let Some(op) = self.script.front() else {
+            if self.stats.done_at.is_none() {
+                self.stats.done_at = Some(now);
+            }
+            return;
+        };
+        match op {
+            HostOp::Delay(d) => {
+                self.busy_until = now + d;
+                self.script.pop_front();
+            }
+            HostOp::WriteReg { tile, reg, val } => {
+                let kind = MsgKind::RegWrite { reg: *reg, val: *val };
+                noc.send(Plane::Misc, self.coord, Message::ctrl(self.coord, *tile, kind));
+                self.stats.reg_writes += 1;
+                self.busy_until = now + self.cfg.reg_write_gap as u64;
+                self.script.pop_front();
+            }
+            HostOp::WaitIrqs(accs) => {
+                if accs.iter().all(|a| self.irqs.contains(a)) {
+                    let n = accs.len() as u64;
+                    for a in accs.clone() {
+                        self.irqs.remove(&a);
+                    }
+                    self.busy_until = now + self.cfg.irq_overhead as u64 * n;
+                    self.script.pop_front();
+                }
+            }
+            HostOp::SetFlag { addr, val } => {
+                if FlagOps::set(&mut self.l1, *addr, *val) {
+                    self.script.pop_front();
+                }
+                for (plane, m) in self.l1.drain_out() {
+                    noc.send(plane, self.coord, m);
+                }
+            }
+            HostOp::WaitFlag { addr, val } => {
+                if FlagOps::poll(&mut self.l1, *addr) == Some(*val) {
+                    self.script.pop_front();
+                }
+                for (plane, m) in self.l1.drain_out() {
+                    noc.send(plane, self.coord, m);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::MeshParams;
+
+    fn world() -> (CpuTile, Noc) {
+        (
+            CpuTile::new((0, 0), (0, 1), HostConfig::default(), 64),
+            Noc::new(MeshParams { width: 2, height: 2, flit_bytes: 32, queue_depth: 4 }),
+        )
+    }
+
+    #[test]
+    fn reg_writes_cross_the_noc() {
+        let (mut cpu, mut noc) = world();
+        cpu.push_script([
+            HostOp::WriteReg { tile: (1, 1), reg: 5, val: 42 },
+            HostOp::WriteReg { tile: (1, 1), reg: 6, val: 43 },
+        ]);
+        for t in 0..100 {
+            cpu.tick(t, &mut noc);
+            noc.tick(t);
+        }
+        assert!(cpu.done());
+        assert_eq!(cpu.stats.reg_writes, 2);
+        let m1 = noc.recv(Plane::Misc, (1, 1)).expect("first write");
+        assert!(matches!(m1.kind, MsgKind::RegWrite { reg: 5, val: 42 }));
+        assert!(noc.recv(Plane::Misc, (1, 1)).is_some());
+    }
+
+    #[test]
+    fn reg_write_gap_paces_the_host() {
+        let (mut cpu, mut noc) = world();
+        cpu.push_script((0..4).map(|i| HostOp::WriteReg { tile: (1, 0), reg: i, val: 0 }));
+        let mut finish = 0;
+        for t in 0..200 {
+            cpu.tick(t, &mut noc);
+            noc.tick(t);
+            if cpu.done() && finish == 0 {
+                finish = t;
+            }
+        }
+        assert!(finish >= 3 * HostConfig::default().reg_write_gap as u64);
+    }
+
+    #[test]
+    fn wait_irqs_blocks_until_all_arrive() {
+        let (mut cpu, mut noc) = world();
+        cpu.push_script([HostOp::WaitIrqs(vec![3, 4])]);
+        for t in 0..50 {
+            cpu.tick(t, &mut noc);
+            noc.tick(t);
+        }
+        assert!(!cpu.done());
+        noc.send(Plane::Misc, (1, 1), Message::ctrl((1, 1), (0, 0), MsgKind::Irq { acc: 3 }));
+        noc.send(Plane::Misc, (1, 0), Message::ctrl((1, 0), (0, 0), MsgKind::Irq { acc: 4 }));
+        for t in 50..2000 {
+            cpu.tick(t, &mut noc);
+            noc.tick(t);
+        }
+        assert!(cpu.done());
+        assert_eq!(cpu.stats.irqs, 2);
+    }
+
+    #[test]
+    fn delay_costs_cycles() {
+        let (mut cpu, mut noc) = world();
+        cpu.push_script([HostOp::Delay(100)]);
+        let mut t = 0;
+        while !cpu.done() {
+            cpu.tick(t, &mut noc);
+            t += 1;
+            assert!(t < 1000);
+        }
+        assert!(t >= 100);
+    }
+}

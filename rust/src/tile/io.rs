@@ -1,0 +1,49 @@
+//! The I/O tile: boot/peripheral endpoint.  In the paper's evaluation SoC
+//! it takes no part in the measured dataflows; here it sinks (and counts)
+//! whatever reaches it so the consumption assumption holds at every NoC
+//! endpoint.
+
+use crate::noc::{Coord, Noc, Plane};
+
+/// The I/O tile.
+pub struct IoTile {
+    /// Tile coordinate.
+    pub coord: Coord,
+    /// Messages sunk per plane.
+    pub sunk: [u64; crate::noc::NUM_PLANES],
+}
+
+impl IoTile {
+    /// Build.
+    pub fn new(coord: Coord) -> Self {
+        Self { coord, sunk: [0; crate::noc::NUM_PLANES] }
+    }
+
+    /// Drain every plane.
+    pub fn tick(&mut self, _now: u64, noc: &mut Noc) {
+        for p in Plane::ALL {
+            while noc.recv(p, self.coord).is_some() {
+                self.sunk[p.idx()] += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::{MeshParams, Message, MsgKind};
+
+    #[test]
+    fn sinks_everything() {
+        let mut noc = Noc::new(MeshParams { width: 2, height: 2, flit_bytes: 32, queue_depth: 4 });
+        let mut io = IoTile::new((1, 1));
+        noc.send(Plane::Misc, (0, 0), Message::ctrl((0, 0), (1, 1), MsgKind::Irq { acc: 0 }));
+        for t in 0..50 {
+            noc.tick(t);
+            io.tick(t, &mut noc);
+        }
+        assert_eq!(io.sunk[Plane::Misc.idx()], 1);
+        assert!(noc.is_idle());
+    }
+}

@@ -1,0 +1,342 @@
+//! The memory tile: LLC + coherence directory + DRAM channel.
+//!
+//! DMA requests (plane [`Plane::DmaReq`]) probe the LLC per line; a burst
+//! with misses pays the DRAM latency and occupies the DRAM channel for the
+//! missing lines, which is the **shared-memory bottleneck** the paper's
+//! baseline suffers: N consumers reading the same producer output serialize
+//! behind this tile's ingress and channel bandwidth.  Coherence requests
+//! (plane [`Plane::CohReq`]) go to the embedded [`Directory`].
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::coherence::Directory;
+use crate::config::MemConfig;
+use crate::noc::{Coord, Message, MsgKind, Noc, Plane};
+
+/// Set-associative LLC metadata (data lives in the DRAM array; the LLC
+/// tracks presence + dirtiness for timing).
+#[derive(Debug)]
+struct Llc {
+    /// Per-set line addresses, LRU order (front = oldest); parallel dirty bits.
+    sets: Vec<VecDeque<(u64, bool)>>,
+    ways: usize,
+    line_bytes: u64,
+}
+
+impl Llc {
+    fn new(capacity: u64, ways: u16, line_bytes: u32) -> Self {
+        let lines = (capacity / line_bytes as u64).max(1);
+        let sets = (lines / ways.max(1) as u64).max(1) as usize;
+        Self {
+            sets: (0..sets).map(|_| VecDeque::new()).collect(),
+            ways: ways.max(1) as usize,
+            line_bytes: line_bytes as u64,
+        }
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        ((line / self.line_bytes) % self.sets.len() as u64) as usize
+    }
+
+    /// Probe (and LRU-refresh) a line.
+    fn probe(&mut self, line: u64) -> bool {
+        let s = self.set_of(line);
+        if let Some(p) = self.sets[s].iter().position(|&(l, _)| l == line) {
+            let e = self.sets[s].remove(p).unwrap();
+            self.sets[s].push_back(e);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert a line; returns true when a dirty victim was evicted.
+    fn insert(&mut self, line: u64, dirty: bool) -> bool {
+        let s = self.set_of(line);
+        if let Some(p) = self.sets[s].iter().position(|&(l, _)| l == line) {
+            let mut e = self.sets[s].remove(p).unwrap();
+            e.1 |= dirty;
+            self.sets[s].push_back(e);
+            return false;
+        }
+        let mut evicted_dirty = false;
+        if self.sets[s].len() >= self.ways {
+            if let Some((_, d)) = self.sets[s].pop_front() {
+                evicted_dirty = d;
+            }
+        }
+        self.sets[s].push_back((line, dirty));
+        evicted_dirty
+    }
+}
+
+/// Memory-tile statistics.
+#[derive(Debug, Default, Clone)]
+pub struct MemStats {
+    /// DMA read requests served.
+    pub reads: u64,
+    /// DMA write requests served.
+    pub writes: u64,
+    /// Bytes read / written via DMA.
+    pub read_bytes: u64,
+    /// Bytes written.
+    pub write_bytes: u64,
+    /// LLC line hits / misses (DMA path).
+    pub llc_hits: u64,
+    /// LLC misses.
+    pub llc_misses: u64,
+    /// Cycles the DRAM channel was occupied.
+    pub dram_busy_cycles: u64,
+}
+
+/// The memory tile.
+pub struct MemTile {
+    /// Tile coordinate.
+    pub coord: Coord,
+    cfg: MemConfig,
+    /// Backing store (also the coherence home memory).
+    pub dram: Vec<u8>,
+    llc: Llc,
+    /// Coherence directory.
+    pub dir: Directory,
+    /// Delayed outgoing responses: (ready cycle, plane, message).
+    jobs: Vec<(u64, Plane, Message)>,
+    /// DRAM channel free-at cycle (bandwidth model).
+    dram_free: u64,
+    /// Statistics.
+    pub stats: MemStats,
+}
+
+impl MemTile {
+    /// Build with zeroed DRAM.
+    pub fn new(coord: Coord, cfg: MemConfig) -> Self {
+        Self {
+            coord,
+            dram: vec![0u8; cfg.dram_bytes as usize],
+            llc: Llc::new(cfg.llc_bytes, cfg.llc_ways, cfg.line_bytes),
+            dir: Directory::new(coord, cfg.line_bytes),
+            jobs: Vec::new(),
+            dram_free: 0,
+            stats: MemStats::default(),
+            cfg,
+        }
+    }
+
+    /// Probe the LLC for every line a `[addr, addr+len)` access touches;
+    /// returns the cycle the access completes, charging latency + DRAM
+    /// channel occupancy.  With `dma_through_llc == false` (ESP's
+    /// non-coherent DMA, the paper's configuration) every DMA access goes
+    /// straight to the DRAM channel.
+    fn access(&mut self, now: u64, addr: u64, len: u32, write: bool) -> u64 {
+        let bpc = self.cfg.channel_bytes_per_cycle.max(1) as u64;
+        if !self.cfg.dma_through_llc || self.cfg.llc_bytes == 0 {
+            // Pipelined DRAM channel: transfer serializes, latency overlaps.
+            let start = now.max(self.dram_free);
+            let transfer = (len as u64).div_ceil(bpc);
+            self.dram_free = start + transfer;
+            self.stats.dram_busy_cycles += transfer;
+            self.stats.llc_misses += 1;
+            return start + self.cfg.dram_latency as u64 + transfer;
+        }
+        let line = self.cfg.line_bytes as u64;
+        let first = addr / line;
+        let last = (addr + len as u64 - 1) / line;
+        let mut misses = 0u64;
+        let mut dirty_evictions = 0u64;
+        for l in first..=last {
+            if self.llc.probe(l * line) {
+                self.stats.llc_hits += 1;
+            } else {
+                self.stats.llc_misses += 1;
+                misses += 1;
+                if self.llc.insert(l * line, write) {
+                    dirty_evictions += 1;
+                }
+            }
+        }
+        let mut ready = now + self.cfg.llc_latency as u64;
+        if misses > 0 {
+            // Serialize the missing lines on the DRAM channel.
+            let start = now.max(self.dram_free);
+            let busy = (misses + dirty_evictions) * line / bpc;
+            self.dram_free = start + busy;
+            self.stats.dram_busy_cycles += busy;
+            ready = start + self.cfg.dram_latency as u64 + busy;
+        }
+        ready
+    }
+
+    /// Advance one cycle: accept requests, progress the directory, emit
+    /// ready responses.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+        // Accept DMA requests (bounded ingress).
+        for _ in 0..self.cfg.requests_per_cycle {
+            let Some(msg) = noc.recv(Plane::DmaReq, self.coord) else { break };
+            match msg.kind {
+                MsgKind::DmaReadReq { addr, len, tag, slot } => {
+                    self.stats.reads += 1;
+                    self.stats.read_bytes += len as u64;
+                    let ready = self.access(now, addr, len, false);
+                    let a = addr as usize;
+                    let payload = Arc::new(self.dram[a..a + len as usize].to_vec());
+                    let rsp = Message::data(
+                        self.coord,
+                        msg.src,
+                        MsgKind::DmaReadRsp { tag, slot },
+                        payload,
+                    );
+                    self.jobs.push((ready, Plane::DmaRsp, rsp));
+                }
+                MsgKind::DmaWriteReq { addr, len, tag, slot } => {
+                    self.stats.writes += 1;
+                    self.stats.write_bytes += len as u64;
+                    debug_assert_eq!(msg.payload.len(), len as usize);
+                    let a = addr as usize;
+                    self.dram[a..a + len as usize].copy_from_slice(&msg.payload);
+                    let ready = self.access(now, addr, len, true);
+                    let ack =
+                        Message::ctrl(self.coord, msg.src, MsgKind::DmaWriteAck { tag, slot });
+                    self.jobs.push((ready, Plane::DmaRsp, ack));
+                }
+                _ => {}
+            }
+        }
+        // Coherence requests -> directory (one per cycle, blocking dir).
+        if let Some(msg) = noc.recv(Plane::CohReq, self.coord) {
+            self.dir.handle_msg(&msg, &mut self.dram);
+        }
+        // Responses routed back to the directory (copybacks ride CohRsp).
+        while let Some(msg) = noc.recv(Plane::CohRsp, self.coord) {
+            self.dir.handle_msg(&msg, &mut self.dram);
+        }
+        for (plane, m) in self.dir.drain_out() {
+            self.jobs.push((now + self.cfg.llc_latency as u64, plane, m));
+        }
+        // Emit ready jobs.
+        let mut i = 0;
+        while i < self.jobs.len() {
+            if self.jobs[i].0 <= now {
+                let (_, plane, msg) = self.jobs.swap_remove(i);
+                noc.send(plane, self.coord, msg);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Outstanding delayed responses (for idle detection).
+    pub fn busy(&self) -> bool {
+        !self.jobs.is_empty() || !self.dir.quiescent()
+    }
+
+    /// Backdoor: host/launcher writes initial data into DRAM.
+    pub fn write_backdoor(&mut self, addr: u64, data: &[u8]) {
+        let a = addr as usize;
+        self.dram[a..a + data.len()].copy_from_slice(data);
+    }
+
+    /// Backdoor: read DRAM (result checking).
+    pub fn read_backdoor(&self, addr: u64, len: usize) -> &[u8] {
+        let a = addr as usize;
+        &self.dram[a..a + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::MeshParams;
+
+    fn world() -> (MemTile, Noc) {
+        let cfg = MemConfig { dram_bytes: 1 << 20, ..MemConfig::default() };
+        (
+            MemTile::new((0, 0), cfg),
+            Noc::new(MeshParams { width: 2, height: 2, flit_bytes: 32, queue_depth: 4 }),
+        )
+    }
+
+    fn run(mem: &mut MemTile, noc: &mut Noc, cycles: u64) {
+        for t in 0..cycles {
+            mem.tick(t, noc);
+            noc.tick(t);
+        }
+    }
+
+    #[test]
+    fn read_returns_dram_contents() {
+        let (mut mem, mut noc) = world();
+        mem.write_backdoor(0x100, &[1, 2, 3, 4]);
+        noc.send(
+            Plane::DmaReq,
+            (1, 1),
+            Message::ctrl(
+                (1, 1),
+                (0, 0),
+                MsgKind::DmaReadReq { addr: 0x100, len: 4, tag: 9, slot: 1 },
+            ),
+        );
+        run(&mut mem, &mut noc, 300);
+        let rsp = noc.recv(Plane::DmaRsp, (1, 1)).expect("response");
+        assert!(matches!(rsp.kind, MsgKind::DmaReadRsp { tag: 9, slot: 1 }));
+        assert_eq!(&rsp.payload[..], &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn write_commits_and_acks() {
+        let (mut mem, mut noc) = world();
+        noc.send(
+            Plane::DmaReq,
+            (0, 1),
+            Message::data(
+                (0, 1),
+                (0, 0),
+                MsgKind::DmaWriteReq { addr: 0x40, len: 8, tag: 2, slot: 0 },
+                Arc::new(vec![7u8; 8]),
+            ),
+        );
+        run(&mut mem, &mut noc, 300);
+        assert!(matches!(
+            noc.recv(Plane::DmaRsp, (0, 1)).expect("ack").kind,
+            MsgKind::DmaWriteAck { tag: 2, slot: 0 }
+        ));
+        assert_eq!(mem.read_backdoor(0x40, 8), &[7u8; 8]);
+    }
+
+    #[test]
+    fn llc_hit_faster_than_miss() {
+        // LLC effects only apply in the coherent-DMA configuration.
+        let cfg =
+            MemConfig { dram_bytes: 1 << 20, dma_through_llc: true, ..MemConfig::default() };
+        let mut mem = MemTile::new((0, 0), cfg);
+        // Cold read (miss): latency >= dram_latency.
+        let t_miss = mem.access(0, 0, 64, false);
+        assert!(t_miss >= 100);
+        // Hot read (hit): llc latency only.
+        let t_hit = mem.access(1000, 0, 64, false);
+        assert_eq!(t_hit, 1000 + mem.cfg.llc_latency as u64);
+    }
+
+    #[test]
+    fn dram_channel_serializes_misses() {
+        let (mut mem, _noc) = world();
+        // Two concurrent 4 KB cold reads: second waits on the channel.
+        let r1 = mem.access(0, 0x10000, 4096, false);
+        let r2 = mem.access(0, 0x20000, 4096, false);
+        assert!(r2 > r1, "channel occupancy serializes: {r1} then {r2}");
+    }
+
+    #[test]
+    fn working_set_beyond_llc_misses_again() {
+        let cfg =
+            MemConfig { dram_bytes: 1 << 20, dma_through_llc: true, ..MemConfig::default() };
+        let mut mem = MemTile::new((0, 0), cfg);
+        // Fill far beyond 512 KB of distinct lines, then re-touch the start.
+        for i in 0..(768 << 10) / 64u64 {
+            mem.access(i, i * 64, 64, false);
+        }
+        let h = mem.stats.llc_hits;
+        mem.access(0, 0, 64, false);
+        assert_eq!(mem.stats.llc_hits, h, "start of the sweep was evicted");
+    }
+}

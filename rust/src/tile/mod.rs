@@ -1,0 +1,51 @@
+//! Tile implementations: CPU (host), memory (LLC + directory + DRAM), I/O,
+//! and accelerator tiles, all driven cycle-by-cycle by the coordinator.
+
+pub mod acc;
+pub mod cpu;
+pub mod io;
+pub mod mem;
+
+pub use acc::AccTile;
+pub use cpu::{CpuTile, HostOp};
+pub use io::IoTile;
+pub use mem::{MemStats, MemTile};
+
+use crate::noc::Noc;
+
+/// One mesh tile.
+pub enum Tile {
+    /// Host CPU.
+    Cpu(CpuTile),
+    /// Memory tile.
+    Mem(MemTile),
+    /// I/O tile.
+    Io(IoTile),
+    /// Accelerator tile.
+    Acc(AccTile),
+    /// Unpopulated.
+    Empty,
+}
+
+impl Tile {
+    /// Advance this tile one cycle.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+        match self {
+            Tile::Cpu(t) => t.tick(now, noc),
+            Tile::Mem(t) => t.tick(now, noc),
+            Tile::Io(t) => t.tick(now, noc),
+            Tile::Acc(t) => t.tick(now, noc),
+            Tile::Empty => {}
+        }
+    }
+
+    /// Is the tile quiescent?
+    pub fn idle(&self) -> bool {
+        match self {
+            Tile::Cpu(t) => t.done(),
+            Tile::Mem(t) => !t.busy(),
+            Tile::Io(_) | Tile::Empty => true,
+            Tile::Acc(t) => t.idle(),
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Runs each measurement several times, reports min/median/mean wall-clock
+//! alongside whatever domain metric (simulated cycles, speedup) the bench
+//! computes, and prints aligned tables the EXPERIMENTS.md results are
+//! copied from.
+
+use std::time::Instant;
+
+/// Timing summary of repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    /// Fastest iteration, seconds.
+    pub min_s: f64,
+    /// Median iteration, seconds.
+    pub median_s: f64,
+    /// Mean iteration, seconds.
+    pub mean_s: f64,
+    /// Iterations.
+    pub iters: usize,
+}
+
+/// Measure `f` `iters` times (after one warm-up) and summarize.
+pub fn measure<T>(iters: usize, mut f: impl FnMut() -> T) -> (T, Timing) {
+    let warm = f();
+    let mut times = Vec::with_capacity(iters);
+    let mut last = warm;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        last = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let timing = Timing {
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        iters: times.len(),
+    };
+    (last, timing)
+}
+
+/// Simple aligned-table printer.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    /// Start a table and print its header.
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        assert_eq!(headers.len(), widths.len());
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(widths) {
+            line.push_str(&format!("{h:>w$} "));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        Self { widths: widths.to_vec() }
+    }
+
+    /// Print one row.
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$} "));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_and_summarizes() {
+        let mut n = 0u64;
+        let (last, t) = measure(5, || {
+            n += 1;
+            n
+        });
+        assert_eq!(t.iters, 5);
+        assert!(last >= 5, "5 iters + warmup");
+        assert!(t.min_s <= t.median_s && t.median_s <= t.mean_s * 5.0);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_secs(0.002), "2.00ms");
+        assert_eq!(fmt_secs(0.0000021), "2us");
+    }
+}

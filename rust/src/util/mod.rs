@@ -1,0 +1,10 @@
+//! Offline substrates: JSON, PRNG, benchmarking — the external-crate
+//! functionality this repo re-implements so it builds with only the
+//! vendored `xla` + `anyhow`.
+
+pub mod bench;
+pub mod json;
+pub mod prng;
+
+pub use json::Json;
+pub use prng::Prng;

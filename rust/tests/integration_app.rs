@@ -1,0 +1,105 @@
+//! End-to-end integration: full SoC runs of the Fig. 6 workloads at small
+//! sizes, verifying cycle-accurate completion AND data integrity through
+//! the whole stack (host script -> reg writes over the NoC -> ISA programs
+//! -> socket DMA/P2P/multicast -> memory tile -> verification).
+
+use espsim::config::SocConfig;
+use espsim::coordinator::experiments::{
+    run_baseline, run_fig6_point, run_multicast, Fig6Options,
+};
+
+fn opts() -> Fig6Options {
+    Fig6Options::default()
+}
+
+#[test]
+fn baseline_single_consumer_4kb() {
+    let cycles = run_baseline(1, 4096, &opts()).expect("baseline runs and verifies");
+    assert!(cycles > 0);
+}
+
+#[test]
+fn p2p_unicast_single_consumer_4kb() {
+    let cycles = run_multicast(1, 4096, &opts()).expect("unicast P2P runs and verifies");
+    assert!(cycles > 0);
+}
+
+#[test]
+fn multicast_four_consumers_16kb() {
+    let cycles = run_multicast(4, 16 << 10, &opts()).expect("multicast runs and verifies");
+    assert!(cycles > 0);
+}
+
+#[test]
+fn multicast_sixteen_consumers_4kb() {
+    run_multicast(16, 4096, &opts()).expect("max fan-out runs and verifies");
+}
+
+#[test]
+fn p2p_beats_baseline_at_4kb() {
+    let p = run_fig6_point(1, 4096, &opts()).unwrap();
+    assert!(
+        p.speedup() > 1.0,
+        "P2P should beat shared memory: baseline {} vs multicast {}",
+        p.baseline_cycles,
+        p.multicast_cycles
+    );
+}
+
+#[test]
+fn multicast_speedup_grows_with_consumers() {
+    let p1 = run_fig6_point(1, 16 << 10, &opts()).unwrap();
+    let p8 = run_fig6_point(8, 16 << 10, &opts()).unwrap();
+    assert!(
+        p8.speedup() > p1.speedup(),
+        "more consumers, more speedup: {} vs {}",
+        p8.speedup(),
+        p1.speedup()
+    );
+}
+
+#[test]
+fn speedup_grows_with_data_size() {
+    // The size trend is strongest at low fan-out (at high N the sequential
+    // baseline is already invocation-dominated at every size).
+    let small = run_fig6_point(1, 4 << 10, &opts()).unwrap();
+    let large = run_fig6_point(1, 64 << 10, &opts()).unwrap();
+    assert!(
+        large.speedup() > small.speedup(),
+        "burst pipelining should help larger data: {} vs {}",
+        large.speedup(),
+        small.speedup()
+    );
+}
+
+#[test]
+fn single_buffered_ablation_is_slower() {
+    let mut single = opts();
+    single.single_buffered = true;
+    let db = run_multicast(2, 32 << 10, &opts()).unwrap();
+    let sb = run_multicast(2, 32 << 10, &single).unwrap();
+    assert!(sb > db, "double buffering must help: single {sb} vs double {db}");
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let a = run_fig6_point(2, 8 << 10, &opts()).unwrap();
+    let b = run_fig6_point(2, 8 << 10, &opts()).unwrap();
+    assert_eq!(a.baseline_cycles, b.baseline_cycles);
+    assert_eq!(a.multicast_cycles, b.multicast_cycles);
+}
+
+#[test]
+fn works_on_small_3x3_platform() {
+    let mut o = opts();
+    o.soc = SocConfig::small_3x3();
+    run_fig6_point(2, 8 << 10, &o).expect("3x3 platform runs");
+}
+
+#[test]
+fn narrow_noc_64bit_multicast() {
+    let mut o = opts();
+    o.soc.noc.bitwidth = 64;
+    let p = run_fig6_point(4, 8 << 10, &o).expect("64-bit NoC supports up to 5 dests");
+    assert!(p.speedup() > 0.5);
+}

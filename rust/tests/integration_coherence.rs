@@ -1,0 +1,139 @@
+//! Coherence-based synchronization on the full SoC (paper §3,
+//! *Accelerator Synchronization*): MESI traffic over the three coherence
+//! planes between the CPU's L1 and accelerator-tile L2s, flag
+//! producer/consumer patterns, and the latency comparison against the
+//! IRQ path that motivates the feature.
+
+use espsim::config::SocConfig;
+use espsim::coordinator::Soc;
+use espsim::noc::Plane;
+use espsim::sync::FlagRegion;
+use espsim::tile::HostOp;
+
+fn coherent_soc() -> Soc {
+    let mut cfg = SocConfig::small_3x3();
+    cfg.acc.l2_enabled = true;
+    Soc::new(cfg).unwrap()
+}
+
+#[test]
+fn cpu_flag_set_and_spin_roundtrip() {
+    let mut soc = coherent_soc();
+    let flags = FlagRegion::new(0x1000, 4, 64);
+    // CPU sets flag 0 then spins on it (trivially satisfied once the
+    // store completes) — exercises GetM + GetS against the directory.
+    soc.push_host_script(vec![
+        HostOp::SetFlag { addr: flags.addr(0), val: 7 },
+        HostOp::WaitFlag { addr: flags.addr(0), val: 7 },
+    ]);
+    soc.run(100_000).unwrap();
+    // The store reached the coherence system: directory data is current
+    // after the CPU's line is recalled; read through the backdoor after a
+    // writeback would require eviction, so check via the CPU cache state.
+    assert!(soc.cpu_mut().l1.quiescent());
+}
+
+#[test]
+fn coherence_planes_carry_traffic() {
+    let mut soc = coherent_soc();
+    let flags = FlagRegion::new(0x2000, 2, 64);
+    soc.push_host_script(vec![
+        HostOp::SetFlag { addr: flags.addr(0), val: 1 },
+        HostOp::SetFlag { addr: flags.addr(1), val: 2 },
+    ]);
+    soc.run(100_000).unwrap();
+    let report = soc.report();
+    assert!(
+        report.planes[Plane::CohReq.idx()].delivered > 0,
+        "GetM requests must ride the coherence-request plane"
+    );
+    assert!(
+        report.planes[Plane::CohRsp.idx()].delivered > 0,
+        "data grants must ride the coherence-response plane"
+    );
+}
+
+/// Accelerator-side L2 participates: poke a flag through an accelerator
+/// tile's cache directly (unit-style, but through the full NoC + memory
+/// tile + directory).
+#[test]
+fn accelerator_l2_and_cpu_l1_share_a_flag() {
+    let mut soc = coherent_soc();
+    let addr = 0x3000u64;
+
+    // Accelerator tile (acc 0) stores through its L2 by driving the cache
+    // controller directly while the SoC ticks.
+    let (tile_idx, _) = (soc.cfg.index_of(soc.acc_location(0).0), 0);
+    let mut stored = false;
+    let mut cpu_saw = None;
+    for _ in 0..200_000 {
+        {
+            let espsim::tile::Tile::Acc(acc) = &mut soc.tiles[tile_idx] else { panic!() };
+            let l2 = acc.l2.as_mut().expect("l2 enabled");
+            if !stored {
+                stored = l2.store(addr, 99);
+            }
+        }
+        {
+            let cpu_coord = soc.cfg.cpu_tile();
+            let cpu_idx = soc.cfg.index_of(cpu_coord);
+            let espsim::tile::Tile::Cpu(cpu) = &mut soc.tiles[cpu_idx] else { panic!() };
+            if stored && cpu_saw.is_none() {
+                cpu_saw = cpu.l1.load(addr);
+            }
+        }
+        soc.tick();
+        if cpu_saw == Some(99) {
+            break;
+        }
+    }
+    assert_eq!(cpu_saw, Some(99), "CPU L1 must observe the accelerator's coherent store");
+}
+
+/// The paper's motivation: a coherent flag handoff is cheaper than an IRQ
+/// round trip through the host.
+#[test]
+fn flag_sync_cheaper_than_irq_roundtrip() {
+    // Flag path: producer store -> consumer invalidation + refetch.
+    // Measured as cycles for the CPU to see a flag set by an acc L2.
+    let mut soc = coherent_soc();
+    let addr = 0x4000u64;
+    let tile_idx = soc.cfg.index_of(soc.acc_location(0).0);
+    // Warm the consumer (CPU) copy so the handoff is inval + refetch.
+    let cpu_idx = soc.cfg.index_of(soc.cfg.cpu_tile());
+    let mut warmed = false;
+    for _ in 0..10_000 {
+        let espsim::tile::Tile::Cpu(cpu) = &mut soc.tiles[cpu_idx] else { panic!() };
+        if cpu.l1.load(addr).is_some() {
+            warmed = true;
+            break;
+        }
+        soc.tick();
+    }
+    assert!(warmed);
+    // Producer stores; count cycles until CPU sees it.
+    let mut stored = false;
+    let mut cycles = 0u64;
+    for _ in 0..100_000 {
+        {
+            let espsim::tile::Tile::Acc(acc) = &mut soc.tiles[tile_idx] else { panic!() };
+            if !stored {
+                stored = acc.l2.as_mut().unwrap().store(addr, 1);
+            }
+        }
+        {
+            let espsim::tile::Tile::Cpu(cpu) = &mut soc.tiles[cpu_idx] else { panic!() };
+            if stored && cpu.l1.load(addr) == Some(1) {
+                break;
+            }
+        }
+        soc.tick();
+        cycles += 1;
+    }
+    // IRQ path cost: NoC traversal + the host's IRQ service overhead.
+    let irq_cost = soc.cfg.host.irq_overhead as u64 + 10;
+    assert!(
+        cycles < irq_cost,
+        "coherent flag handoff ({cycles} cy) should beat the IRQ path (~{irq_cost} cy)"
+    );
+}

@@ -1,0 +1,105 @@
+//! Multicast integration on the full SoC: fan-out correctness, header
+//! capacity limits, NoC traffic accounting, and the in-network-fork
+//! advantage over serial unicasts.
+
+use espsim::accel::traffic_gen::TgenArgs;
+use espsim::config::SocConfig;
+use espsim::coordinator::experiments::{run_multicast, Fig6Options};
+use espsim::coordinator::{App, Invocation, Soc};
+use espsim::noc::Plane;
+
+const IN: u64 = 0x10_0000;
+
+fn pattern(n: usize) -> Vec<u8> {
+    (0..n).map(|i| (i as u64).wrapping_mul(2654435761) as u8).collect()
+}
+
+/// 1 producer multicasting to `n` consumers on the paper platform; returns
+/// (cycles, report).
+fn fanout(n: usize, total: u32) -> (u64, espsim::coordinator::Report) {
+    let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+    let data = pattern(total as usize);
+    soc.write_mem(IN, &data);
+    let mut invs = vec![Invocation::tgen(
+        0,
+        TgenArgs {
+            total_bytes: total,
+            burst_bytes: 4096,
+            rd_user: 0,
+            wr_user: n as u16,
+            vaddr_in: IN,
+            vaddr_out: 0,
+        },
+    )];
+    for c in 0..n {
+        invs.push(
+            Invocation::tgen(
+                (c + 1) as u16,
+                TgenArgs {
+                    total_bytes: total,
+                    burst_bytes: 4096,
+                    rd_user: 1,
+                    wr_user: 0,
+                    vaddr_in: 0,
+                    vaddr_out: 0x100_0000 + c as u64 * 0x20_0000,
+                },
+            )
+            .with_src(1, 0),
+        );
+    }
+    App::new().phase(invs).launch(&mut soc).unwrap();
+    let cycles = soc.run(100_000_000).unwrap();
+    for c in 0..n {
+        assert_eq!(
+            soc.read_mem(0x100_0000 + c as u64 * 0x20_0000, total as usize),
+            data,
+            "consumer {c}"
+        );
+    }
+    (cycles, soc.report())
+}
+
+#[test]
+fn fanout_2_8_16_all_verify() {
+    for n in [2usize, 8, 16] {
+        fanout(n, 16 << 10);
+    }
+}
+
+#[test]
+fn multicast_messages_counted() {
+    let (_, report) = fanout(4, 16 << 10);
+    let (_, prod) = &report.sockets[0];
+    // 4 bursts, each one multicast message to 4 consumers.
+    assert_eq!(prod.p2p_write_bytes, 4 * (16 << 10) as u64);
+    let consumed: u64 = report.sockets.iter().skip(1).map(|(_, s)| s.p2p_read_bytes).sum();
+    assert_eq!(consumed, 4 * (16 << 10) as u64);
+}
+
+#[test]
+fn fanout_cost_is_sublinear_in_consumers() {
+    // In-network forking: DmaRsp-plane flit-hops grow far slower than the
+    // consumer count (serial unicasts would scale linearly).
+    let (_, r2) = fanout(2, 32 << 10);
+    let (_, r16) = fanout(16, 32 << 10);
+    let h2 = r2.planes[Plane::DmaRsp.idx()].flit_hops as f64;
+    let h16 = r16.planes[Plane::DmaRsp.idx()].flit_hops as f64;
+    assert!(
+        h16 / h2 < 4.0,
+        "8x consumers must cost << 8x hops with in-network fork: {h2} -> {h16}"
+    );
+}
+
+#[test]
+fn exceeding_mcast_capacity_is_rejected() {
+    let mut opts = Fig6Options::default();
+    opts.soc.noc.bitwidth = 64; // capacity 5
+    assert!(run_multicast(6, 4096, &opts).is_err());
+    assert!(run_multicast(5, 4096, &opts).is_ok());
+}
+
+#[test]
+fn unicast_equals_fanout_one() {
+    // wr_user == 1 is plain (enhanced) P2P: still verifies.
+    fanout(1, 8 << 10);
+}

@@ -1,0 +1,177 @@
+//! Flexible-P2P integration on the full SoC: mixed per-burst modes and
+//! mismatched producer/consumer burst shapes — the paper's §3 claims that
+//! have no figure of their own.
+
+use espsim::accel::traffic_gen::TgenArgs;
+use espsim::config::SocConfig;
+use espsim::coordinator::{App, Invocation, ProgramKind, Soc};
+
+const IN: u64 = 0x10_0000;
+const OUT: u64 = 0x20_0000;
+
+fn pattern(bytes: usize) -> Vec<u8> {
+    (0..bytes).map(|i| (i as u64 * 37 % 251) as u8).collect()
+}
+
+/// Producer streams with one burst size, consumer pulls with another; the
+/// length-carrying requests reconcile them (equal totals).
+fn run_mismatched(prod_burst: u32, cons_burst: u32, total: u32) -> anyhow::Result<()> {
+    let mut soc = Soc::new(SocConfig::small_3x3())?;
+    let data = pattern(total as usize);
+    soc.write_mem(IN, &data);
+    let producer = Invocation::tgen(
+        0,
+        TgenArgs {
+            total_bytes: total,
+            burst_bytes: prod_burst,
+            rd_user: 0,
+            wr_user: 1,
+            vaddr_in: IN,
+            vaddr_out: 0,
+        },
+    );
+    let consumer = Invocation::tgen(
+        1,
+        TgenArgs {
+            total_bytes: total,
+            burst_bytes: cons_burst,
+            rd_user: 1,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: OUT,
+        },
+    )
+    .with_src(1, 0);
+    App::new().phase(vec![producer, consumer]).launch(&mut soc)?;
+    soc.run(10_000_000)?;
+    anyhow::ensure!(soc.read_mem(OUT, total as usize) == data, "data mismatch");
+    Ok(())
+}
+
+#[test]
+fn equal_burst_shapes() {
+    run_mismatched(4096, 4096, 16 << 10).unwrap();
+}
+
+#[test]
+fn producer_larger_bursts() {
+    // Producer 4 KB bursts, consumer 1 KB bursts.
+    run_mismatched(4096, 1024, 16 << 10).unwrap();
+}
+
+#[test]
+fn consumer_larger_bursts() {
+    // Producer 1 KB bursts, consumer 4 KB bursts.
+    run_mismatched(1024, 4096, 16 << 10).unwrap();
+}
+
+#[test]
+fn coprime_burst_shapes() {
+    // 512 B vs 2 KB over 8 KB total.
+    run_mismatched(512, 2048, 8 << 10).unwrap();
+}
+
+/// One invocation mixing DMA reads (from memory) and a P2P-sourced read:
+/// the consumer's first half comes from the producer, the second half
+/// from memory — per-burst `user` switching within a single invocation.
+#[test]
+fn mixed_mode_within_one_invocation() {
+    use espsim::accel::{stage_program, Xfer};
+
+    let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+    let half = 8 << 10;
+    let p2p_part = pattern(half);
+    let mem_part: Vec<u8> = (0..half).map(|i| (i % 199) as u8).collect();
+    soc.write_mem(IN, &p2p_part); // producer streams this
+    soc.write_mem(IN + half as u64, &mem_part); // consumer DMAs this
+
+    let producer = Invocation::tgen(
+        0,
+        TgenArgs {
+            total_bytes: half as u32,
+            burst_bytes: 4096,
+            rd_user: 0,
+            wr_user: 1,
+            vaddr_in: IN,
+            vaddr_out: 0,
+        },
+    );
+    // Custom consumer: read half via P2P (user 1), half via DMA (user 0),
+    // then write everything to OUT.
+    let prog = stage_program(
+        &[
+            Xfer { vaddr: 0, plm: 0, len: half as u32, user: 1 },
+            Xfer { vaddr: IN + half as u64, plm: half as u32, len: half as u32, user: 0 },
+        ],
+        &[],
+        &[Xfer { vaddr: OUT, plm: 0, len: 2 * half as u32, user: 0 }],
+        4096,
+    );
+    let mut consumer = Invocation::tgen(
+        1,
+        TgenArgs {
+            total_bytes: 0,
+            burst_bytes: 1,
+            rd_user: 0,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: 0,
+        },
+    )
+    .with_src(1, 0);
+    consumer.program = ProgramKind::Custom(prog);
+    consumer.args = [0; 8];
+
+    App::new().phase(vec![producer, consumer]).launch(&mut soc).unwrap();
+    soc.run(10_000_000).unwrap();
+    assert_eq!(soc.read_mem(OUT, half), p2p_part, "P2P half");
+    assert_eq!(soc.read_mem(OUT + half as u64, half), mem_part, "DMA half");
+}
+
+/// Chained P2P: A -> B -> C, each stage pulling from the previous, only
+/// the tail writing to memory (a 3-stage pipeline in one phase).
+#[test]
+fn three_stage_p2p_chain() {
+    let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+    let total = 32 << 10;
+    let data = pattern(total);
+    soc.write_mem(IN, &data);
+    let a = Invocation::tgen(
+        0,
+        TgenArgs {
+            total_bytes: total as u32,
+            burst_bytes: 4096,
+            rd_user: 0,
+            wr_user: 1,
+            vaddr_in: IN,
+            vaddr_out: 0,
+        },
+    );
+    let b = Invocation::tgen(
+        1,
+        TgenArgs {
+            total_bytes: total as u32,
+            burst_bytes: 4096,
+            rd_user: 1,
+            wr_user: 1,
+            vaddr_in: 0,
+            vaddr_out: 0,
+        },
+    )
+    .with_src(1, 0);
+    let c = Invocation::tgen(
+        2,
+        TgenArgs {
+            total_bytes: total as u32,
+            burst_bytes: 4096,
+            rd_user: 1,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: OUT,
+        },
+    )
+    .with_src(1, 1);
+    App::new().phase(vec![a, b, c]).launch(&mut soc).unwrap();
+    soc.run(10_000_000).unwrap();
+    assert_eq!(soc.read_mem(OUT, total), data);
+}

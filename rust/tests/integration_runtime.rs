@@ -1,0 +1,171 @@
+//! Runtime integration: AOT-compiled JAX/Pallas artifacts loaded through
+//! PJRT and executed as accelerator datapaths — numerics verified against
+//! the python-side oracle dumps, both standalone and inside a simulated
+//! accelerator invocation.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so cargo test
+//! works before the first build).
+
+
+use espsim::accel::{matmul_cycles, stage_program, DpCall, DpKind, Xfer};
+use espsim::config::SocConfig;
+use espsim::coordinator::{App, Invocation, ProgramKind, Soc};
+use espsim::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+#[test]
+fn stage0_matches_oracle_shapes() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("stage0_linear_relu").unwrap();
+    let m = rt.manifest().pipeline.clone();
+    let x = rt.load_f32_tensor("input_x").unwrap();
+    let w0 = rt.load_f32_tensor("w0").unwrap();
+    let b0 = rt.load_f32_tensor("b0").unwrap();
+    let out = exe.execute_f32(&[&x, &w0, &b0]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), m.batch * m.d_hid);
+    // relu output: non-negative, not all zero.
+    assert!(out[0].iter().all(|&v| v >= 0.0));
+    assert!(out[0].iter().any(|&v| v > 0.0));
+}
+
+#[test]
+fn full_pipeline_on_host_matches_expected() {
+    // Chain the compiled stages on the host (no SoC): stage0 -> 4 heads ->
+    // combiner must equal the jax oracle's expected_out dump.
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().pipeline.clone();
+    let x = rt.load_f32_tensor("input_x").unwrap();
+    let stage0 = rt.load("stage0_linear_relu").unwrap();
+    let head = rt.load("stage_head").unwrap();
+    let comb = rt.load("stage_combiner").unwrap();
+
+    let y = stage0
+        .execute_f32(&[&x, &rt.load_f32_tensor("w0").unwrap(), &rt.load_f32_tensor("b0").unwrap()])
+        .unwrap()
+        .remove(0);
+    let mut heads = Vec::new();
+    for h in 0..m.n_heads {
+        let wh = rt.load_f32_tensor(&format!("wh{h}")).unwrap();
+        let bh = rt.load_f32_tensor(&format!("bh{h}")).unwrap();
+        heads.push(head.execute_f32(&[&y, &wh, &bh]).unwrap().remove(0));
+    }
+    // Concatenate along features: row-major (batch, n_heads * d_head).
+    let mut cat = vec![0f32; m.batch * m.n_heads * m.d_head];
+    for b in 0..m.batch {
+        for (h, hv) in heads.iter().enumerate() {
+            let dst = b * m.n_heads * m.d_head + h * m.d_head;
+            cat[dst..dst + m.d_head]
+                .copy_from_slice(&hv[b * m.d_head..(b + 1) * m.d_head]);
+        }
+    }
+    let out = comb
+        .execute_f32(&[
+            &cat,
+            &rt.load_f32_tensor("wc").unwrap(),
+            &rt.load_f32_tensor("bc").unwrap(),
+        ])
+        .unwrap()
+        .remove(0);
+    let expected = rt.load_f32_tensor("expected_out").unwrap();
+    assert_eq!(out.len(), expected.len());
+    let max_err = out
+        .iter()
+        .zip(&expected)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "pipeline numerics diverge: max abs err {max_err}");
+}
+
+/// The three-layer story end-to-end: a compiled Pallas stage runs as the
+/// datapath of a *simulated accelerator invocation* — weights DMA'd from
+/// simulated DRAM into the PLM, RunDp executing the PJRT artifact, output
+/// DMA'd back to simulated DRAM.
+#[test]
+fn compiled_stage_as_accelerator_datapath() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest().pipeline.clone();
+    let exe = rt.load("stage0_linear_relu").unwrap();
+
+    let mut cfg = SocConfig::small_3x3();
+    cfg.acc.plm_bytes = 1 << 20; // fit x + w0 + b0 + out
+    cfg.acc.max_burst_bytes = 16 << 10;
+    let mut soc = Soc::new(cfg).unwrap();
+
+    let as_bytes = |v: &[f32]| v.iter().flat_map(|f| f.to_le_bytes()).collect::<Vec<u8>>();
+    let x = rt.load_f32_tensor("input_x").unwrap();
+    let w0 = rt.load_f32_tensor("w0").unwrap();
+    let b0 = rt.load_f32_tensor("b0").unwrap();
+    let x_b = as_bytes(&x);
+    let w_b = as_bytes(&w0);
+    let b_b = as_bytes(&b0);
+    soc.write_mem(0x10_0000, &x_b);
+    soc.write_mem(0x20_0000, &w_b);
+    soc.write_mem(0x30_0000, &b_b);
+
+    // PLM layout: x @ 0, w @ |x|, b @ |x|+|w|, out after that.
+    let (xo, wo, bo) = (0u32, x_b.len() as u32, (x_b.len() + w_b.len()) as u32);
+    let oo = bo + b_b.len() as u32;
+    let out_len = (m.batch * m.d_hid * 4) as u32;
+    let dp = DpCall {
+        kind: DpKind::Xla(exe),
+        inputs: vec![(xo, x_b.len() as u32), (wo, w_b.len() as u32), (bo, b_b.len() as u32)],
+        out_offset: oo,
+        cycles: matmul_cycles(m.batch as u64, m.d_in as u64, m.d_hid as u64, 256),
+    };
+    let prog = stage_program(
+        &[
+            Xfer { vaddr: 0x10_0000, plm: xo, len: x_b.len() as u32, user: 0 },
+            Xfer { vaddr: 0x20_0000, plm: wo, len: w_b.len() as u32, user: 0 },
+            Xfer { vaddr: 0x30_0000, plm: bo, len: b_b.len() as u32, user: 0 },
+        ],
+        &[0],
+        &[Xfer { vaddr: 0x40_0000, plm: oo, len: out_len, user: 0 }],
+        16 << 10,
+    );
+    let mut inv = Invocation::tgen(
+        0,
+        espsim::accel::TgenArgs {
+            total_bytes: 0,
+            burst_bytes: 1,
+            rd_user: 0,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: 0,
+        },
+    );
+    inv.program = ProgramKind::Custom(prog);
+    inv.args = [0; 8];
+    inv.dp_calls = vec![dp];
+    App::new().phase(vec![inv]).launch(&mut soc).unwrap();
+    let cycles = soc.run(50_000_000).unwrap();
+
+    // Compare against running the artifact directly.
+    let rt2 = Runtime::open(Runtime::default_dir()).unwrap();
+    let want = rt2
+        .load("stage0_linear_relu")
+        .unwrap()
+        .execute_f32(&[&x, &w0, &b0])
+        .unwrap()
+        .remove(0);
+    let got_bytes = soc.read_mem(0x40_0000, out_len as usize);
+    let got: Vec<f32> = got_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert_eq!(got, want, "datapath output through the simulated SoC");
+    // Timing includes the analytic MXU estimate.
+    assert!(cycles > dp_cycles_floor(&m), "compute cycles charged");
+}
+
+fn dp_cycles_floor(m: &espsim::runtime::PipelineMeta) -> u64 {
+    matmul_cycles(m.batch as u64, m.d_in as u64, m.d_hid as u64, 256)
+}

@@ -1,0 +1,185 @@
+//! Property tests over the whole coordinator: randomized dataflow apps
+//! (random placements, fan-outs, sizes, burst shapes, platforms) must
+//! always quiesce with intact data; simulations must be deterministic.
+
+use espsim::accel::traffic_gen::TgenArgs;
+use espsim::config::SocConfig;
+use espsim::coordinator::{App, Invocation, Soc};
+use espsim::util::Prng;
+
+const IN: u64 = 0x10_0000;
+
+fn pattern(rng: &mut Prng, n: usize) -> Vec<u8> {
+    rng.bytes(n)
+}
+
+/// Random producer + fan-out apps on random platforms: every consumer's
+/// output must equal the producer's input and the SoC must quiesce.
+#[test]
+fn prop_random_fanout_apps_always_verify() {
+    let mut rng = Prng::new(0xC0FFEE);
+    for case in 0..25 {
+        let cfg = if rng.chance(0.5) { SocConfig::paper_3x4() } else { SocConfig::small_3x3() };
+        let max_fanout = (cfg.acc_sockets().len() - 1).min(cfg.mcast_capacity());
+        let n = rng.range(1, max_fanout as u64) as usize;
+        let bursts = rng.range(1, 8) as u32;
+        let prod_burst = *rng.pick(&[1024u32, 2048, 4096]);
+        let cons_burst = *rng.pick(&[512u32, 1024, 4096]);
+        let total_lcm = 4096 * bursts; // divisible by all burst choices
+        let mut soc = Soc::new(cfg).unwrap();
+        let data = pattern(&mut rng, total_lcm as usize);
+        soc.write_mem(IN, &data);
+        let mut invs = vec![Invocation::tgen(
+            0,
+            TgenArgs {
+                total_bytes: total_lcm,
+                burst_bytes: prod_burst,
+                rd_user: 0,
+                wr_user: n as u16,
+                vaddr_in: IN,
+                vaddr_out: 0,
+            },
+        )];
+        for c in 0..n {
+            invs.push(
+                Invocation::tgen(
+                    (c + 1) as u16,
+                    TgenArgs {
+                        total_bytes: total_lcm,
+                        burst_bytes: cons_burst,
+                        rd_user: 1,
+                        wr_user: 0,
+                        vaddr_in: 0,
+                        vaddr_out: 0x100_0000 + c as u64 * 0x20_0000,
+                    },
+                )
+                .with_src(1, 0),
+            );
+        }
+        App::new().phase(invs).launch(&mut soc).unwrap();
+        soc.run(200_000_000).unwrap_or_else(|e| {
+            panic!("case {case} (n={n} bursts={bursts} pb={prod_burst} cb={cons_burst}): {e}")
+        });
+        for c in 0..n {
+            assert_eq!(
+                soc.read_mem(0x100_0000 + c as u64 * 0x20_0000, total_lcm as usize),
+                data,
+                "case {case} consumer {c}"
+            );
+        }
+    }
+}
+
+/// Identical app + config => identical cycle count and identical reports.
+#[test]
+fn prop_soc_runs_are_deterministic() {
+    let run = |seed: u64| {
+        let mut rng = Prng::new(seed);
+        let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+        let total = 16 << 10;
+        soc.write_mem(IN, &rng.bytes(total));
+        let invs = vec![
+            Invocation::tgen(
+                0,
+                TgenArgs {
+                    total_bytes: total as u32,
+                    burst_bytes: 4096,
+                    rd_user: 0,
+                    wr_user: 2,
+                    vaddr_in: IN,
+                    vaddr_out: 0,
+                },
+            ),
+            Invocation::tgen(
+                1,
+                TgenArgs {
+                    total_bytes: total as u32,
+                    burst_bytes: 2048,
+                    rd_user: 1,
+                    wr_user: 0,
+                    vaddr_in: 0,
+                    vaddr_out: 0x100_0000,
+                },
+            )
+            .with_src(1, 0),
+            Invocation::tgen(
+                2,
+                TgenArgs {
+                    total_bytes: total as u32,
+                    burst_bytes: 4096,
+                    rd_user: 1,
+                    wr_user: 0,
+                    vaddr_in: 0,
+                    vaddr_out: 0x120_0000,
+                },
+            )
+            .with_src(1, 0),
+        ];
+        App::new().phase(invs).launch(&mut soc).unwrap();
+        let cycles = soc.run(100_000_000).unwrap();
+        let report = soc.report();
+        (cycles, report.total_flit_hops(), report.mem.read_bytes, report.cpu.reg_writes)
+    };
+    assert_eq!(run(11), run(11));
+    assert_eq!(run(23), run(23));
+}
+
+/// Phase barriers are respected: in a 2-phase app, no phase-2 invocation
+/// starts before every phase-1 invocation ends.
+#[test]
+fn prop_phase_barriers_order_invocations() {
+    let mut rng = Prng::new(0x5EED);
+    for _ in 0..10 {
+        let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+        let total = 4096 * rng.range(1, 4) as u32;
+        soc.write_mem(IN, &rng.bytes(total as usize));
+        let mk = |acc: u16, out: u64| {
+            Invocation::tgen(
+                acc,
+                TgenArgs {
+                    total_bytes: total,
+                    burst_bytes: 4096,
+                    rd_user: 0,
+                    wr_user: 0,
+                    vaddr_in: IN,
+                    vaddr_out: out,
+                },
+            )
+        };
+        let p1: Vec<_> = (0..3).map(|i| mk(i, 0x100_0000 + i as u64 * 0x20_0000)).collect();
+        let p2: Vec<_> = (3..5).map(|i| mk(i, 0x100_0000 + i as u64 * 0x20_0000)).collect();
+        App::new().phase(p1).phase(p2).launch(&mut soc).unwrap();
+        soc.run(100_000_000).unwrap();
+        let report = soc.report();
+        let phase1_end =
+            report.invocations.iter().filter(|(a, _, _)| *a < 3).map(|(_, _, e)| *e).max().unwrap();
+        let phase2_start =
+            report.invocations.iter().filter(|(a, _, _)| *a >= 3).map(|(_, s, _)| *s).min().unwrap();
+        assert!(
+            phase2_start > phase1_end,
+            "phase 2 started at {phase2_start} before phase 1 ended at {phase1_end}"
+        );
+    }
+}
+
+/// Random dataflow DAGs (chains/trees/diamonds/random) lowered to both
+/// edge policies always quiesce and verify.
+#[test]
+fn prop_random_dataflow_graphs_run_both_policies() {
+    use espsim::coordinator::workloads::{Dataflow, EdgePolicy, Shape};
+    for seed in 0..6u64 {
+        let shapes = [Shape::Chain(4), Shape::Tree(6), Shape::Diamond(4), Shape::Random(8)];
+        let shape = shapes[seed as usize % shapes.len()];
+        let g = Dataflow::generate(shape, 16 << 10, 4096, seed);
+        let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+        g.run(&mut soc, EdgePolicy::Memory)
+            .unwrap_or_else(|e| panic!("seed {seed} {shape:?} memory: {e}"));
+        let p2p_ok =
+            g.nodes.iter().all(|n| n.inputs.len() <= 1 || g.fanout(n.id) == 0);
+        if p2p_ok {
+            let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+            g.run(&mut soc, EdgePolicy::P2p)
+                .unwrap_or_else(|e| panic!("seed {seed} {shape:?} p2p: {e}"));
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Property tests for the NoC (in-tree PRNG; proptest is unavailable
+//! offline).  Each property runs across many randomized cases with a
+//! deterministic seed so failures reproduce exactly.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use espsim::noc::{
+    hop_count, partition_dests, xy_dir, DestList, Dir, Mesh, MeshParams, Message, MsgKind,
+};
+use espsim::util::Prng;
+
+#[test]
+fn prop_xy_routing_always_terminates_and_matches_hop_count() {
+    let mut rng = Prng::new(0xA11CE);
+    for _ in 0..2000 {
+        let w = rng.range(2, 8) as u8;
+        let h = rng.range(2, 8) as u8;
+        let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+        let dst = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+        let mut cur = src;
+        let mut steps = 0;
+        while cur != dst {
+            let dir = xy_dir(cur, dst);
+            assert_ne!(dir, Dir::Local);
+            cur = match dir {
+                Dir::North => (cur.0 - 1, cur.1),
+                Dir::South => (cur.0 + 1, cur.1),
+                Dir::East => (cur.0, cur.1 + 1),
+                Dir::West => (cur.0, cur.1 - 1),
+                Dir::Local => unreachable!(),
+            };
+            steps += 1;
+            assert!(steps <= 14, "path too long");
+        }
+        assert_eq!(steps, hop_count(src, dst));
+    }
+}
+
+#[test]
+fn prop_partition_covers_each_dest_exactly_once() {
+    let mut rng = Prng::new(0xBEEF);
+    for _ in 0..2000 {
+        let w = rng.range(2, 8) as u8;
+        let h = rng.range(2, 8) as u8;
+        let cur = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+        let n = rng.range(1, 16) as usize;
+        let mut dests = DestList::new();
+        for _ in 0..n {
+            dests.push((rng.below(h as u64) as u8, rng.below(w as u64) as u8));
+        }
+        let (mask, parts) = partition_dests(cur, &dests);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, dests.len(), "every dest in exactly one branch");
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(!p.is_empty(), mask & (1 << i) != 0, "mask consistent");
+            for d in p.iter() {
+                assert_eq!(xy_dir(cur, d).idx(), i, "dest in its own direction's branch");
+            }
+        }
+    }
+}
+
+/// Random multi-message workloads: every message is delivered to every
+/// destination exactly once with an intact payload, and the mesh drains
+/// (no deadlock, no loss) — under random mesh shapes, bitwidths, queue
+/// depths and payload sizes.
+#[test]
+fn prop_random_workloads_deliver_exactly_once() {
+    let mut rng = Prng::new(0xD00D);
+    for case in 0..60 {
+        let w = rng.range(2, 6) as u8;
+        let h = rng.range(2, 6) as u8;
+        let p = MeshParams {
+            width: w,
+            height: h,
+            flit_bytes: *rng.pick(&[8u32, 16, 32]),
+            queue_depth: rng.range(2, 6) as usize,
+        };
+        let mut mesh = Mesh::new(p);
+        // expected[tile] -> list of (seq, payload byte, len)
+        let mut expected: HashMap<(u8, u8), Vec<(u32, u8, usize)>> = HashMap::new();
+        let n_msgs = rng.range(1, 12);
+        for seq in 0..n_msgs {
+            let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+            let fanout = rng.range(1, 5) as usize;
+            let mut dests = DestList::new();
+            let mut seen = Vec::new();
+            for _ in 0..fanout {
+                let d = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+                if !seen.contains(&d) {
+                    seen.push(d);
+                    dests.push(d);
+                }
+            }
+            let fill = rng.next_u64() as u8;
+            let len = rng.range(1, 6000) as usize;
+            mesh.send(
+                src,
+                Message::multicast(
+                    src,
+                    dests,
+                    MsgKind::P2pData { seq: seq as u32, prod_slot: 0 },
+                    Arc::new(vec![fill; len]),
+                ),
+            );
+            for d in seen {
+                expected.entry(d).or_default().push((seq as u32, fill, len));
+            }
+        }
+        let mut t = 0;
+        while !mesh.is_idle() {
+            mesh.tick(t);
+            t += 1;
+            assert!(t < 2_000_000, "case {case}: mesh did not drain");
+        }
+        for (tile, mut want) in expected {
+            let mut got = Vec::new();
+            while let Some(msg) = mesh.recv(tile) {
+                let MsgKind::P2pData { seq, .. } = msg.kind else { panic!() };
+                assert!(msg.payload.iter().all(|&b| b == msg.payload[0]), "payload corrupt");
+                got.push((seq, msg.payload[0], msg.payload.len()));
+            }
+            want.sort();
+            got.sort();
+            assert_eq!(got, want, "case {case} tile {tile:?}");
+        }
+    }
+}
+
+/// Determinism: the same workload produces identical flit-hop counts and
+/// drain times on every run.
+#[test]
+fn prop_mesh_is_deterministic() {
+    for seed in [1u64, 7, 42] {
+        let run = |seed: u64| {
+            let mut rng = Prng::new(seed);
+            let mut mesh =
+                Mesh::new(MeshParams { width: 4, height: 3, flit_bytes: 32, queue_depth: 4 });
+            for seq in 0..10u32 {
+                let src = (rng.below(3) as u8, rng.below(4) as u8);
+                let dst = (rng.below(3) as u8, rng.below(4) as u8);
+                mesh.send(
+                    src,
+                    Message::data(
+                        src,
+                        dst,
+                        MsgKind::P2pData { seq, prod_slot: 0 },
+                        Arc::new(vec![0; rng.range(1, 2000) as usize]),
+                    ),
+                );
+            }
+            let mut t = 0;
+            while !mesh.is_idle() {
+                mesh.tick(t);
+                t += 1;
+            }
+            (t, mesh.stats.flit_hops)
+        };
+        assert_eq!(run(seed), run(seed));
+    }
+}

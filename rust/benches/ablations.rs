@@ -11,21 +11,28 @@
 //! cargo bench --bench ablations
 //! ```
 
+#![allow(clippy::field_reassign_with_default)]
+
 use espsim::config::SocConfig;
 use espsim::coordinator::experiments::{run_fig6_point, run_multicast, Fig6Options};
 use espsim::coordinator::Soc;
 use espsim::noc::{DestList, Mesh, MeshParams, Message, MsgKind};
-use espsim::util::bench::Table;
+use espsim::util::bench::{measure, time_once, BenchJson, Table};
 use std::sync::Arc;
 
-fn buffering() {
+fn buffering(sink: &mut BenchJson) {
     println!("== ablation 1: traffic-generator buffering (8 consumers) ==");
     let t = Table::new(&["bytes", "double-buf", "single-buf", "penalty"], &[10, 12, 12, 9]);
     for bytes in [16u32 << 10, 128 << 10] {
-        let db = run_multicast(8, bytes, &Fig6Options::default()).unwrap();
+        // The perf-tracking anchor point (128 KB row = the acceptance
+        // metric): measured with a warm-up + median so the recorded
+        // cycles/sec is not skewed by first-run cold costs.
+        let (db, db_t) = measure(3, || run_multicast(8, bytes, &Fig6Options::default()).unwrap());
+        sink.record(&format!("ablation1_mcast_8c_{bytes}B"), db, db_t.median_s);
         let mut o = Fig6Options::default();
         o.single_buffered = true;
-        let sb = run_multicast(8, bytes, &o).unwrap();
+        let (sb, sb_t) = measure(3, || run_multicast(8, bytes, &o).unwrap());
+        sink.record(&format!("ablation1_mcast_single_8c_{bytes}B"), sb, sb_t.median_s);
         t.row(&[
             format!("{bytes}"),
             format!("{db}"),
@@ -35,13 +42,18 @@ fn buffering() {
     }
 }
 
-fn burst_size() {
+fn burst_size(sink: &mut BenchJson) {
     println!("\n== ablation 2: burst size (4 consumers, 64 KB) ==");
     let t = Table::new(&["burst", "baseline-cy", "multicast-cy", "speedup"], &[8, 12, 12, 8]);
     for burst in [512u32, 1024, 2048, 4096] {
         let mut o = Fig6Options::default();
         o.burst_bytes = burst;
-        let p = run_fig6_point(4, 64 << 10, &o).unwrap();
+        let (p, wall) = time_once(|| run_fig6_point(4, 64 << 10, &o).unwrap());
+        sink.record(
+            &format!("ablation2_burst{burst}_4c_64KB"),
+            p.baseline_cycles + p.multicast_cycles,
+            wall,
+        );
         t.row(&[
             format!("{burst}"),
             format!("{}", p.baseline_cycles),
@@ -51,7 +63,7 @@ fn burst_size() {
     }
 }
 
-fn bitwidth() {
+fn bitwidth(sink: &mut BenchJson) {
     println!("\n== ablation 3: NoC bitwidth (4 consumers, 64 KB) ==");
     let t = Table::new(
         &["bitwidth", "mcast-cap", "baseline-cy", "multicast-cy", "speedup"],
@@ -60,7 +72,12 @@ fn bitwidth() {
     for bits in [64u32, 128, 256] {
         let mut o = Fig6Options::default();
         o.soc.noc.bitwidth = bits;
-        let p = run_fig6_point(4, 64 << 10, &o).unwrap();
+        let (p, wall) = time_once(|| run_fig6_point(4, 64 << 10, &o).unwrap());
+        sink.record(
+            &format!("ablation3_{bits}bit_4c_64KB"),
+            p.baseline_cycles + p.multicast_cycles,
+            wall,
+        );
         t.row(&[
             format!("{bits}"),
             format!("{}", o.soc.mcast_capacity()),
@@ -213,11 +230,13 @@ fn workload_shapes() {
 }
 
 fn main() {
-    buffering();
-    burst_size();
-    bitwidth();
+    let mut sink = BenchJson::from_args("ablations");
+    buffering(&mut sink);
+    burst_size(&mut sink);
+    bitwidth(&mut sink);
     host_model();
     fork_vs_unicast();
     sync_latency();
     workload_shapes();
+    sink.finish();
 }

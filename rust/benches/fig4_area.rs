@@ -7,7 +7,7 @@
 //! ```
 
 use espsim::area::{fig4_sweep, RouterAreaModel};
-use espsim::util::bench::{fmt_secs, measure, Table};
+use espsim::util::bench::{fmt_secs, measure, BenchJson, Table};
 
 fn main() {
     println!("== Fig. 4: router area (um^2, 12nm-calibrated model) ==\n");
@@ -48,4 +48,9 @@ fn main() {
         fmt_secs(timing.median_s),
         timing.iters
     );
+    // "cycles" here counts evaluated configurations (the analytic model has
+    // no simulated time); recorded for trajectory tracking all the same.
+    let mut sink = BenchJson::from_args("fig4_area");
+    sink.record("fig4_sweep", points as u64, timing.median_s);
+    sink.finish();
 }

@@ -11,10 +11,14 @@
 use espsim::coordinator::experiments::{
     paper_consumer_counts, paper_data_sizes, run_fig6_point, Fig6Options,
 };
-use espsim::util::bench::{fmt_secs, measure, Table};
+use espsim::util::bench::{fmt_secs, measure, BenchJson, Table};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    // A --quick run must not overwrite the full sweep's perf-trajectory
+    // records, so it gets its own bench section in BENCH_noc.json.
+    let mut sink =
+        BenchJson::from_args(if quick { "fig6_speedup_quick" } else { "fig6_speedup" });
     let opts = Fig6Options::default();
     let sizes = if quick { vec![4 << 10, 64 << 10] } else { paper_data_sizes() };
 
@@ -33,6 +37,11 @@ fn main() {
             let (p, timing) = measure(iters, || run_fig6_point(n, bytes, &opts).unwrap());
             total_sim_cycles += p.baseline_cycles + p.multicast_cycles;
             total_wall += timing.median_s;
+            sink.record(
+                &format!("fig6_{n}c_{bytes}B"),
+                p.baseline_cycles + p.multicast_cycles,
+                timing.median_s,
+            );
             t.row(&[
                 format!("{n}"),
                 format!("{bytes}"),
@@ -50,4 +59,6 @@ fn main() {
     println!("  16 consumers, 1 MB: 3.03x  (203% speedup, plateau at 1 MB)");
     println!("\nsimulator throughput: {:.1} M simulated cycles / wall-second",
         total_sim_cycles as f64 / total_wall.max(1e-9) / 1e6);
+    sink.record("fig6_total", total_sim_cycles, total_wall);
+    sink.finish();
 }

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::util::Json;
 
-use crate::noc::{header_dest_capacity, Coord, MAX_DESTS};
+use crate::noc::{header_dest_capacity, Coord, MAX_DESTS, MAX_QUEUE_DEPTH};
 
 /// What occupies one mesh tile.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -450,6 +450,10 @@ impl SocConfig {
             "NoC bitwidth must be 64, 128, or 256"
         );
         ensure!(self.noc.queue_depth >= 2, "queue depth >= 2 for wormhole progress");
+        ensure!(
+            self.noc.queue_depth <= MAX_QUEUE_DEPTH,
+            "queue depth <= {MAX_QUEUE_DEPTH} (router port queues are inline rings)"
+        );
         ensure!(self.noc.max_mcast_dests <= MAX_DESTS, "multicast cap is {MAX_DESTS}");
         for t in &self.tiles {
             if let TileKind::Acc { accs } = t {

@@ -20,6 +20,15 @@
 //! oracle.  See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for
 //! the reproduced figures.
 
+// Cycle-level simulator code is index-coupled by nature (parallel arrays of
+// routers/ports/tiles addressed by the same indices), and the in-tree JSON
+// substrate predates these lints; keep the pragmatic allows crate-wide so
+// `clippy -D warnings` guards the lints we do care about.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::inherent_to_string)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+
 pub mod accel;
 pub mod area;
 pub mod coherence;

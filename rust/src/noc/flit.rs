@@ -235,33 +235,59 @@ impl Message {
     }
 }
 
-/// One flit in flight.  Body flits reference the message payload rather
-/// than carrying byte copies; the *timing* of a transfer is governed by the
-/// flit count, the *data* rides in the `Arc`.
-#[derive(Debug, Clone)]
+/// Identifies an in-flight packet in a plane's message slab (see
+/// `mesh::PacketSlab`).
+pub type PktId = u32;
+
+/// One flit in flight — 12 bytes, `Copy`, no heap references.
+///
+/// The seed model's flit dragged the full 34-byte [`DestList`] plus an
+/// `Arc<Message>` (an atomic refcount bump per hop).  Now the message is
+/// interned once per packet in the plane's slab and flits carry only the
+/// `u32` packet id; the id resolves back to the `Arc<Message>` at ejection.
+/// Headers no longer carry an explicit destination list either: XY routing
+/// is deterministic, so the branch destination set at any router is
+/// recomputed from the interned `(src, dests)` pair (see
+/// [`super::routing::branch_mask`]) — body flits never needed it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Flit {
-    /// Header flit (carries `dests` and allocates the wormhole path).
-    pub is_head: bool,
-    /// Last flit of the packet (releases the path).
-    pub is_tail: bool,
-    /// Body flit sequence number (0 for the header).
+    /// [`Flit::HEAD`] | [`Flit::TAIL`] flag bits.
+    pub flags: u8,
+    /// Flit sequence number within the packet (0 for the header).
     pub seq: u32,
-    /// Remaining destinations for this branch (meaningful on the header).
-    pub dests: DestList,
-    /// The message this flit belongs to.
-    pub msg: Arc<Message>,
+    /// Slab id of the message this flit belongs to.
+    pub pkt: PktId,
 }
 
 impl Flit {
-    /// Build the `i`-th flit (of `total`) for a message.
-    pub fn of_message(msg: &Arc<Message>, i: u32, total: u32) -> Self {
-        Flit {
-            is_head: i == 0,
-            is_tail: i + 1 == total,
-            seq: i,
-            dests: msg.dests,
-            msg: msg.clone(),
+    /// Flag bit: header flit (allocates the wormhole path).
+    pub const HEAD: u8 = 1 << 0;
+    /// Flag bit: tail flit (releases the path, triggers ejection).
+    pub const TAIL: u8 = 1 << 1;
+
+    /// Build the `i`-th flit (of `total`) for packet `pkt`.
+    #[inline]
+    pub fn new(pkt: PktId, i: u32, total: u32) -> Self {
+        let mut flags = 0;
+        if i == 0 {
+            flags |= Self::HEAD;
         }
+        if i + 1 == total {
+            flags |= Self::TAIL;
+        }
+        Flit { flags, seq: i, pkt }
+    }
+
+    /// Header flit?
+    #[inline]
+    pub fn is_head(self) -> bool {
+        self.flags & Self::HEAD != 0
+    }
+
+    /// Tail flit?
+    #[inline]
+    pub fn is_tail(self) -> bool {
+        self.flags & Self::TAIL != 0
     }
 }
 
@@ -298,7 +324,8 @@ mod tests {
 
     #[test]
     fn flit_count_includes_header() {
-        let msg = Message::ctrl((0, 0), (1, 1), MsgKind::P2pReq { len: 64, prod_slot: 0, cons_slot: 0 });
+        let msg =
+            Message::ctrl((0, 0), (1, 1), MsgKind::P2pReq { len: 64, prod_slot: 0, cons_slot: 0 });
         assert_eq!(msg.flit_count(32), 1);
         let data = Message::data(
             (0, 0),
@@ -320,17 +347,31 @@ mod tests {
 
     #[test]
     fn flit_head_tail_flags() {
-        let msg = Arc::new(Message::data(
+        let msg = Message::data(
             (0, 0),
             (1, 1),
             MsgKind::P2pData { seq: 0, prod_slot: 0 },
             Arc::new(vec![0u8; 64]),
-        ));
+        );
         let total = msg.flit_count(32);
         assert_eq!(total, 3);
-        let f0 = Flit::of_message(&msg, 0, total);
-        let f2 = Flit::of_message(&msg, 2, total);
-        assert!(f0.is_head && !f0.is_tail);
-        assert!(!f2.is_head && f2.is_tail);
+        let f0 = Flit::new(7, 0, total);
+        let f1 = Flit::new(7, 1, total);
+        let f2 = Flit::new(7, 2, total);
+        assert!(f0.is_head() && !f0.is_tail());
+        assert!(!f1.is_head() && !f1.is_tail());
+        assert!(!f2.is_head() && f2.is_tail());
+        assert_eq!((f0.pkt, f2.seq), (7, 2));
+    }
+
+    #[test]
+    fn flit_is_small_and_copy() {
+        // The whole point of the slim flit: it must stay pocket-sized so
+        // ring-buffer slots are cache-friendly.
+        assert!(std::mem::size_of::<Flit>() <= 12);
+        let f = Flit::new(0, 0, 1);
+        let g = f; // Copy, no clone needed
+        assert_eq!(f, g);
+        assert!(f.is_head() && f.is_tail()); // single-flit packet
     }
 }

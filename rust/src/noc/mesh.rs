@@ -1,21 +1,30 @@
 //! A single physical NoC plane: 2D mesh of routers + tile inject/eject
 //! boundaries, advanced one cycle at a time.
 //!
-//! The tick is plan/apply: first every router (immutable pass) decides which
-//! input ports win which output ports this cycle — including multicast forks
-//! that claim several output ports at once — then all planned moves commit.
-//! Flits are stamped with their arrival cycle so a flit traverses at most
-//! one router per cycle, giving the ESP NoC's one-cycle-per-hop (lookahead)
-//! timing.
+//! The tick is plan/apply: first every *active* router (immutable pass)
+//! decides which input ports win which output ports this cycle — including
+//! multicast forks that claim several output ports at once — then all
+//! planned moves commit.  Flits are stamped with their arrival cycle so a
+//! flit traverses at most one router per cycle, giving the ESP NoC's
+//! one-cycle-per-hop (lookahead) timing.
+//!
+//! The scheduler is **activity-driven**: per-cycle cost scales with
+//! in-flight traffic, not mesh area.  A sorted worklist of routers with
+//! queued flits drives the plan pass (an idle 8x8 plane costs ~nothing), a
+//! second worklist drives injection, `planned` scratch is cleared only
+//! where it was dirtied, and the round-robin pointer — identical across
+//! routers in the seed model — is a single mesh-level counter.  Messages
+//! are interned once in a [`PacketSlab`] and flits carry only a `u32`
+//! packet id; the scheduling order (ascending router index) matches the
+//! seed's full-mesh scan exactly, so results are cycle-for-cycle identical
+//! (asserted by `tests/prop_mesh_equiv.rs`).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use super::flit::{Coord, Dir, Flit, Message};
-#[cfg(test)]
-use super::flit::DestList;
-use super::router::{Move, Router, StampedFlit};
-use super::routing::{neighbor, partition_dests};
+use super::flit::{Coord, DestList, Dir, Flit, Message, PktId};
+use super::router::{Move, Router, Slot, MAX_QUEUE_DEPTH};
+use super::routing::{branch_mask, neighbor};
 
 /// Static parameters of one plane.
 #[derive(Debug, Clone, Copy)]
@@ -26,7 +35,7 @@ pub struct MeshParams {
     pub height: u8,
     /// Payload bytes carried per body flit (= NoC bitwidth / 8).
     pub flit_bytes: u32,
-    /// Input-queue depth per router port, in flits.
+    /// Input-queue depth per router port, in flits (<= [`MAX_QUEUE_DEPTH`]).
     pub queue_depth: usize,
 }
 
@@ -39,10 +48,129 @@ impl MeshParams {
 /// Packetizer state for one tile's injection port.
 #[derive(Debug, Default)]
 struct Inject {
-    /// Messages waiting to be serialized onto the local input port.
-    queue: VecDeque<Arc<Message>>,
-    /// (message, next flit index, total flits) currently streaming.
-    cur: Option<(Arc<Message>, u32, u32)>,
+    /// Packets waiting to be serialized onto the local input port.
+    queue: VecDeque<PktId>,
+    /// (packet, next flit index, total flits) currently streaming.
+    cur: Option<(PktId, u32, u32)>,
+}
+
+impl Inject {
+    fn pending(&self) -> bool {
+        self.cur.is_some() || !self.queue.is_empty()
+    }
+}
+
+/// In-flight messages, interned once per packet.  Flits address entries by
+/// [`PktId`]; the `Arc<Message>` is cloned only at ejection (and never
+/// per hop).  An entry is freed when its last live tail copy ejects —
+/// multicast forks duplicate tail flits, so the entry keeps a tail
+/// refcount; wormhole ordering guarantees every body flit of a branch
+/// ejects before that branch's tail.
+#[derive(Debug, Default)]
+struct PacketSlab {
+    entries: Vec<Option<PktEntry>>,
+    free: Vec<PktId>,
+}
+
+#[derive(Debug)]
+struct PktEntry {
+    msg: Arc<Message>,
+    /// Tile the packet was injected at — the root of its XY route tree.
+    /// Routing derives from this, not `msg.src`: the seed model routed
+    /// purely from the injection point, and a caller may (in principle)
+    /// stamp a `src` that differs from where it injects.
+    origin: Coord,
+    /// Live tail-flit copies of this packet in the network.
+    tails: u32,
+}
+
+impl PacketSlab {
+    fn insert(&mut self, msg: Arc<Message>, origin: Coord) -> PktId {
+        let e = PktEntry { msg, origin, tails: 1 };
+        if let Some(i) = self.free.pop() {
+            debug_assert!(self.entries[i as usize].is_none());
+            self.entries[i as usize] = Some(e);
+            i
+        } else {
+            self.entries.push(Some(e));
+            (self.entries.len() - 1) as PktId
+        }
+    }
+
+    #[inline]
+    fn msg(&self, pkt: PktId) -> &Arc<Message> {
+        &self.entries[pkt as usize].as_ref().expect("live packet").msg
+    }
+
+    /// `(injection origin, destination list)` — the route tree's key.
+    #[inline]
+    fn route(&self, pkt: PktId) -> (Coord, &DestList) {
+        let e = self.entries[pkt as usize].as_ref().expect("live packet");
+        (e.origin, &e.msg.dests)
+    }
+
+    /// A fork duplicated the packet's tail flit into `n` extra copies.
+    fn add_tails(&mut self, pkt: PktId, n: u32) {
+        self.entries[pkt as usize].as_mut().expect("live packet").tails += n;
+    }
+
+    /// Eject one tail copy, returning the message; the slot is freed (and
+    /// the `Arc` handed over rather than cloned) on the last one.
+    fn eject_tail(&mut self, pkt: PktId) -> Arc<Message> {
+        let e = self.entries[pkt as usize].as_mut().expect("live packet");
+        e.tails -= 1;
+        if e.tails == 0 {
+            let e = self.entries[pkt as usize].take().unwrap();
+            self.free.push(pkt);
+            e.msg
+        } else {
+            e.msg.clone()
+        }
+    }
+}
+
+/// A sorted worklist of router/tile indices with O(1) membership.  The
+/// plan pass must visit routers in ascending index order (downstream
+/// buffer reservations are first-come-first-served within a cycle, so
+/// iteration order is observable), hence sorted insertion rather than an
+/// unordered bag.
+#[derive(Debug, Default)]
+struct ActiveSet {
+    list: Vec<u32>,
+    member: Vec<bool>,
+}
+
+impl ActiveSet {
+    fn with_len(n: usize) -> Self {
+        Self { list: Vec::new(), member: vec![false; n] }
+    }
+
+    #[inline]
+    fn insert(&mut self, i: u32) {
+        if !self.member[i as usize] {
+            self.member[i as usize] = true;
+            let pos = self.list.binary_search(&i).unwrap_err();
+            self.list.insert(pos, i);
+        }
+    }
+
+    /// Worklist drained? (test-only invariant probe)
+    #[cfg(test)]
+    fn is_empty(&self) -> bool {
+        self.list.is_empty()
+    }
+
+    /// Drop entries failing `keep`, preserving order.
+    fn prune(&mut self, mut keep: impl FnMut(u32) -> bool) {
+        let member = &mut self.member;
+        self.list.retain(|&i| {
+            let k = keep(i);
+            if !k {
+                member[i as usize] = false;
+            }
+            k
+        });
+    }
 }
 
 /// Per-plane statistics.
@@ -64,16 +192,27 @@ pub struct Mesh {
     routers: Vec<Router>,
     inject: Vec<Inject>,
     eject: Vec<VecDeque<Arc<Message>>>,
+    /// In-flight messages, addressed by the flits' packet ids.
+    pkts: PacketSlab,
     /// Scratch: planned pushes into each router input port this cycle.
     planned: Vec<[u8; 5]>,
+    /// Router indices whose `planned` entry is dirty (cleared after apply,
+    /// so idle regions of the mesh are never touched).
+    planned_dirty: Vec<u32>,
+    /// Routers with queued flits, ascending (the activity worklist).
+    active: ActiveSet,
+    /// Tiles with messages queued or streaming at the injection port.
+    inj_active: ActiveSet,
+    /// Shared round-robin arbitration offset: in the seed model every
+    /// router's pointer starts at 0 and rotates once per non-idle tick, so
+    /// they are always equal — one counter replaces N.
+    rr: u8,
     /// Items in flight: flits in router/branch queues + messages waiting
     /// to inject.  O(1) idle detection and an early-out for idle planes.
     work: u64,
     /// Reused plan scratch (avoids two allocations per active cycle).
-    scratch_drains: Vec<(usize, usize)>,
+    scratch_drains: Vec<(u32, u8)>,
     scratch_moves: Vec<Move>,
-    /// Messages queued or streaming at injection ports.
-    inject_msgs: u64,
     /// Stats for this plane.
     pub stats: MeshStats,
 }
@@ -81,6 +220,11 @@ pub struct Mesh {
 impl Mesh {
     /// Build an idle mesh.
     pub fn new(p: MeshParams) -> Self {
+        assert!(
+            (1..=MAX_QUEUE_DEPTH).contains(&p.queue_depth),
+            "queue_depth {} outside 1..={MAX_QUEUE_DEPTH}",
+            p.queue_depth
+        );
         let n = p.n();
         let mut routers = Vec::with_capacity(n);
         for y in 0..p.height {
@@ -93,11 +237,15 @@ impl Mesh {
             routers,
             inject: (0..n).map(|_| Inject::default()).collect(),
             eject: (0..n).map(|_| VecDeque::new()).collect(),
+            pkts: PacketSlab::default(),
             planned: vec![[0; 5]; n],
+            planned_dirty: Vec::new(),
+            active: ActiveSet::with_len(n),
+            inj_active: ActiveSet::with_len(n),
+            rr: 0,
             work: 0,
             scratch_drains: Vec::new(),
             scratch_moves: Vec::new(),
-            inject_msgs: 0,
             stats: MeshStats::default(),
         }
     }
@@ -118,9 +266,10 @@ impl Mesh {
     pub fn send(&mut self, tile: Coord, msg: Message) {
         debug_assert!(!msg.dests.is_empty(), "message with no destinations");
         let i = self.idx(tile);
-        self.inject[i].queue.push_back(Arc::new(msg));
+        let pkt = self.pkts.insert(Arc::new(msg), tile);
+        self.inject[i].queue.push_back(pkt);
+        self.inj_active.insert(i as u32);
         self.work += 1;
-        self.inject_msgs += 1;
     }
 
     /// Pop the next fully-delivered message at `tile`, if any.
@@ -149,52 +298,50 @@ impl Mesh {
         if self.work == 0 {
             return; // idle plane: nothing can move
         }
-        self.planned.iter_mut().for_each(|p| *p = [0; 5]);
         let mut moved = false;
 
-        // --- Injection: stream one flit per tile into the local input port.
-        if self.inject_msgs > 0 {
-            for i in 0..self.routers.len() {
-                let depth_ok =
-                    self.routers[i].inq[Dir::Local.idx()].len() < self.p.queue_depth;
-                if !depth_ok {
-                    continue;
+        // --- Injection: stream one flit per pending tile into the local
+        // input port (worklist of tiles with queued/streaming messages).
+        for k in 0..self.inj_active.list.len() {
+            let i = self.inj_active.list[k] as usize;
+            if self.routers[i].inq[Dir::Local.idx()].len() >= self.p.queue_depth {
+                continue;
+            }
+            if self.inject[i].cur.is_none() {
+                if let Some(pkt) = self.inject[i].queue.pop_front() {
+                    let total = self.pkts.msg(pkt).flit_count(self.p.flit_bytes);
+                    self.inject[i].cur = Some((pkt, 0, total));
                 }
-                let inj = &mut self.inject[i];
-                if inj.cur.is_none() {
-                    if let Some(msg) = inj.queue.pop_front() {
-                        let total = msg.flit_count(self.p.flit_bytes);
-                        inj.cur = Some((msg, 0, total));
-                    }
-                }
-                if let Some((msg, next, total)) = inj.cur.take() {
-                    let flit = Flit::of_message(&msg, next, total);
-                    self.routers[i].inq[Dir::Local.idx()]
-                        .push_back(StampedFlit { flit, arrived: now });
-                    self.stats.injected += 1;
-                    self.work += 1; // flit enters the network
-                    self.routers[i].occupancy += 1;
-                    moved = true;
-                    if next + 1 < total {
-                        inj.cur = Some((msg, next + 1, total));
-                    } else {
-                        self.work -= 1; // message fully streamed out of inject
-                        self.inject_msgs -= 1;
-                    }
+            }
+            if let Some((pkt, next, total)) = self.inject[i].cur.take() {
+                let flit = Flit::new(pkt, next, total);
+                self.routers[i].inq[Dir::Local.idx()].push(Slot { flit, arrived: now });
+                self.stats.injected += 1;
+                self.work += 1; // flit enters the network
+                self.routers[i].occupancy += 1;
+                self.active.insert(i as u32);
+                moved = true;
+                if next + 1 < total {
+                    self.inject[i].cur = Some((pkt, next + 1, total));
+                } else {
+                    self.work -= 1; // message fully streamed out of inject
                 }
             }
         }
+        let inject = &self.inject;
+        self.inj_active.prune(|i| inject[i as usize].pending());
 
-        // --- Plan: per router — first drain replication buffers toward
-        // their output ports, then arbitrate input ports.
+        // --- Plan: per active router — first drain replication buffers
+        // toward their output ports, then arbitrate input ports.
         let mut drains = std::mem::take(&mut self.scratch_drains);
         let mut moves = std::mem::take(&mut self.scratch_moves);
         drains.clear();
         moves.clear();
-        for r in 0..self.routers.len() {
+        for wi in 0..self.active.list.len() {
+            let r = self.active.list[wi] as usize;
             let router = &self.routers[r];
             if router.occupancy == 0 {
-                continue; // nothing queued at this router
+                continue; // drained earlier; pruned at end of tick
             }
             let mut out_busy = [false; 5];
             // Output-port allocations claimed by heads earlier in this
@@ -220,24 +367,26 @@ impl Mesh {
                         continue;
                     }
                     self.planned[ni][np] += 1;
+                    self.planned_dirty.push(ni as u32);
                 }
                 out_busy[o] = true;
-                drains.push((r, o));
+                drains.push((r as u32, o as u8));
             }
             // 2. Input arbitration.
             for k in 0..5 {
-                let in_port = (router.rr as usize + k) % 5;
+                let in_port = (self.rr as usize + k) % 5;
                 let Some(sf) = router.inq[in_port].front() else { continue };
                 if sf.arrived >= now {
                     continue; // arrived this cycle; eligible next cycle
                 }
-                let flit = &sf.flit;
-                let is_fork_body = !flit.is_head && router.in_buffered[in_port];
-                let (mask, branch_dests) = if flit.is_head {
+                let flit = sf.flit;
+                let is_fork_body = !flit.is_head() && router.in_buffered[in_port];
+                let mask = if flit.is_head() {
                     debug_assert_eq!(router.in_branches[in_port], 0, "head while allocated");
-                    partition_dests(router.coord, &flit.dests)
+                    let (origin, dests) = self.pkts.route(flit.pkt);
+                    branch_mask(router.coord, origin, dests)
                 } else {
-                    (router.in_branches[in_port], Default::default())
+                    router.in_branches[in_port]
                 };
                 if mask == 0 {
                     // Body flit whose head was not yet granted: wait.
@@ -249,7 +398,7 @@ impl Mesh {
                     // allocation; flits then copy into the replication
                     // buffers unconditionally (the buffers absorb
                     // backpressure, keeping the dependency graph acyclic).
-                    if flit.is_head {
+                    if flit.is_head() {
                         let clash = Dir::ALL.iter().any(|d| {
                             let o = d.idx();
                             mask & (1 << o) != 0
@@ -264,7 +413,7 @@ impl Mesh {
                             }
                         }
                     }
-                    moves.push(Move { router: r, in_port, out_mask: mask, branch_dests });
+                    moves.push(Move { router: r as u32, in_port: in_port as u8, out_mask: mask });
                     continue;
                 }
                 // Direct (unicast continuation) path: single output port.
@@ -273,17 +422,18 @@ impl Mesh {
                 if out_busy[o] {
                     continue;
                 }
-                if flit.is_head && (router.out_alloc[o].is_some() || claimed[o]) {
+                if flit.is_head() && (router.out_alloc[o].is_some() || claimed[o]) {
                     continue;
                 }
                 if d != Dir::Local {
                     let Some(nc) = neighbor(router.coord, d, self.p.width, self.p.height)
                     else {
                         panic!(
-                            "route off mesh edge at {:?} dir {:?} (dests {:?})",
+                            "route off mesh edge at {:?} dir {:?} (pkt {} injected at {:?})",
                             router.coord,
                             d,
-                            flit.dests.as_slice()
+                            flit.pkt,
+                            self.pkts.route(flit.pkt).0
                         );
                     };
                     let ni = self.idx(nc);
@@ -294,18 +444,20 @@ impl Mesh {
                         continue;
                     }
                     self.planned[ni][np] += 1;
+                    self.planned_dirty.push(ni as u32);
                 }
                 out_busy[o] = true;
-                if flit.is_head {
+                if flit.is_head() {
                     claimed[o] = true;
                 }
-                moves.push(Move { router: r, in_port, out_mask: mask, branch_dests });
+                moves.push(Move { router: r as u32, in_port: in_port as u8, out_mask: mask });
             }
         }
 
         // --- Apply: replication-buffer drains.
         for &(r, o) in &drains {
-            let StampedFlit { flit, .. } =
+            let (r, o) = (r as usize, o as usize);
+            let Slot { flit, .. } =
                 self.routers[r].branch_q[o].pop_front().expect("planned drain");
             self.work -= 1;
             self.routers[r].occupancy -= 1;
@@ -314,19 +466,20 @@ impl Mesh {
             self.stats.flit_hops += 1;
             let d = Dir::ALL[o];
             if d == Dir::Local {
-                if flit.is_tail {
-                    self.eject[r].push_back(flit.msg.clone());
+                if flit.is_tail() {
+                    let msg = self.pkts.eject_tail(flit.pkt);
+                    self.eject[r].push_back(msg);
                     self.stats.delivered += 1;
                 }
             } else {
                 let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
                 let ni = self.idx(nc);
-                self.routers[ni].inq[d.opposite().idx()]
-                    .push_back(StampedFlit { flit: flit.clone(), arrived: now });
+                self.routers[ni].inq[d.opposite().idx()].push(Slot { flit, arrived: now });
                 self.work += 1;
                 self.routers[ni].occupancy += 1;
+                self.active.insert(ni as u32);
             }
-            if flit.is_tail {
+            if flit.is_tail() {
                 // Branch complete: release the output port.
                 self.routers[r].out_alloc[o] = None;
             }
@@ -335,45 +488,44 @@ impl Mesh {
 
         // --- Apply: input-port moves.
         for m in &moves {
-            let StampedFlit { flit, .. } =
-                self.routers[m.router].inq[m.in_port].pop_front().expect("planned flit");
+            let r = m.router as usize;
+            let in_port = m.in_port as usize;
+            let Slot { flit, .. } = self.routers[r].inq[in_port].pop().expect("planned flit");
             self.work -= 1;
-            self.routers[m.router].occupancy -= 1;
-            let coord = self.routers[m.router].coord;
-            let is_head = flit.is_head;
-            let is_tail = flit.is_tail;
-            let is_fork =
-                m.out_mask.count_ones() > 1 || self.routers[m.router].in_buffered[m.in_port];
+            self.routers[r].occupancy -= 1;
+            let coord = self.routers[r].coord;
+            let is_head = flit.is_head();
+            let is_tail = flit.is_tail();
+            let is_fork = m.out_mask.count_ones() > 1 || self.routers[r].in_buffered[in_port];
             if is_fork {
                 // Copy into every branch's replication buffer.
-                for d in Dir::ALL {
-                    let o = d.idx();
+                let mut copies = 0u32;
+                for o in 0..5 {
                     if m.out_mask & (1 << o) == 0 {
                         continue;
                     }
-                    let mut fwd = flit.clone();
-                    if is_head {
-                        fwd.dests = m.branch_dests[o];
-                    }
-                    self.routers[m.router].branch_q[o]
-                        .push_back(StampedFlit { flit: fwd, arrived: now });
+                    self.routers[r].branch_q[o].push_back(Slot { flit, arrived: now });
                     self.work += 1;
-                    self.routers[m.router].occupancy += 1;
+                    self.routers[r].occupancy += 1;
+                    copies += 1;
                 }
-                let router = &mut self.routers[m.router];
+                if is_tail && copies > 1 {
+                    self.pkts.add_tails(flit.pkt, copies - 1);
+                }
+                let router = &mut self.routers[r];
                 if is_head {
                     for o in 0..5 {
                         if m.out_mask & (1 << o) != 0 {
-                            router.out_alloc[o] = Some(m.in_port as u8);
+                            router.out_alloc[o] = Some(in_port as u8);
                         }
                     }
                     if !is_tail {
-                        router.in_branches[m.in_port] = m.out_mask;
-                        router.in_buffered[m.in_port] = true;
+                        router.in_branches[in_port] = m.out_mask;
+                        router.in_buffered[in_port] = true;
                     }
                 } else if is_tail {
-                    router.in_branches[m.in_port] = 0;
-                    router.in_buffered[m.in_port] = false;
+                    router.in_branches[in_port] = 0;
+                    router.in_buffered[in_port] = false;
                 }
                 moved = true;
                 continue;
@@ -381,33 +533,30 @@ impl Mesh {
             // Direct move.
             let o = m.out_mask.trailing_zeros() as usize;
             let d = Dir::ALL[o];
-            self.routers[m.router].flits_forwarded += 1;
+            self.routers[r].flits_forwarded += 1;
             self.stats.flit_hops += 1;
             if d == Dir::Local {
                 if is_tail {
                     // Deliver the whole message at tail-ejection time.
-                    self.eject[m.router].push_back(flit.msg.clone());
+                    let msg = self.pkts.eject_tail(flit.pkt);
+                    self.eject[r].push_back(msg);
                     self.stats.delivered += 1;
                 }
             } else {
                 let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
                 let ni = self.idx(nc);
-                let mut fwd = flit.clone();
-                if is_head {
-                    fwd.dests = m.branch_dests[o];
-                }
-                self.routers[ni].inq[d.opposite().idx()]
-                    .push_back(StampedFlit { flit: fwd, arrived: now });
+                self.routers[ni].inq[d.opposite().idx()].push(Slot { flit, arrived: now });
                 self.work += 1;
                 self.routers[ni].occupancy += 1;
+                self.active.insert(ni as u32);
             }
             // Wormhole allocation bookkeeping.
-            let router = &mut self.routers[m.router];
+            let router = &mut self.routers[r];
             if is_head && !is_tail {
-                router.in_branches[m.in_port] = m.out_mask;
-                router.out_alloc[o] = Some(m.in_port as u8);
+                router.in_branches[in_port] = m.out_mask;
+                router.out_alloc[o] = Some(in_port as u8);
             } else if is_tail && !is_head {
-                router.in_branches[m.in_port] = 0;
+                router.in_branches[in_port] = 0;
                 router.out_alloc[o] = None;
             }
             moved = true;
@@ -416,10 +565,15 @@ impl Mesh {
         // Return the scratch buffers for the next cycle.
         self.scratch_drains = drains;
         self.scratch_moves = moves;
-        // Rotate arbitration priority.
-        for r in &mut self.routers {
-            r.rr = (r.rr + 1) % 5;
+        // Clear only the planned entries this cycle dirtied.
+        for i in self.planned_dirty.drain(..) {
+            self.planned[i as usize] = [0; 5];
         }
+        // Drop drained routers from the worklist.
+        let routers = &self.routers;
+        self.active.prune(|i| routers[i as usize].occupancy > 0);
+        // Rotate arbitration priority (shared by all routers).
+        self.rr = (self.rr + 1) % 5;
         if moved {
             self.stats.busy_cycles += 1;
         }
@@ -629,5 +783,73 @@ mod tests {
         assert_eq!(m.stats.delivered, 1);
         assert!(m.stats.flit_hops >= 2); // at least src router + dest eject
         assert!(m.stats.injected >= 1);
+    }
+
+    #[test]
+    fn packet_slab_recycles_after_delivery() {
+        // After a full drain no interned packet may leak: the slab's free
+        // list must cover every slot it ever allocated.
+        let mut m = mesh3x3();
+        for round in 0..3 {
+            let dests = DestList::from_slice(&[(0, 2), (2, 2), (2, 0)]);
+            m.send(
+                (0, 0),
+                Message::multicast(
+                    (0, 0),
+                    dests,
+                    MsgKind::P2pData { seq: round, prod_slot: 0 },
+                    Arc::new(vec![round as u8; 100]),
+                ),
+            );
+            m.send((1, 1), Message::ctrl((1, 1), (0, 0), MsgKind::Irq { acc: round as u16 }));
+            run_until_idle(&mut m, 2000);
+        }
+        assert!(m.pkts.entries.iter().all(|e| e.is_none()), "slab entry leaked");
+        assert_eq!(m.pkts.free.len(), m.pkts.entries.len());
+        // Deliveries all arrived.
+        assert_eq!(m.stats.delivered, 3 * 4);
+    }
+
+    #[test]
+    fn worklist_empties_when_mesh_drains() {
+        let mut m = mesh3x3();
+        m.send(
+            (0, 0),
+            Message::data(
+                (0, 0),
+                (2, 2),
+                MsgKind::P2pData { seq: 0, prod_slot: 0 },
+                Arc::new(vec![0; 256]),
+            ),
+        );
+        run_until_idle(&mut m, 1000);
+        assert!(m.active.is_empty(), "active worklist not drained");
+        assert!(m.inj_active.is_empty(), "inject worklist not drained");
+        assert!(m.active.member.iter().all(|&b| !b));
+        // Ticking an idle mesh is free and changes nothing.
+        let hops = m.stats.flit_hops;
+        m.tick(10_000);
+        assert_eq!(m.stats.flit_hops, hops);
+    }
+
+    #[test]
+    fn routes_from_injection_tile_not_src_field() {
+        // A caller may stamp a `src` that differs from where it injects;
+        // routing must follow the injection point (as the seed model did).
+        let mut m = mesh3x3();
+        let mut msg = Message::ctrl((2, 2), (1, 1), MsgKind::Irq { acc: 9 });
+        msg.src = (2, 2); // explicit: src field disagrees with inject tile
+        m.send((0, 0), msg);
+        run_until_idle(&mut m, 100);
+        let got = m.recv((1, 1)).expect("delivered");
+        assert_eq!(got.src, (2, 2), "src field preserved verbatim");
+    }
+
+    #[test]
+    #[should_panic(expected = "queue_depth")]
+    fn rejects_oversized_queue_depth() {
+        let p =
+            MeshParams { width: 2, height: 2, flit_bytes: 8, queue_depth: MAX_QUEUE_DEPTH + 1 };
+        Mesh::new(p);
     }
 }

@@ -89,6 +89,19 @@ impl Noc {
         std::array::from_fn(|i| self.meshes[i].stats.clone())
     }
 
+    /// Whole-NoC statistics rollup (all six planes summed) — the
+    /// machine-readable bench output reports these.
+    pub fn stats_total(&self) -> MeshStats {
+        let mut t = MeshStats::default();
+        for m in &self.meshes {
+            t.flit_hops += m.stats.flit_hops;
+            t.delivered += m.stats.delivered;
+            t.injected += m.stats.injected;
+            t.busy_cycles += m.stats.busy_cycles;
+        }
+        t
+    }
+
     /// Per-router forwarded-flit loads on one plane.
     pub fn router_loads(&self, plane: Plane) -> Vec<(Coord, u64)> {
         self.meshes[plane.idx()].router_loads()

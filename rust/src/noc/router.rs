@@ -8,17 +8,99 @@
 //! Wormhole semantics: a header flit allocates every output port its branch
 //! needs (all-or-nothing, which keeps the fork deadlock-free); body flits
 //! stream behind it; the tail releases the ports.
+//!
+//! Hot-path layout: input queues are fixed-capacity **inline ring buffers**
+//! ([`PortQ`]) of 16-byte [`Slot`]s, so steady-state traffic touches no heap
+//! and router state stays cache-resident.  Arbitration priority is shared by
+//! the whole plane (all routers rotate in lock-step in the seed model), so
+//! the `rr` counter lives on the mesh, not here.
 
 use std::collections::VecDeque;
 
-use super::flit::{Coord, DestList, Flit};
+use super::flit::{Coord, Flit};
 
-/// A flit waiting in an input queue, stamped with its arrival cycle so a
-/// flit cannot traverse two routers in one cycle.
-#[derive(Debug, Clone)]
-pub struct StampedFlit {
+/// Hard capacity of a [`PortQ`]; `MeshParams::queue_depth` must not exceed
+/// it (checked at mesh construction).  16 covers every configuration the
+/// paper sweeps (the RTL uses depths 2–8).
+pub const MAX_QUEUE_DEPTH: usize = 16;
+
+/// A flit waiting in a queue, stamped with its arrival cycle so a flit
+/// cannot traverse two routers in one cycle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Slot {
     pub flit: Flit,
     pub arrived: u64,
+}
+
+/// Fixed-capacity inline ring buffer for one input port.  Replaces the
+/// seed's per-port `VecDeque<StampedFlit>`: no allocation ever, O(1)
+/// push/pop, capacity bounded by [`MAX_QUEUE_DEPTH`] (the *logical* bound is
+/// `queue_depth`, enforced by the mesh's backpressure accounting before any
+/// push).
+#[derive(Debug, Clone)]
+pub struct PortQ {
+    slots: [Slot; MAX_QUEUE_DEPTH],
+    head: u8,
+    len: u8,
+}
+
+impl PortQ {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self { slots: [Slot::default(); MAX_QUEUE_DEPTH], head: 0, len: 0 }
+    }
+
+    /// Flits currently queued.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// No flits queued?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The oldest queued slot, if any.
+    #[inline]
+    pub fn front(&self) -> Option<&Slot> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(&self.slots[self.head as usize])
+        }
+    }
+
+    /// Append a slot.  The mesh's depth accounting guarantees space; a
+    /// violation is a scheduler bug, and it must fail loudly in release
+    /// builds too — a wrapped ring would silently corrupt queued flits,
+    /// where the seed's `VecDeque` would merely have grown.
+    #[inline]
+    pub fn push(&mut self, s: Slot) {
+        assert!((self.len as usize) < MAX_QUEUE_DEPTH, "PortQ overflow");
+        let tail = (self.head as usize + self.len as usize) % MAX_QUEUE_DEPTH;
+        self.slots[tail] = s;
+        self.len += 1;
+    }
+
+    /// Remove and return the oldest slot.
+    #[inline]
+    pub fn pop(&mut self) -> Option<Slot> {
+        if self.len == 0 {
+            return None;
+        }
+        let s = self.slots[self.head as usize];
+        self.head = ((self.head as usize + 1) % MAX_QUEUE_DEPTH) as u8;
+        self.len -= 1;
+        Some(s)
+    }
+}
+
+impl Default for PortQ {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Per-router state.  The mesh drives the plan/apply cycle; the router is a
@@ -31,13 +113,14 @@ pub struct StampedFlit {
 /// their output ports independently.  The input queue always drains, which
 /// keeps the channel-dependency graph acyclic (plain dimension-ordered
 /// wormhole for every branch); total buffering is bounded by the
-/// pull-based consumption assumption.
+/// pull-based consumption assumption — hence `branch_q` stays a growable
+/// `VecDeque` (of 16-byte slots) while the input queues are inline rings.
 #[derive(Debug)]
 pub struct Router {
     /// This router's coordinate.
     pub coord: Coord,
     /// Input queue per port (N,S,E,W,Local).
-    pub inq: [VecDeque<StampedFlit>; 5],
+    pub inq: [PortQ; 5],
     /// Wormhole allocation: output port -> input port currently holding it.
     pub out_alloc: [Option<u8>; 5],
     /// Output-port mask held by each input port (multicast branch set).
@@ -45,11 +128,9 @@ pub struct Router {
     /// True when input port `i` holds a *buffered* (forked) packet.
     pub in_buffered: [bool; 5],
     /// Replication buffer per output port (forked packets only).
-    pub branch_q: [VecDeque<StampedFlit>; 5],
-    /// Round-robin arbitration pointer.
-    pub rr: u8,
+    pub branch_q: [VecDeque<Slot>; 5],
     /// Flits currently queued here (inq + branch_q), kept incrementally so
-    /// the mesh can skip idle routers.
+    /// the mesh's activity worklist can skip idle routers.
     pub occupancy: u32,
     /// Cumulative flits forwarded (stats).
     pub flits_forwarded: u64,
@@ -65,13 +146,12 @@ impl Router {
             in_branches: [0; 5],
             in_buffered: [false; 5],
             branch_q: Default::default(),
-            rr: 0,
             occupancy: 0,
             flits_forwarded: 0,
         }
     }
 
-    /// Total queued flits (for idle detection).
+    /// Total queued flits (cross-check for `occupancy`).
     pub fn queued(&self) -> usize {
         self.inq.iter().map(|q| q.len()).sum::<usize>()
             + self.branch_q.iter().map(|q| q.len()).sum::<usize>()
@@ -79,12 +159,68 @@ impl Router {
 }
 
 /// One planned movement: input port `in_port` of router `router` forwards
-/// its front flit to every output port in `out_mask`; `branch_dests[o]`
-/// holds the destination subset for the header copy sent through port `o`.
-#[derive(Debug, Clone)]
+/// its front flit to every output port in `out_mask`.  Branch destination
+/// subsets are not materialized — downstream routers re-derive them from
+/// the interned message (see [`super::routing::branch_mask`]).
+#[derive(Debug, Clone, Copy)]
 pub struct Move {
-    pub router: usize,
-    pub in_port: usize,
+    pub router: u32,
+    pub in_port: u8,
     pub out_mask: u8,
-    pub branch_dests: [DestList; 5],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffer_wraps_and_orders() {
+        let mut q = PortQ::new();
+        assert!(q.is_empty() && q.front().is_none() && q.pop().is_none());
+        // Fill / drain across the wrap point several times.
+        let mut next_push = 0u32;
+        let mut next_pop = 0u32;
+        for round in 0..5 {
+            let n = 3 + round * 2;
+            for _ in 0..n.min(MAX_QUEUE_DEPTH) {
+                q.push(Slot { flit: Flit::new(next_push, 1, 3), arrived: next_push as u64 });
+                next_push += 1;
+            }
+            assert_eq!(q.len(), n.min(MAX_QUEUE_DEPTH));
+            assert_eq!(q.front().unwrap().flit.pkt, next_pop);
+            for _ in 0..n.min(MAX_QUEUE_DEPTH) {
+                let s = q.pop().unwrap();
+                assert_eq!(s.flit.pkt, next_pop);
+                assert_eq!(s.arrived, next_pop as u64);
+                next_pop += 1;
+            }
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn ring_buffer_full_capacity() {
+        let mut q = PortQ::new();
+        for i in 0..MAX_QUEUE_DEPTH as u32 {
+            q.push(Slot { flit: Flit::new(i, 0, 1), arrived: 0 });
+        }
+        assert_eq!(q.len(), MAX_QUEUE_DEPTH);
+        for i in 0..MAX_QUEUE_DEPTH as u32 {
+            assert_eq!(q.pop().unwrap().flit.pkt, i);
+        }
+    }
+
+    #[test]
+    fn slot_is_compact() {
+        assert!(std::mem::size_of::<Slot>() <= 24);
+    }
+
+    #[test]
+    fn fresh_router_is_idle() {
+        let r = Router::new((1, 2));
+        assert_eq!(r.coord, (1, 2));
+        assert_eq!(r.queued(), 0);
+        assert_eq!(r.occupancy, 0);
+        assert!(r.out_alloc.iter().all(|a| a.is_none()));
+    }
 }

@@ -35,7 +35,9 @@ pub fn hop_count(a: Coord, b: Coord) -> u32 {
 
 /// Split a destination list by the output port each destination takes from
 /// `cur`.  Returns `(directions_present_bitmask, per-port lists)`; this is
-/// the fork decision of the multicast router.
+/// the fork decision of the multicast router, materialized.  The mesh hot
+/// path uses the allocation-free [`branch_mask`] instead; this form remains
+/// for analysis tools and the equivalence tests.
 pub fn partition_dests(cur: Coord, dests: &DestList) -> (u8, [DestList; 5]) {
     let mut out: [DestList; 5] = Default::default();
     let mut mask = 0u8;
@@ -45,6 +47,35 @@ pub fn partition_dests(cur: Coord, dests: &DestList) -> (u8, [DestList; 5]) {
         mask |= 1 << dir.idx();
     }
     (mask, out)
+}
+
+/// True when tile `p` lies on the XY route from `src` to `dst`: first along
+/// row `src.0` from column `src.1` to `dst.1`, then along column `dst.1`
+/// from row `src.0` to `dst.0`.
+#[inline]
+pub fn on_xy_path(src: Coord, dst: Coord, p: Coord) -> bool {
+    let between = |a: u8, b: u8, c: u8| (b.min(c)..=b.max(c)).contains(&a);
+    (p.0 == src.0 && between(p.1, src.1, dst.1)) || (p.1 == dst.1 && between(p.0, src.0, dst.0))
+}
+
+/// Output-port mask a header flit of packet `(src, dests)` claims at router
+/// `cur`, without materializing per-branch destination lists.
+///
+/// XY routing is deterministic, so the multicast replication tree is fixed
+/// at injection time: the destination subset of the branch passing through
+/// `cur` is exactly the destinations whose XY route visits `cur`, and the
+/// fork decision at `cur` is their per-destination next-hop directions.
+/// This is bit-for-bit the mask [`partition_dests`] computes on the carried
+/// subset in the seed model (see `prop_mesh_equiv`), with O(dests) work and
+/// zero copying per hop.
+pub fn branch_mask(cur: Coord, src: Coord, dests: &DestList) -> u8 {
+    let mut mask = 0u8;
+    for d in dests.iter() {
+        if on_xy_path(src, d, cur) {
+            mask |= 1 << xy_dir(cur, d).idx();
+        }
+    }
+    mask
 }
 
 /// Coordinate of the neighbour in direction `d` (None at mesh edge).
@@ -88,6 +119,38 @@ mod tests {
         assert_eq!(parts[Dir::West.idx()].as_slice(), &[(1, 0)]);
         assert_eq!(parts[Dir::Local.idx()].as_slice(), &[(1, 1)]);
         assert_eq!(mask.count_ones(), 3);
+    }
+
+    #[test]
+    fn on_path_covers_row_then_column() {
+        // Route (1,0) -> (2,3): row 1 cols 0..=3, then col 3 rows 1..=2.
+        for p in [(1, 0), (1, 1), (1, 2), (1, 3), (2, 3)] {
+            assert!(on_xy_path((1, 0), (2, 3), p), "{p:?} should be on path");
+        }
+        for p in [(0, 0), (2, 0), (2, 1), (2, 2), (0, 3)] {
+            assert!(!on_xy_path((1, 0), (2, 3), p), "{p:?} should be off path");
+        }
+        assert!(on_xy_path((1, 1), (1, 1), (1, 1)), "self route");
+    }
+
+    #[test]
+    fn branch_mask_matches_partition_along_the_tree() {
+        // Walk the replication tree the carried-list model would build and
+        // check the derived mask agrees with partition_dests at every node.
+        fn walk(cur: Coord, src: Coord, carried: &DestList, full: &DestList, w: u8, h: u8) {
+            let (mask, parts) = partition_dests(cur, carried);
+            assert_eq!(branch_mask(cur, src, full), mask, "at {cur:?}");
+            for d in Dir::ALL {
+                if d == Dir::Local || mask & (1 << d.idx()) == 0 {
+                    continue;
+                }
+                let next = neighbor(cur, d, w, h).unwrap();
+                walk(next, src, &parts[d.idx()], full, w, h);
+            }
+        }
+        let dests = DestList::from_slice(&[(0, 2), (2, 2), (1, 0), (1, 1), (2, 0), (0, 0)]);
+        walk((1, 1), (1, 1), &dests, &dests, 3, 3);
+        walk((0, 0), (0, 0), &dests, &dests, 3, 3);
     }
 
     #[test]

@@ -1,213 +1,29 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Runtime: load AOT-compiled HLO artifacts and execute them.
 //!
-//! This is the only bridge between the rust coordinator and the build-time
-//! python world: `python/compile/aot.py` lowers each L2 stage (which embeds
-//! the L1 Pallas kernels) to HLO **text** under `artifacts/`, and this module
-//! loads the text, compiles it once on the PJRT CPU client, and exposes an
-//! `execute` that the accelerator datapath calls when an invocation's compute
-//! fires.  Python is never on the simulated request path.
+//! Two interchangeable backends expose the same `Runtime`/`Executable`
+//! API:
 //!
-//! Interchange is HLO text, not a serialized `HloModuleProto`: jax >= 0.5
-//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see DESIGN.md).
+//! - `pjrt` (cargo feature `pjrt`): the real thing — compiles the HLO
+//!   text `python/compile/aot.py` dumps under `artifacts/` on the PJRT CPU
+//!   client and runs it.  Requires the vendored `xla` crate, which is not
+//!   on crates.io; enable the feature only in environments that provide it
+//!   (e.g. via a `[patch]`/path dependency).
+//! - `stub` (default): manifest parsing and tensor I/O work identically,
+//!   but compiling an artifact returns an error.  Everything that does not
+//!   touch real compute — the whole NoC/coherence/P2P simulator, the
+//!   Fig. 4/6 experiments, the traffic generators — builds and runs with
+//!   no external dependencies beyond `anyhow`.
 
 mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest, PipelineMeta, TensorSpec};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};
 
-use anyhow::{anyhow, Context, Result};
-
-/// A compiled HLO artifact plus its I/O contract from `manifest.json`.
-pub struct Executable {
-    name: String,
-    spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Artifact name (e.g. `stage0_linear_relu`).
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Input/output shape contract.
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
-
-    /// Run the stage on f32 inputs (shape-checked against the manifest);
-    /// returns the flattened f32 outputs.
-    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(anyhow!(
-                "{}: got {} inputs, artifact wants {}",
-                self.name,
-                inputs.len(),
-                self.spec.inputs.len()
-            ));
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
-            let want: usize = spec.shape.iter().product::<i64>() as usize;
-            if data.len() != want {
-                return Err(anyhow!(
-                    "{}: input length {} != manifest {:?}",
-                    self.name,
-                    data.len(),
-                    spec.shape
-                ));
-            }
-            let lit = xla::Literal::vec1(data)
-                .reshape(&spec.shape)
-                .map_err(|e| anyhow!("{}: reshape to {:?}: {e}", self.name, spec.shape))?;
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("{}: execute: {e}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: to_literal: {e}", self.name))?;
-        // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
-        let elems = result
-            .to_tuple()
-            .map_err(|e| anyhow!("{}: untuple: {e}", self.name))?;
-        let mut outs = Vec::with_capacity(elems.len());
-        for (elem, spec) in elems.into_iter().zip(&self.spec.outputs) {
-            let v = elem
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("{}: to_vec: {e}", self.name))?;
-            let want: usize = spec.shape.iter().product::<i64>() as usize;
-            if v.len() != want {
-                return Err(anyhow!(
-                    "{}: output length {} != manifest {:?}",
-                    self.name,
-                    v.len(),
-                    spec.shape
-                ));
-            }
-            outs.push(v);
-        }
-        Ok(outs)
-    }
-}
-
-/// Loads `artifacts/manifest.json`, compiles artifacts lazily, and caches the
-/// compiled executables.  One registry is shared by every accelerator tile
-/// whose datapath runs real compute.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Open an artifact directory produced by `make artifacts`.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// Default artifact directory relative to the workspace root.
-    pub fn default_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    /// The parsed manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact by name (cached; compile happens once).
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e}"))?;
-        let exe = Arc::new(Executable { name: name.to_string(), spec, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Read a raw little-endian f32 tensor dumped by `aot.py`.
-    pub fn load_f32_tensor(&self, name: &str) -> Result<Vec<f32>> {
-        let path = self.dir.join(format!("{name}.f32"));
-        let bytes =
-            std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
-        if bytes.len() % 4 != 0 {
-            return Err(anyhow!("{}: size {} not a multiple of 4", path.display(), bytes.len()));
-        }
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn manifest_loads() {
-        let rt = Runtime::open(Runtime::default_dir()).unwrap();
-        assert!(rt.manifest().artifacts.contains_key("stage0_linear_relu"));
-        assert!(rt.manifest().artifacts.contains_key("tgen_identity"));
-    }
-
-    #[test]
-    fn identity_roundtrip() {
-        let rt = Runtime::open(Runtime::default_dir()).unwrap();
-        let exe = rt.load("tgen_identity").unwrap();
-        let x: Vec<f32> = (0..1024).map(|i| i as f32).collect();
-        let out = exe.execute_f32(&[&x]).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0], x);
-    }
-
-    #[test]
-    fn rejects_wrong_arity() {
-        let rt = Runtime::open(Runtime::default_dir()).unwrap();
-        let exe = rt.load("tgen_identity").unwrap();
-        assert!(exe.execute_f32(&[]).is_err());
-    }
-
-    #[test]
-    fn rejects_wrong_shape() {
-        let rt = Runtime::open(Runtime::default_dir()).unwrap();
-        let exe = rt.load("tgen_identity").unwrap();
-        let x = vec![0f32; 7];
-        assert!(exe.execute_f32(&[&x]).is_err());
-    }
-
-    #[test]
-    fn unknown_artifact_errors() {
-        let rt = Runtime::open(Runtime::default_dir()).unwrap();
-        assert!(rt.load("nope").is_err());
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, Runtime};

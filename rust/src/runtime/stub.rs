@@ -1,0 +1,120 @@
+//! No-PJRT runtime backend (the default build).
+//!
+//! Mirrors the `pjrt` backend's API so the rest of the crate compiles
+//! unchanged without the vendored `xla` crate: the manifest loads, raw
+//! tensors read back, but compiling an artifact reports that the binary
+//! was built without the `pjrt` feature.  Simulation paths that never
+//! invoke real compute (traffic generators, the paper's Fig. 4/6
+//! experiments) are unaffected; datapath tests that need numerics skip
+//! when `Runtime::load` errors, exactly as they skip when `make artifacts`
+//! has not run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{ArtifactSpec, Manifest};
+
+/// An artifact's I/O contract.  Never holds a compiled executable in the
+/// stub backend — [`Runtime::load`] always errors, so `execute_f32` is
+/// unreachable in practice but keeps the same signature.
+pub struct Executable {
+    name: String,
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Artifact name (e.g. `stage0_linear_relu`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Input/output shape contract.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Real compute is unavailable without the `pjrt` feature.
+    pub fn execute_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("{}: espsim was built without the `pjrt` feature", self.name))
+    }
+}
+
+/// Loads `artifacts/manifest.json` and serves tensor dumps; artifact
+/// compilation is unavailable in this backend.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default artifact directory relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Backend name (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Compilation needs PJRT: always errors in the stub backend.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        // Still validate the name so callers get the same "not in
+        // manifest" error they would from the real backend.
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        Err(anyhow!("artifact {name:?}: espsim was built without the `pjrt` feature"))
+    }
+
+    /// Read a raw little-endian f32 tensor dumped by `aot.py`.
+    pub fn load_f32_tensor(&self, name: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("{name}.f32"));
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("{}: size {} not a multiple of 4", path.display(), bytes.len()));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_artifacts_errors_cleanly() {
+        assert!(Runtime::open("/definitely/not/a/dir").is_err());
+    }
+
+    #[test]
+    fn stub_executable_reports_missing_feature() {
+        let exe = Executable {
+            name: "x".into(),
+            spec: ArtifactSpec { file: "x.hlo".into(), inputs: vec![], outputs: vec![] },
+        };
+        let err = exe.execute_f32(&[]).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+        assert_eq!(exe.name(), "x");
+        assert!(exe.spec().inputs.is_empty());
+    }
+}

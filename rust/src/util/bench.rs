@@ -5,7 +5,11 @@
 //! computes, and prints aligned tables the EXPERIMENTS.md results are
 //! copied from.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Timing summary of repeated runs.
 #[derive(Debug, Clone, Copy)]
@@ -38,6 +42,94 @@ pub fn measure<T>(iters: usize, mut f: impl FnMut() -> T) -> (T, Timing) {
         iters: times.len(),
     };
     (last, timing)
+}
+
+/// Time a single run of `f` (no warm-up): `(result, seconds)`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Machine-readable perf sink: each bench `record()`s its measured points
+/// and `finish()` merges them into `BENCH_noc.json` — simulated cycles,
+/// wall-clock seconds, and simulated cycles per wall-second per point — so
+/// successive PRs can track the simulator-throughput trajectory.
+///
+/// The file is always written (records from *other* benches already in it
+/// are preserved; this bench's section is replaced).  `--json` additionally
+/// echoes the merged document to stdout; `ESPSIM_BENCH_JSON` overrides the
+/// output path.
+pub struct BenchJson {
+    bench: String,
+    path: PathBuf,
+    records: Vec<Json>,
+    echo: bool,
+}
+
+impl BenchJson {
+    /// Sink for the bench named `bench`, honoring `--json` / env overrides.
+    pub fn from_args(bench: &str) -> Self {
+        let path =
+            std::env::var("ESPSIM_BENCH_JSON").unwrap_or_else(|_| "BENCH_noc.json".to_string());
+        Self {
+            bench: bench.to_string(),
+            path: PathBuf::from(path),
+            records: Vec::new(),
+            echo: std::env::args().any(|a| a == "--json"),
+        }
+    }
+
+    /// Add one measured point: `cycles` simulated in `wall_s` seconds.
+    pub fn record(&mut self, point: &str, cycles: u64, wall_s: f64) {
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), Json::from(self.bench.as_str()));
+        m.insert("point".to_string(), Json::from(point));
+        m.insert("cycles".to_string(), Json::from(cycles));
+        m.insert("wall_s".to_string(), Json::Num(wall_s));
+        m.insert("cycles_per_sec".to_string(), Json::Num(cycles as f64 / wall_s.max(1e-12)));
+        self.records.push(Json::Obj(m));
+    }
+
+    /// Points recorded so far (tests / callers that want a summary line).
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Nothing recorded?
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Merge into the output file, replacing this bench's prior records.
+    pub fn finish(self) {
+        let mut all: Vec<Json> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(&self.path) {
+            if let Ok(doc) = Json::parse(&text) {
+                if let Some(Json::Arr(recs)) = doc.get("records") {
+                    all.extend(
+                        recs.iter()
+                            .filter(|r| {
+                                r.get("bench").and_then(|b| b.as_str().ok())
+                                    != Some(self.bench.as_str())
+                            })
+                            .cloned(),
+                    );
+                }
+            }
+        }
+        all.extend(self.records);
+        let mut top = BTreeMap::new();
+        top.insert("records".to_string(), Json::Arr(all));
+        let text = Json::Obj(top).to_string();
+        if self.echo {
+            println!("{text}");
+        }
+        match std::fs::write(&self.path, &text) {
+            Ok(()) => eprintln!("perf records -> {}", self.path.display()),
+            Err(e) => eprintln!("warning: could not write {}: {e}", self.path.display()),
+        }
+    }
 }
 
 /// Simple aligned-table printer.
@@ -100,5 +192,50 @@ mod tests {
         assert_eq!(fmt_secs(2.0), "2.00s");
         assert_eq!(fmt_secs(0.002), "2.00ms");
         assert_eq!(fmt_secs(0.0000021), "2us");
+    }
+
+    #[test]
+    fn time_once_measures_and_returns() {
+        let (v, s) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_merges_per_bench_sections() {
+        let dir = std::env::temp_dir().join(format!("espsim_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mk = |bench: &str| BenchJson {
+            bench: bench.to_string(),
+            path: path.clone(),
+            records: Vec::new(),
+            echo: false,
+        };
+        let mut a = mk("alpha");
+        a.record("p1", 1000, 0.5);
+        assert_eq!(a.len(), 1);
+        a.finish();
+        let mut b = mk("beta");
+        b.record("p2", 2000, 0.25);
+        b.finish();
+        // Re-running alpha replaces its record but keeps beta's.
+        let mut a2 = mk("alpha");
+        a2.record("p1", 3000, 0.5);
+        a2.finish();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let recs = doc.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        let find = |bench: &str| {
+            recs.iter()
+                .find(|r| r.get("bench").unwrap().as_str().unwrap() == bench)
+                .unwrap()
+                .clone()
+        };
+        assert_eq!(find("alpha").get("cycles").unwrap().as_u64().unwrap(), 3000);
+        assert_eq!(find("beta").get("cycles").unwrap().as_u64().unwrap(), 2000);
+        let cps = find("beta").get("cycles_per_sec").unwrap().as_f64().unwrap();
+        assert!((cps - 8000.0).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,586 @@
+//! Golden equivalence: the activity-driven mesh must be **cycle-for-cycle
+//! identical** to the seed model's straightforward full-scan scheduler.
+//!
+//! [`reference`] retains the seed implementation verbatim (per-router
+//! `VecDeque` port queues, flits carrying `DestList` + `Arc<Message>`,
+//! whole-mesh plan scans, per-router round-robin pointers).  Random
+//! unicast/multicast workloads on random mesh shapes run in lockstep on
+//! both models; every cycle we assert identical idleness, identical
+//! cumulative flit-hops, and identical per-tile delivery sequences (which
+//! pins per-message latency *and* delivery order), and at the end identical
+//! delivered/injected/busy-cycle counters and quiesce time.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use espsim::noc::routing::neighbor;
+use espsim::noc::{
+    partition_dests, Coord, DestList, Dir, Mesh, MeshParams, Message, MsgKind,
+};
+use espsim::util::Prng;
+
+/// The seed mesh model, retained as the golden reference.
+mod reference {
+    use super::*;
+
+    #[derive(Clone)]
+    pub struct RefFlit {
+        pub is_head: bool,
+        pub is_tail: bool,
+        pub dests: DestList,
+        pub msg: Arc<Message>,
+    }
+
+    #[derive(Clone)]
+    pub struct Stamped {
+        pub flit: RefFlit,
+        pub arrived: u64,
+    }
+
+    pub struct RefRouter {
+        pub coord: Coord,
+        pub inq: [VecDeque<Stamped>; 5],
+        pub out_alloc: [Option<u8>; 5],
+        pub in_branches: [u8; 5],
+        pub in_buffered: [bool; 5],
+        pub branch_q: [VecDeque<Stamped>; 5],
+        pub rr: u8,
+        pub occupancy: u32,
+    }
+
+    impl RefRouter {
+        fn new(coord: Coord) -> Self {
+            Self {
+                coord,
+                inq: Default::default(),
+                out_alloc: [None; 5],
+                in_branches: [0; 5],
+                in_buffered: [false; 5],
+                branch_q: Default::default(),
+                rr: 0,
+                occupancy: 0,
+            }
+        }
+    }
+
+    struct RefMove {
+        router: usize,
+        in_port: usize,
+        out_mask: u8,
+        branch_dests: [DestList; 5],
+    }
+
+    #[derive(Default)]
+    struct Inject {
+        queue: VecDeque<Arc<Message>>,
+        cur: Option<(Arc<Message>, u32, u32)>,
+    }
+
+    /// Seed-model plane: plan/apply over every router, every cycle.
+    pub struct RefMesh {
+        p: MeshParams,
+        routers: Vec<RefRouter>,
+        inject: Vec<Inject>,
+        eject: Vec<VecDeque<Arc<Message>>>,
+        planned: Vec<[u8; 5]>,
+        work: u64,
+        inject_msgs: u64,
+        pub flit_hops: u64,
+        pub delivered: u64,
+        pub injected: u64,
+        pub busy_cycles: u64,
+    }
+
+    impl RefMesh {
+        pub fn new(p: MeshParams) -> Self {
+            let n = p.width as usize * p.height as usize;
+            let mut routers = Vec::with_capacity(n);
+            for y in 0..p.height {
+                for x in 0..p.width {
+                    routers.push(RefRouter::new((y, x)));
+                }
+            }
+            Self {
+                p,
+                routers,
+                inject: (0..n).map(|_| Inject::default()).collect(),
+                eject: (0..n).map(|_| VecDeque::new()).collect(),
+                planned: vec![[0; 5]; n],
+                work: 0,
+                inject_msgs: 0,
+                flit_hops: 0,
+                delivered: 0,
+                injected: 0,
+                busy_cycles: 0,
+            }
+        }
+
+        fn idx(&self, c: Coord) -> usize {
+            c.0 as usize * self.p.width as usize + c.1 as usize
+        }
+
+        pub fn send(&mut self, tile: Coord, msg: Message) {
+            let i = self.idx(tile);
+            self.inject[i].queue.push_back(Arc::new(msg));
+            self.work += 1;
+            self.inject_msgs += 1;
+        }
+
+        pub fn recv(&mut self, tile: Coord) -> Option<Arc<Message>> {
+            let i = self.idx(tile);
+            self.eject[i].pop_front()
+        }
+
+        pub fn is_idle(&self) -> bool {
+            self.work == 0
+        }
+
+        fn flit_count(&self, msg: &Message) -> u32 {
+            1 + (msg.payload.len() as u32).div_ceil(self.p.flit_bytes)
+        }
+
+        pub fn tick(&mut self, now: u64) {
+            if self.work == 0 {
+                return;
+            }
+            self.planned.iter_mut().for_each(|p| *p = [0; 5]);
+            let mut moved = false;
+
+            // Injection: stream one flit per tile into the local port.
+            if self.inject_msgs > 0 {
+                for i in 0..self.routers.len() {
+                    if self.routers[i].inq[Dir::Local.idx()].len() >= self.p.queue_depth {
+                        continue;
+                    }
+                    if self.inject[i].cur.is_none() {
+                        if let Some(msg) = self.inject[i].queue.pop_front() {
+                            let total = self.flit_count(&msg);
+                            self.inject[i].cur = Some((msg, 0, total));
+                        }
+                    }
+                    if let Some((msg, next, total)) = self.inject[i].cur.take() {
+                        let flit = RefFlit {
+                            is_head: next == 0,
+                            is_tail: next + 1 == total,
+                            dests: msg.dests,
+                            msg: msg.clone(),
+                        };
+                        self.routers[i].inq[Dir::Local.idx()]
+                            .push_back(Stamped { flit, arrived: now });
+                        self.injected += 1;
+                        self.work += 1;
+                        self.routers[i].occupancy += 1;
+                        moved = true;
+                        if next + 1 < total {
+                            self.inject[i].cur = Some((msg, next + 1, total));
+                        } else {
+                            self.work -= 1;
+                            self.inject_msgs -= 1;
+                        }
+                    }
+                }
+            }
+
+            // Plan.
+            let mut drains: Vec<(usize, usize)> = Vec::new();
+            let mut moves: Vec<RefMove> = Vec::new();
+            for r in 0..self.routers.len() {
+                let router = &self.routers[r];
+                if router.occupancy == 0 {
+                    continue;
+                }
+                let mut out_busy = [false; 5];
+                let mut claimed = [false; 5];
+                for d in Dir::ALL {
+                    let o = d.idx();
+                    let Some(sf) = router.branch_q[o].front() else { continue };
+                    if sf.arrived >= now {
+                        continue;
+                    }
+                    if d != Dir::Local {
+                        let nc = neighbor(router.coord, d, self.p.width, self.p.height)
+                            .expect("fork branch routes off mesh edge");
+                        let ni = self.idx(nc);
+                        let np = d.opposite().idx();
+                        if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
+                            >= self.p.queue_depth
+                        {
+                            continue;
+                        }
+                        self.planned[ni][np] += 1;
+                    }
+                    out_busy[o] = true;
+                    drains.push((r, o));
+                }
+                for k in 0..5 {
+                    let in_port = (router.rr as usize + k) % 5;
+                    let Some(sf) = router.inq[in_port].front() else { continue };
+                    if sf.arrived >= now {
+                        continue;
+                    }
+                    let flit = &sf.flit;
+                    let is_fork_body = !flit.is_head && router.in_buffered[in_port];
+                    let (mask, branch_dests) = if flit.is_head {
+                        partition_dests(router.coord, &flit.dests)
+                    } else {
+                        (router.in_branches[in_port], Default::default())
+                    };
+                    if mask == 0 {
+                        continue;
+                    }
+                    let is_fork = mask.count_ones() > 1 || is_fork_body;
+                    if is_fork {
+                        if flit.is_head {
+                            let clash = Dir::ALL.iter().any(|d| {
+                                let o = d.idx();
+                                mask & (1 << o) != 0
+                                    && (router.out_alloc[o].is_some() || claimed[o])
+                            });
+                            if clash {
+                                continue;
+                            }
+                            for o in 0..5 {
+                                if mask & (1 << o) != 0 {
+                                    claimed[o] = true;
+                                }
+                            }
+                        }
+                        moves.push(RefMove { router: r, in_port, out_mask: mask, branch_dests });
+                        continue;
+                    }
+                    let o = mask.trailing_zeros() as usize;
+                    let d = Dir::ALL[o];
+                    if out_busy[o] {
+                        continue;
+                    }
+                    if flit.is_head && (router.out_alloc[o].is_some() || claimed[o]) {
+                        continue;
+                    }
+                    if d != Dir::Local {
+                        let nc = neighbor(router.coord, d, self.p.width, self.p.height)
+                            .expect("route off mesh edge");
+                        let ni = self.idx(nc);
+                        let np = d.opposite().idx();
+                        if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
+                            >= self.p.queue_depth
+                        {
+                            continue;
+                        }
+                        self.planned[ni][np] += 1;
+                    }
+                    out_busy[o] = true;
+                    if flit.is_head {
+                        claimed[o] = true;
+                    }
+                    moves.push(RefMove { router: r, in_port, out_mask: mask, branch_dests });
+                }
+            }
+
+            // Apply: replication-buffer drains.
+            for &(r, o) in &drains {
+                let Stamped { flit, .. } =
+                    self.routers[r].branch_q[o].pop_front().expect("planned drain");
+                self.work -= 1;
+                self.routers[r].occupancy -= 1;
+                let coord = self.routers[r].coord;
+                self.flit_hops += 1;
+                let d = Dir::ALL[o];
+                if d == Dir::Local {
+                    if flit.is_tail {
+                        self.eject[r].push_back(flit.msg.clone());
+                        self.delivered += 1;
+                    }
+                } else {
+                    let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
+                    let ni = self.idx(nc);
+                    self.routers[ni].inq[d.opposite().idx()]
+                        .push_back(Stamped { flit: flit.clone(), arrived: now });
+                    self.work += 1;
+                    self.routers[ni].occupancy += 1;
+                }
+                if flit.is_tail {
+                    self.routers[r].out_alloc[o] = None;
+                }
+                moved = true;
+            }
+
+            // Apply: input-port moves.
+            for m in &moves {
+                let Stamped { flit, .. } =
+                    self.routers[m.router].inq[m.in_port].pop_front().expect("planned flit");
+                self.work -= 1;
+                self.routers[m.router].occupancy -= 1;
+                let coord = self.routers[m.router].coord;
+                let is_head = flit.is_head;
+                let is_tail = flit.is_tail;
+                let is_fork = m.out_mask.count_ones() > 1
+                    || self.routers[m.router].in_buffered[m.in_port];
+                if is_fork {
+                    for d in Dir::ALL {
+                        let o = d.idx();
+                        if m.out_mask & (1 << o) == 0 {
+                            continue;
+                        }
+                        let mut fwd = flit.clone();
+                        if is_head {
+                            fwd.dests = m.branch_dests[o];
+                        }
+                        self.routers[m.router].branch_q[o]
+                            .push_back(Stamped { flit: fwd, arrived: now });
+                        self.work += 1;
+                        self.routers[m.router].occupancy += 1;
+                    }
+                    let router = &mut self.routers[m.router];
+                    if is_head {
+                        for o in 0..5 {
+                            if m.out_mask & (1 << o) != 0 {
+                                router.out_alloc[o] = Some(m.in_port as u8);
+                            }
+                        }
+                        if !is_tail {
+                            router.in_branches[m.in_port] = m.out_mask;
+                            router.in_buffered[m.in_port] = true;
+                        }
+                    } else if is_tail {
+                        router.in_branches[m.in_port] = 0;
+                        router.in_buffered[m.in_port] = false;
+                    }
+                    moved = true;
+                    continue;
+                }
+                let o = m.out_mask.trailing_zeros() as usize;
+                let d = Dir::ALL[o];
+                self.flit_hops += 1;
+                if d == Dir::Local {
+                    if is_tail {
+                        self.eject[m.router].push_back(flit.msg.clone());
+                        self.delivered += 1;
+                    }
+                } else {
+                    let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
+                    let ni = self.idx(nc);
+                    let mut fwd = flit.clone();
+                    if is_head {
+                        fwd.dests = m.branch_dests[o];
+                    }
+                    self.routers[ni].inq[d.opposite().idx()]
+                        .push_back(Stamped { flit: fwd, arrived: now });
+                    self.work += 1;
+                    self.routers[ni].occupancy += 1;
+                }
+                let router = &mut self.routers[m.router];
+                if is_head && !is_tail {
+                    router.in_branches[m.in_port] = m.out_mask;
+                    router.out_alloc[o] = Some(m.in_port as u8);
+                } else if is_tail && !is_head {
+                    router.in_branches[m.in_port] = 0;
+                    router.out_alloc[o] = None;
+                }
+                moved = true;
+            }
+
+            for r in &mut self.routers {
+                r.rr = (r.rr + 1) % 5;
+            }
+            if moved {
+                self.busy_cycles += 1;
+            }
+        }
+    }
+}
+
+use reference::RefMesh;
+
+/// One scheduled message of a workload.
+struct Send {
+    cycle: u64,
+    src: Coord,
+    msg: Message,
+}
+
+fn msg_seq(m: &Message) -> u32 {
+    match m.kind {
+        MsgKind::P2pData { seq, .. } => seq,
+        _ => panic!("unexpected kind"),
+    }
+}
+
+/// Run `sends` on both models in lockstep, asserting cycle-level equality.
+fn run_equiv(case: usize, p: MeshParams, mut sends: Vec<Send>) {
+    sends.sort_by_key(|s| s.cycle);
+    let mut opt = Mesh::new(p);
+    let mut gold = RefMesh::new(p);
+    let mut next = 0usize;
+    let mut t = 0u64;
+    let total = sends.len();
+    let mut delivered_pairs = 0u64;
+    loop {
+        while next < sends.len() && sends[next].cycle == t {
+            let s = &sends[next];
+            opt.send(s.src, s.msg.clone());
+            gold.send(s.src, s.msg.clone());
+            next += 1;
+        }
+        opt.tick(t);
+        gold.tick(t);
+        t += 1;
+        assert_eq!(
+            opt.is_idle(),
+            gold.is_idle(),
+            "case {case}: idleness diverged at cycle {t}"
+        );
+        assert_eq!(
+            opt.stats.flit_hops, gold.flit_hops,
+            "case {case}: flit-hops diverged at cycle {t}"
+        );
+        // Per-tile delivery sequences: same messages, same order, same cycle
+        // (this pins per-message latency exactly, not just the multiset).
+        for y in 0..p.height {
+            for x in 0..p.width {
+                let c = (y, x);
+                loop {
+                    match (opt.recv(c), gold.recv(c)) {
+                        (None, None) => break,
+                        (Some(a), Some(b)) => {
+                            assert_eq!(
+                                msg_seq(&a),
+                                msg_seq(&b),
+                                "case {case}: delivery order diverged at {c:?} cycle {t}"
+                            );
+                            assert_eq!(a.src, b.src, "case {case}: src diverged");
+                            assert_eq!(*a.payload, *b.payload, "case {case}: payload diverged");
+                            delivered_pairs += 1;
+                        }
+                        (a, b) => panic!(
+                            "case {case}: delivery presence diverged at {c:?} cycle {t}: \
+                             opt={:?} gold={:?}",
+                            a.map(|m| msg_seq(&m)),
+                            b.map(|m| msg_seq(&m))
+                        ),
+                    }
+                }
+            }
+        }
+        if next == sends.len() && opt.is_idle() && gold.is_idle() {
+            break;
+        }
+        assert!(t < 4_000_000, "case {case}: meshes did not drain ({total} sends)");
+    }
+    assert_eq!(opt.stats.delivered, gold.delivered, "case {case}: delivered total");
+    assert_eq!(opt.stats.injected, gold.injected, "case {case}: injected total");
+    assert_eq!(opt.stats.busy_cycles, gold.busy_cycles, "case {case}: busy cycles");
+    assert_eq!(opt.stats.delivered, delivered_pairs, "case {case}: drained everything");
+}
+
+#[test]
+fn prop_equivalent_on_random_workloads() {
+    let mut rng = Prng::new(0x5EED_CAFE);
+    for case in 0..40 {
+        let w = rng.range(2, 5) as u8;
+        let h = rng.range(2, 5) as u8;
+        let p = MeshParams {
+            width: w,
+            height: h,
+            flit_bytes: *rng.pick(&[8u32, 16, 32]),
+            queue_depth: rng.range(2, 5) as usize,
+        };
+        let n_msgs = rng.range(1, 14);
+        let mut sends = Vec::new();
+        for seq in 0..n_msgs {
+            let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+            let fanout = rng.range(1, 6) as usize;
+            let mut dests = DestList::new();
+            let mut uniq: Vec<Coord> = Vec::new();
+            for _ in 0..fanout {
+                let d = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+                if !uniq.contains(&d) {
+                    uniq.push(d);
+                    dests.push(d);
+                }
+            }
+            // Occasionally duplicate a destination: the header dedups at
+            // delivery (one copy per tile) and both models must agree.
+            if rng.chance(0.2) {
+                dests.push(*rng.pick(&uniq));
+            }
+            let len = rng.range(0, 4000) as usize;
+            let payload = Arc::new(vec![rng.next_u64() as u8; len]);
+            sends.push(Send {
+                cycle: rng.range(0, 60),
+                src,
+                msg: Message::multicast(
+                    src,
+                    dests,
+                    MsgKind::P2pData { seq: seq as u32, prod_slot: 0 },
+                    payload,
+                ),
+            });
+        }
+        run_equiv(case, p, sends);
+    }
+}
+
+#[test]
+fn prop_equivalent_under_heavy_contention() {
+    // Every tile floods one hotspot with multi-flit packets through tiny
+    // queues: maximal backpressure, arbitration, and wormhole interleaving.
+    let mut rng = Prng::new(0xC047E57);
+    for (case, &depth) in [2usize, 3].iter().enumerate() {
+        let p = MeshParams { width: 4, height: 3, flit_bytes: 8, queue_depth: depth };
+        let mut sends = Vec::new();
+        let mut seq = 0u32;
+        for y in 0..3u8 {
+            for x in 0..4u8 {
+                for _ in 0..2 {
+                    let len = rng.range(1, 300) as usize;
+                    sends.push(Send {
+                        cycle: rng.range(0, 8),
+                        src: (y, x),
+                        msg: Message::data(
+                            (y, x),
+                            (1, 2),
+                            MsgKind::P2pData { seq, prod_slot: 0 },
+                            Arc::new(vec![seq as u8; len]),
+                        ),
+                    });
+                    seq += 1;
+                }
+            }
+        }
+        run_equiv(100 + case, p, sends);
+    }
+}
+
+#[test]
+fn prop_equivalent_on_wide_multicasts() {
+    // Max-fanout multicasts (up to the 16-dest header cap) from a single
+    // producer, mirroring the paper's Fig. 6 traffic shape.
+    let mut rng = Prng::new(0xFA70);
+    for case in 0..8 {
+        let p = MeshParams { width: 5, height: 4, flit_bytes: 16, queue_depth: 4 };
+        let mut dests = DestList::new();
+        let mut uniq = Vec::new();
+        let fanout = rng.range(8, 16);
+        for _ in 0..fanout {
+            let d = (rng.below(4) as u8, rng.below(5) as u8);
+            if !uniq.contains(&d) {
+                uniq.push(d);
+                dests.push(d);
+            }
+        }
+        let mut sends = Vec::new();
+        for seq in 0..3u32 {
+            sends.push(Send {
+                cycle: seq as u64 * rng.range(1, 20),
+                src: (0, 0),
+                msg: Message::multicast(
+                    (0, 0),
+                    dests,
+                    MsgKind::P2pData { seq, prod_slot: 0 },
+                    Arc::new(vec![seq as u8; rng.range(100, 2000) as usize]),
+                ),
+            });
+        }
+        run_equiv(200 + case, p, sends);
+    }
+}

@@ -2,25 +2,34 @@
 //! speedup grid of multicast P2P over the shared-memory baseline, plus the
 //! concurrent-baseline variant discussed in EXPERIMENTS.md.
 //!
+//! `--mesh16` sweeps the scaled 16x16 platform instead (consumers packed
+//! two per tile up to 32, transfers out to 4 MB).
+//!
 //! ```text
-//! cargo run --release --example multicast_sweep [-- --quick]
+//! cargo run --release --example multicast_sweep [-- --quick] [-- --mesh16]
 //! ```
 
 use espsim::coordinator::experiments::{
-    paper_consumer_counts, paper_data_sizes, run_fig6_point, Fig6Options,
+    extended_consumer_counts, extended_data_sizes, paper_consumer_counts, paper_data_sizes,
+    quick_data_sizes, quick_extended_data_sizes, run_fig6_point, Fig6Options,
 };
 
-fn sweep(title: &str, opts: &Fig6Options, sizes: &[u32]) -> anyhow::Result<()> {
+fn sweep(
+    title: &str,
+    opts: &Fig6Options,
+    consumers: &[usize],
+    sizes: &[u32],
+) -> anyhow::Result<()> {
     println!("\n=== {title} ===");
     print!("{:>10} |", "bytes");
-    for n in paper_consumer_counts() {
+    for &n in consumers {
         print!(" {:>6}", format!("N={n}"));
     }
     println!();
-    println!("{}", "-".repeat(12 + 7 * paper_consumer_counts().len()));
+    println!("{}", "-".repeat(12 + 7 * consumers.len()));
     for &bytes in sizes {
         print!("{bytes:>10} |");
-        for &n in &paper_consumer_counts() {
+        for &n in consumers {
             let p = run_fig6_point(n, bytes, opts)?;
             print!(" {:>5.2}x", p.speedup());
         }
@@ -31,21 +40,39 @@ fn sweep(title: &str, opts: &Fig6Options, sizes: &[u32]) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let sizes = if quick {
-        vec![4 << 10, 64 << 10]
-    } else {
-        paper_data_sizes()
-    };
+    let mesh16 = std::env::args().any(|a| a == "--mesh16");
+
+    if mesh16 {
+        let sizes = if quick { quick_extended_data_sizes() } else { extended_data_sizes() };
+        let opts = Fig6Options::mesh_16x16();
+        sweep(
+            "scaled sweep: 16x16 mesh, consumers packed 2/tile (up to 32)",
+            &opts,
+            &extended_consumer_counts(),
+            &sizes,
+        )?;
+        println!(
+            "\n32 consumers share 16 destination tiles: one multicast per burst \
+             still covers every consumer (two sockets per tile share the copy)"
+        );
+        return Ok(());
+    }
+
+    let sizes = if quick { quick_data_sizes() } else { paper_data_sizes() };
 
     // Paper configuration: sequential baseline invocations (Linux driver
     // serializes) — reproduces Fig. 6's trends.
     let opts = Fig6Options::default();
-    sweep("Fig. 6: multicast speedup (sequential baseline, as in the paper)", &opts, &sizes)?;
+    sweep(
+        "Fig. 6: multicast speedup (sequential baseline, as in the paper)",
+        &opts,
+        &paper_consumer_counts(),
+        &sizes,
+    )?;
 
     // Ablation: fully concurrent baseline (idealized host).
-    let mut conc = Fig6Options::default();
-    conc.baseline_sequential = false;
-    sweep("ablation: concurrent-baseline host", &conc, &sizes)?;
+    let conc = Fig6Options { baseline_sequential: false, ..Fig6Options::default() };
+    sweep("ablation: concurrent-baseline host", &conc, &paper_consumer_counts(), &sizes)?;
 
     println!(
         "\npaper anchors: 1 consumer/4KB -> 1.72x; 16 consumers/4KB -> 2.20x; \

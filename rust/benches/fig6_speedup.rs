@@ -4,26 +4,48 @@
 //! the paper plots, the paper's anchor values, and the simulator's
 //! wall-clock throughput.
 //!
+//! `--mesh16` runs the scaled sweep instead: a 16x16 mesh, consumers
+//! packed two per tile up to 32, and transfers out to 4 MB — the
+//! past-the-paper operating points the generalized coordinate encoding
+//! unlocks.
+//!
 //! ```text
-//! cargo bench --bench fig6_speedup [-- --quick]
+//! cargo bench --bench fig6_speedup [-- --quick] [-- --mesh16]
 //! ```
 
 use espsim::coordinator::experiments::{
-    paper_consumer_counts, paper_data_sizes, run_fig6_point, Fig6Options,
+    extended_consumer_counts, extended_data_sizes, paper_consumer_counts, paper_data_sizes,
+    quick_data_sizes, quick_extended_data_sizes, run_fig6_point, Fig6Options,
 };
 use espsim::util::bench::{fmt_secs, measure, BenchJson, Table};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let mesh16 = std::env::args().any(|a| a == "--mesh16");
     // A --quick run must not overwrite the full sweep's perf-trajectory
-    // records, so it gets its own bench section in BENCH_noc.json.
-    let mut sink =
-        BenchJson::from_args(if quick { "fig6_speedup_quick" } else { "fig6_speedup" });
-    let opts = Fig6Options::default();
-    let sizes = if quick { vec![4 << 10, 64 << 10] } else { paper_data_sizes() };
+    // records, so each variant gets its own bench section in BENCH_noc.json.
+    let bench_name = match (mesh16, quick) {
+        (false, false) => "fig6_speedup",
+        (false, true) => "fig6_speedup_quick",
+        (true, false) => "fig6_speedup_16x16",
+        (true, true) => "fig6_speedup_16x16_quick",
+    };
+    let mut sink = BenchJson::from_args(bench_name);
+    let opts = if mesh16 { Fig6Options::mesh_16x16() } else { Fig6Options::default() };
+    let consumers = if mesh16 { extended_consumer_counts() } else { paper_consumer_counts() };
+    let sizes = match (mesh16, quick) {
+        (false, false) => paper_data_sizes(),
+        (false, true) => quick_data_sizes(),
+        (true, false) => extended_data_sizes(),
+        (true, true) => quick_extended_data_sizes(),
+    };
 
     println!("== Fig. 6: multicast speedup vs shared-memory baseline ==");
-    println!("platform: 3x4 mesh, 256-bit NoC, 4 KB bursts, sequential baseline\n");
+    if mesh16 {
+        println!("platform: 16x16 mesh, 256-bit NoC, consumers packed 2/tile, 4 KB bursts\n");
+    } else {
+        println!("platform: 3x4 mesh, 256-bit NoC, 4 KB bursts, sequential baseline\n");
+    }
 
     let t = Table::new(
         &["consumers", "bytes", "baseline-cy", "multicast-cy", "speedup", "sim-time"],
@@ -31,7 +53,7 @@ fn main() {
     );
     let mut total_sim_cycles = 0u64;
     let mut total_wall = 0.0f64;
-    for &n in &paper_consumer_counts() {
+    for &n in &consumers {
         for &bytes in &sizes {
             let iters = if bytes >= (1 << 20) { 1 } else { 3 };
             let (p, timing) = measure(iters, || run_fig6_point(n, bytes, &opts).unwrap());
@@ -53,10 +75,12 @@ fn main() {
         }
     }
 
-    println!("\npaper anchors (read off Fig. 6):");
-    println!("  1 consumer,  4 KB: 1.72x   (72% speedup)");
-    println!("  16 consumers, 4 KB: 2.20x  (120% speedup)");
-    println!("  16 consumers, 1 MB: 3.03x  (203% speedup, plateau at 1 MB)");
+    if !mesh16 {
+        println!("\npaper anchors (read off Fig. 6):");
+        println!("  1 consumer,  4 KB: 1.72x   (72% speedup)");
+        println!("  16 consumers, 4 KB: 2.20x  (120% speedup)");
+        println!("  16 consumers, 1 MB: 3.03x  (203% speedup, plateau at 1 MB)");
+    }
     println!("\nsimulator throughput: {:.1} M simulated cycles / wall-second",
         total_sim_cycles as f64 / total_wall.max(1e-9) / 1e6);
     sink.record("fig6_total", total_sim_cycles, total_wall);

@@ -18,7 +18,7 @@
 //! (constant), and per-destination multicast logic (lookahead replica +
 //! fork control), then fits the free coefficients to the anchors.
 
-use crate::noc::header_dest_capacity;
+use crate::noc::{bits_per_dest, header_dest_capacity_for};
 
 /// Router area model parameters (um^2 at 12 nm).  The defaults reproduce
 /// the paper's anchors; see [`RouterAreaModel::calibrated`].
@@ -53,24 +53,52 @@ impl RouterAreaModel {
     }
 
     /// Area (um^2) of a router with `bitwidth`-bit flits supporting up to
-    /// `max_dests` multicast destinations (0 = no multicast support).
-    /// Returns `None` when `max_dests` exceeds what the header can encode.
+    /// `max_dests` multicast destinations (0 = no multicast support), in
+    /// the paper's synthesized (up to 8x8) coordinate encoding.  Returns
+    /// `None` when `max_dests` exceeds what the header can encode.
     pub fn area(&self, bitwidth: u32, max_dests: usize) -> Option<f64> {
-        if max_dests > header_dest_capacity(bitwidth) {
+        self.area_for_mesh(bitwidth, max_dests, 8, 8)
+    }
+
+    /// Area for a router of a `width x height` mesh.  The per-destination
+    /// logic (lookahead replica + header handling) scales with the
+    /// destination field width, so wider meshes pay `bits_per_dest / 7` of
+    /// the calibrated 8x8 per-destination cost, and the capacity bound uses
+    /// that mesh's header encoding.
+    pub fn area_for_mesh(
+        &self,
+        bitwidth: u32,
+        max_dests: usize,
+        width: u8,
+        height: u8,
+    ) -> Option<f64> {
+        if max_dests > header_dest_capacity_for(bitwidth, width, height) {
             return None;
         }
         let bits = bitwidth as f64;
+        let dest_scale = bits_per_dest(width, height) as f64 / bits_per_dest(8, 8) as f64;
         Some(
             self.base
                 + (self.per_bit_queue + self.per_bit_xbar) * bits
-                + self.per_dest * max_dests as f64,
+                + self.per_dest * dest_scale * max_dests as f64,
         )
     }
 
     /// Relative overhead of multicast support vs the no-multicast baseline.
     pub fn overhead(&self, bitwidth: u32, max_dests: usize) -> Option<f64> {
-        let base = self.area(bitwidth, 0)?;
-        Some(self.area(bitwidth, max_dests)? / base - 1.0)
+        self.overhead_for_mesh(bitwidth, max_dests, 8, 8)
+    }
+
+    /// [`RouterAreaModel::overhead`] for a `width x height` mesh.
+    pub fn overhead_for_mesh(
+        &self,
+        bitwidth: u32,
+        max_dests: usize,
+        width: u8,
+        height: u8,
+    ) -> Option<f64> {
+        let base = self.area_for_mesh(bitwidth, 0, width, height)?;
+        Some(self.area_for_mesh(bitwidth, max_dests, width, height)? / base - 1.0)
     }
 }
 
@@ -96,16 +124,25 @@ pub struct AreaPoint {
 /// Regenerate the Fig. 4 sweep: bitwidths x destination counts (skipping
 /// configurations the header cannot encode, as the paper does).
 pub fn fig4_sweep() -> Vec<AreaPoint> {
+    fig4_sweep_for_mesh(8, 8)
+}
+
+/// The Fig. 4 sweep for a `width x height` mesh's coordinate encoding
+/// (narrower NoCs lose destination capacity on wide meshes, and each
+/// destination costs proportionally more routing logic).
+pub fn fig4_sweep_for_mesh(width: u8, height: u8) -> Vec<AreaPoint> {
     let model = RouterAreaModel::calibrated();
     let mut points = Vec::new();
     for bitwidth in [64u32, 128, 256] {
         for max_dests in 0..=16usize {
-            if let Some(area_um2) = model.area(bitwidth, max_dests) {
+            if let Some(area_um2) = model.area_for_mesh(bitwidth, max_dests, width, height) {
                 points.push(AreaPoint {
                     bitwidth,
                     max_dests,
                     area_um2,
-                    overhead: model.overhead(bitwidth, max_dests).unwrap(),
+                    overhead: model
+                        .overhead_for_mesh(bitwidth, max_dests, width, height)
+                        .unwrap(),
                 });
             }
         }
@@ -171,5 +208,22 @@ mod tests {
         // 64-bit: 0..=5 (6), 128-bit: 0..=14 (15), 256-bit: 0..=16 (17).
         assert_eq!(pts.len(), 6 + 15 + 17);
         assert!(pts.iter().all(|p| p.area_um2 > 0.0));
+    }
+
+    #[test]
+    fn wide_mesh_sweep_uses_the_9bit_encoding() {
+        let pts = fig4_sweep_for_mesh(16, 16);
+        // 64-bit: 0..=3 (4), 128-bit: 0..=10 (11), 256-bit: 0..=16 (17).
+        assert_eq!(pts.len(), 4 + 11 + 17);
+        let m = RouterAreaModel::calibrated();
+        // A destination costs 9/7 of the 8x8 cost on a 16x16 mesh.
+        let d = m.area_for_mesh(256, 1, 16, 16).unwrap()
+            - m.area_for_mesh(256, 0, 16, 16).unwrap();
+        assert!((d - 200.0 * 9.0 / 7.0).abs() < 1e-9, "{d}");
+        // The no-multicast baselines are mesh-independent.
+        assert_eq!(m.area_for_mesh(128, 0, 16, 16), m.area(128, 0));
+        // Capacity gating follows the wide encoding.
+        assert!(m.area_for_mesh(64, 4, 16, 16).is_none(), "64-bit encodes 3 on 16x16");
+        assert!(m.area_for_mesh(64, 3, 16, 16).is_some());
     }
 }

@@ -13,7 +13,12 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::util::Json;
 
-use crate::noc::{header_dest_capacity, Coord, MAX_DESTS, MAX_QUEUE_DEPTH};
+use crate::noc::{header_dest_capacity_for, Coord, TickMode, MAX_DESTS, MAX_QUEUE_DEPTH};
+
+/// Largest supported mesh edge.  Coordinates stay `u8`, but the header
+/// destination encoding (see [`crate::noc::flit::bits_per_dest`]) and the
+/// source-LUT packing are validated up to this bound.
+pub const MAX_MESH_DIM: u8 = 16;
 
 /// What occupies one mesh tile.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,11 +83,19 @@ pub struct NocConfig {
     /// Maximum multicast destinations this SoC enables (further bounded by
     /// the header capacity of `bitwidth`).
     pub max_mcast_dests: usize,
+    /// How `Noc::tick` schedules the six planes (sequential, parallel, or
+    /// auto thread fan-out); results are identical in every mode.
+    pub tick_mode: TickMode,
 }
 
 impl Default for NocConfig {
     fn default() -> Self {
-        Self { bitwidth: 256, queue_depth: 4, max_mcast_dests: MAX_DESTS }
+        Self {
+            bitwidth: 256,
+            queue_depth: 4,
+            max_mcast_dests: MAX_DESTS,
+            tick_mode: TickMode::Auto,
+        }
     }
 }
 
@@ -243,6 +256,50 @@ impl SocConfig {
         }
     }
 
+    /// A scaled platform: `width x height` mesh with CPU at (0,0), memory
+    /// at (0, width-1), I/O at (height-1, 0), and `acc_tiles` dual-socket
+    /// accelerator tiles spread evenly over the remaining positions (the
+    /// rest stay empty, as a sparsely-populated agile SoC floorplan would).
+    pub fn scaled_mesh(width: u8, height: u8, acc_tiles: usize) -> Self {
+        assert!(width >= 3 && height >= 3, "scaled mesh needs room for cpu/mem/io");
+        let n = width as usize * height as usize;
+        let mut tiles = vec![TileKind::Empty; n];
+        let cpu = 0;
+        let mem = width as usize - 1;
+        let io = n - width as usize;
+        tiles[cpu] = TileKind::Cpu;
+        tiles[mem] = TileKind::Mem;
+        tiles[io] = TileKind::Io;
+        let free: Vec<usize> =
+            (0..n).filter(|&i| i != cpu && i != mem && i != io).collect();
+        assert!(acc_tiles <= free.len(), "mesh too small for {acc_tiles} accelerator tiles");
+        for k in 0..acc_tiles {
+            tiles[free[k * free.len() / acc_tiles]] = TileKind::Acc { accs: 2 };
+        }
+        Self {
+            width,
+            height,
+            tiles,
+            noc: NocConfig::default(),
+            mem: MemConfig::default(),
+            acc: AccConfig::default(),
+            host: HostConfig::default(),
+        }
+    }
+
+    /// The 16x16 evaluation platform for the wide Fig. 6 sweeps: 17
+    /// dual-socket accelerator tiles (34 sockets — producer + up to 32
+    /// packed consumers + spare) and a memory system scaled up with the
+    /// mesh (wider DRAM channel, doubled ingress, 256 MiB backing store so
+    /// 32 consumers x 4 MiB output regions fit).
+    pub fn scaled_16x16() -> Self {
+        let mut cfg = Self::scaled_mesh(16, 16, 17);
+        cfg.mem.dram_bytes = 256 << 20;
+        cfg.mem.channel_bytes_per_cycle = 64;
+        cfg.mem.requests_per_cycle = 2;
+        cfg
+    }
+
     /// Load a JSON config file.
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         let path = path.as_ref();
@@ -275,6 +332,11 @@ impl SocConfig {
             set_u64(n, "bitwidth", |v| cfg.noc.bitwidth = v as u32)?;
             set_u64(n, "queue_depth", |v| cfg.noc.queue_depth = v as usize)?;
             set_u64(n, "max_mcast_dests", |v| cfg.noc.max_mcast_dests = v as usize)?;
+            if let Some(m) = n.get("tick_mode") {
+                let s = m.as_str()?;
+                cfg.noc.tick_mode = TickMode::from_code(s)
+                    .ok_or_else(|| anyhow!("unknown tick_mode {s:?}"))?;
+            }
         }
         if let Some(m) = j.get("mem") {
             set_u64(m, "dram_bytes", |v| cfg.mem.dram_bytes = v)?;
@@ -331,6 +393,7 @@ impl SocConfig {
                     ("bitwidth", Json::from(self.noc.bitwidth as u64)),
                     ("queue_depth", Json::from(self.noc.queue_depth as u64)),
                     ("max_mcast_dests", Json::from(self.noc.max_mcast_dests as u64)),
+                    ("tick_mode", Json::from(self.noc.tick_mode.code())),
                 ]),
             ),
             (
@@ -378,9 +441,12 @@ impl SocConfig {
         .to_string()
     }
 
-    /// Effective multicast destination bound: min(user cap, header capacity).
+    /// Effective multicast destination bound: min(user cap, header capacity
+    /// for this mesh's coordinate encoding).
     pub fn mcast_capacity(&self) -> usize {
-        self.noc.max_mcast_dests.min(header_dest_capacity(self.noc.bitwidth))
+        self.noc
+            .max_mcast_dests
+            .min(header_dest_capacity_for(self.noc.bitwidth, self.width, self.height))
     }
 
     /// Payload bytes per flit.
@@ -418,6 +484,21 @@ impl SocConfig {
         self.coord_of(i)
     }
 
+    /// Most accelerator sockets sharing one tile's NoC port (1 or 2; 1 on
+    /// a platform with no accelerator tiles).  Bounds how many consumers
+    /// can share one multicast destination tile.
+    pub fn max_sockets_per_tile(&self) -> usize {
+        self.tiles
+            .iter()
+            .map(|t| match t {
+                TileKind::Acc { accs } => *accs as usize,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+            .max(1)
+    }
+
     /// `(tile coord, slot)` of every accelerator socket, in a stable order.
     pub fn acc_sockets(&self) -> Vec<(Coord, u8)> {
         let mut v = Vec::new();
@@ -434,7 +515,10 @@ impl SocConfig {
     /// Validate structural invariants.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.width >= 2 && self.height >= 2, "mesh must be at least 2x2");
-        ensure!(self.width <= 8 && self.height <= 8, "coords are 3-bit: max 8x8");
+        ensure!(
+            self.width <= MAX_MESH_DIM && self.height <= MAX_MESH_DIM,
+            "mesh edges capped at {MAX_MESH_DIM} (header coordinate encoding)"
+        );
         ensure!(
             self.tiles.len() == self.width as usize * self.height as usize,
             "tile map has {} entries for a {}x{} mesh",
@@ -492,6 +576,59 @@ mod tests {
         let c = SocConfig::small_3x3();
         c.validate().unwrap();
         assert_eq!(c.acc_sockets().len(), 6);
+    }
+
+    #[test]
+    fn scaled_16x16_validates() {
+        let c = SocConfig::scaled_16x16();
+        c.validate().unwrap();
+        assert_eq!(c.acc_sockets().len(), 34, "producer + 32 packed consumers + spare");
+        assert_eq!(c.mem_tile(), (0, 15));
+        assert_eq!(c.cpu_tile(), (0, 0));
+        // 9-bit destinations shrink the narrow-NoC capacities...
+        let mut c64 = c.clone();
+        c64.noc.bitwidth = 64;
+        assert_eq!(c64.mcast_capacity(), 3);
+        let mut c128 = c.clone();
+        c128.noc.bitwidth = 128;
+        assert_eq!(c128.mcast_capacity(), 10);
+        // ...while 256-bit still reaches the paper's 16-destination cap.
+        assert_eq!(c.mcast_capacity(), 16);
+    }
+
+    #[test]
+    fn scaled_mesh_spread_is_deterministic() {
+        let a = SocConfig::scaled_mesh(12, 9, 10);
+        let b = SocConfig::scaled_mesh(12, 9, 10);
+        a.validate().unwrap();
+        assert_eq!(a.tiles, b.tiles);
+        assert_eq!(a.acc_sockets().len(), 20);
+    }
+
+    #[test]
+    fn rejects_meshes_beyond_the_coordinate_bound() {
+        let mut c = SocConfig::scaled_mesh(16, 16, 4);
+        c.validate().unwrap();
+        c.width = 17;
+        c.tiles = vec![TileKind::Empty; 17 * 16];
+        c.tiles[0] = TileKind::Cpu;
+        c.tiles[1] = TileKind::Mem;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tick_mode_roundtrips_through_json() {
+        use crate::noc::TickMode;
+        let mut c = SocConfig::paper_3x4();
+        c.noc.tick_mode = TickMode::Parallel;
+        let c2 = SocConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.noc.tick_mode, TickMode::Parallel);
+        assert_eq!(
+            SocConfig::from_json("{}").unwrap().noc.tick_mode,
+            TickMode::Auto,
+            "default stays auto"
+        );
+        assert!(SocConfig::from_json(r#"{"noc": {"tick_mode": "bogus"}}"#).is_err());
     }
 
     #[test]

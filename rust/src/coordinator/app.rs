@@ -95,12 +95,22 @@ impl App {
             for inv in &phase.invocations {
                 ensure!((inv.acc as usize) < soc.acc_count(), "unknown accelerator {}", inv.acc);
                 // Multicast fan-out bounded by the NoC header capacity.
+                // Consumers are sockets, header destinations are tiles, and
+                // slots on one tile share a single delivered copy — so on a
+                // dual-socket platform up to 2x the header capacity of
+                // consumers can join one transaction (a transaction that
+                // still spans more tiles than one header encodes serializes
+                // into per-group messages in `socket::p2p`).  On
+                // single-socket platforms the sharing factor is 1 and this
+                // launch check stays exact.
                 let wr_user = inv.args[traffic_gen::args::WR_USER];
+                let slot_share = soc.cfg.max_sockets_per_tile();
                 ensure!(
-                    wr_user as usize <= mcast_cap.max(1),
-                    "write user {} exceeds multicast capacity {}",
+                    wr_user as usize <= (slot_share * mcast_cap).max(1),
+                    "write user {} exceeds multicast capacity {} (x{} socket slots per tile)",
                     wr_user,
-                    mcast_cap
+                    mcast_cap,
+                    slot_share
                 );
                 let program = match &inv.program {
                     ProgramKind::Tgen => traffic_gen::program(),
@@ -180,19 +190,29 @@ mod tests {
     #[test]
     fn rejects_oversized_multicast() {
         let mut cfg = SocConfig::paper_3x4();
-        cfg.noc.bitwidth = 64; // capacity 5
+        cfg.noc.bitwidth = 64; // capacity 5 tiles = at most 10 consumer slots
         let mut soc = Soc::new(cfg).unwrap();
-        let app = App::new().phase(vec![Invocation::tgen(
-            0,
-            traffic_gen::TgenArgs {
-                total_bytes: 4096,
-                burst_bytes: 4096,
-                rd_user: 0,
-                wr_user: 8, // 8 > 5
-                vaddr_in: 0,
-                vaddr_out: 0,
-            },
-        )]);
-        assert!(app.launch(&mut soc).is_err());
+        let mk = |wr_user: u16| {
+            App::new().phase(vec![Invocation::tgen(
+                0,
+                traffic_gen::TgenArgs {
+                    total_bytes: 4096,
+                    burst_bytes: 4096,
+                    rd_user: 0,
+                    wr_user,
+                    vaddr_in: 0,
+                    vaddr_out: 0,
+                },
+            )])
+        };
+        assert!(mk(11).launch(&mut soc).is_err(), "11 > 2 x 5");
+        assert!(mk(10).launch(&mut soc).is_ok(), "two slots per tile may share a copy");
+        // Single-socket platform: no slot sharing, the bound stays exact —
+        // an oversized fan-out must fail at launch, not panic at send time.
+        let mut cfg = SocConfig::small_3x3();
+        cfg.noc.bitwidth = 64; // capacity 5, one socket per tile
+        let mut soc = Soc::new(cfg).unwrap();
+        assert!(mk(6).launch(&mut soc).is_err(), "6 > 1 x 5 on acc1 tiles");
+        assert!(mk(5).launch(&mut soc).is_ok());
     }
 }

@@ -13,6 +13,7 @@ use anyhow::{ensure, Result};
 use crate::accel::traffic_gen::TgenArgs;
 use crate::config::SocConfig;
 use crate::coordinator::{App, Invocation, ProgramKind, Soc};
+use crate::noc::Coord;
 
 /// DRAM layout for the Fig. 6 workload.
 pub mod layout {
@@ -25,9 +26,22 @@ pub mod layout {
     /// Stride between consumer outputs.
     pub const OUT_STRIDE: u64 = 0x0020_0000;
 
-    /// Output region of consumer `i`.
+    /// Output region of consumer `i` (default stride).
     pub fn out(i: usize) -> u64 {
-        OUT_BASE + i as u64 * OUT_STRIDE
+        out_at(i, OUT_STRIDE)
+    }
+
+    /// Output region of consumer `i` with an explicit stride.
+    pub fn out_at(i: usize, stride: u64) -> u64 {
+        OUT_BASE + i as u64 * stride
+    }
+
+    /// Stride between consumer outputs for a `bytes`-sized transfer: the
+    /// default 2 MiB, grown to the next power of two when a transfer
+    /// (e.g. the 16x16 sweep's 4 MiB points) would overrun it.  Transfers
+    /// up to 2 MiB keep the historical layout bit-for-bit.
+    pub fn stride_for(bytes: u32) -> u64 {
+        OUT_STRIDE.max((bytes as u64).next_power_of_two())
     }
 }
 
@@ -72,6 +86,13 @@ pub struct Fig6Options {
     pub verify: bool,
     /// Simulation cycle budget per run.
     pub max_cycles: u64,
+    /// Pack consumers two per tile, skipping the producer's tile: because
+    /// two sockets on one tile share a single delivered multicast copy,
+    /// fan-outs up to **twice** the header capacity (32 consumers on a
+    /// 256-bit NoC) fit one multicast transaction on dual-socket
+    /// platforms.  `false` keeps the paper experiments' placement
+    /// (consumer `c` is accelerator `c + 1`) bit-for-bit.
+    pub pack_consumers: bool,
 }
 
 impl Default for Fig6Options {
@@ -83,7 +104,17 @@ impl Default for Fig6Options {
             baseline_sequential: true,
             verify: true,
             max_cycles: 500_000_000,
+            pack_consumers: false,
         }
+    }
+}
+
+impl Fig6Options {
+    /// The scaled 16x16 sweep configuration: `SocConfig::scaled_16x16`
+    /// (17 dual-socket tiles, scaled memory system) with consumers packed
+    /// two per tile so the 32-consumer points fit one multicast.
+    pub fn mesh_16x16() -> Self {
+        Self { soc: SocConfig::scaled_16x16(), pack_consumers: true, ..Self::default() }
     }
 }
 
@@ -103,9 +134,9 @@ fn fill_input(soc: &mut Soc, bytes: u32) -> Vec<u8> {
     data
 }
 
-fn verify_outputs(soc: &mut Soc, consumers: usize, data: &[u8]) -> Result<()> {
+fn verify_outputs(soc: &mut Soc, consumers: usize, stride: u64, data: &[u8]) -> Result<()> {
     for c in 0..consumers {
-        let got = soc.read_mem(layout::out(c), data.len());
+        let got = soc.read_mem(layout::out_at(c, stride), data.len());
         ensure!(
             got == data,
             "consumer {c}: output mismatch (first divergence at byte {:?})",
@@ -115,11 +146,82 @@ fn verify_outputs(soc: &mut Soc, consumers: usize, data: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// The accelerator ids acting as consumers 0..n.  The default keeps the
+/// paper experiments' assignment (consumer `c` = accelerator `c + 1`);
+/// with `pack_consumers` the consumers are taken pairwise from dual-socket
+/// tiles off the producer's tile, so the destination-*tile* count is
+/// `ceil(n / 2)` and fan-outs up to twice the header capacity fit one
+/// multicast.
+fn consumer_accs(soc: &Soc, consumers: usize, opts: &Fig6Options) -> Result<Vec<u16>> {
+    ensure!(consumers + 1 <= soc.acc_count(), "not enough accelerator sockets");
+    if !opts.pack_consumers {
+        return Ok((1..=consumers as u16).collect());
+    }
+    let prod_tile = soc.acc_location(0).0;
+    let accs: Vec<u16> = (1..soc.acc_count() as u16)
+        .filter(|&a| soc.acc_location(a).0 != prod_tile)
+        .take(consumers)
+        .collect();
+    ensure!(
+        accs.len() == consumers,
+        "only {} accelerator sockets off the producer's tile for {} consumers",
+        accs.len(),
+        consumers
+    );
+    Ok(accs)
+}
+
+/// Bound the multicast fan-out by what one header can actually encode:
+/// the number of distinct destination *tiles* of the transaction.
+fn check_mcast_capacity(soc: &Soc, accs: &[u16], opts: &Fig6Options) -> Result<()> {
+    if !opts.pack_consumers {
+        // Paper placement: one consumer per destination slot.
+        ensure!(
+            accs.len() <= soc.cfg.mcast_capacity(),
+            "{} consumers exceed multicast capacity {}",
+            accs.len(),
+            soc.cfg.mcast_capacity()
+        );
+        return Ok(());
+    }
+    let mut tiles: Vec<Coord> = Vec::new();
+    for &a in accs {
+        let t = soc.acc_location(a).0;
+        if !tiles.contains(&t) {
+            tiles.push(t);
+        }
+    }
+    ensure!(
+        tiles.len() <= soc.cfg.mcast_capacity(),
+        "{} destination tiles exceed multicast capacity {}",
+        tiles.len(),
+        soc.cfg.mcast_capacity()
+    );
+    Ok(())
+}
+
+/// Bound-check the DRAM layout for this run's transfer size.
+fn check_layout(soc: &Soc, consumers: usize, bytes: u32, stride: u64) -> Result<()> {
+    ensure!(
+        bytes as u64 <= layout::MID - layout::IN,
+        "{bytes}-byte transfer overruns the input/staging layout"
+    );
+    let end = layout::out_at(consumers.saturating_sub(1), stride) + bytes as u64;
+    ensure!(
+        end <= soc.cfg.mem.dram_bytes,
+        "consumer outputs end at {end:#x} beyond DRAM ({:#x}); raise mem.dram_bytes",
+        soc.cfg.mem.dram_bytes
+    );
+    Ok(())
+}
+
 /// Run the shared-memory baseline: producer streams IN -> MID through
 /// memory; after its IRQ the consumers stream MID -> OUT_i.
 pub fn run_baseline(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<u64> {
     let mut soc = Soc::new(opts.soc.clone())?;
-    ensure!(consumers + 1 <= soc.acc_count(), "not enough accelerator sockets");
+    let accs = consumer_accs(&soc, consumers, opts)?;
+    let stride = layout::stride_for(bytes);
+    check_layout(&soc, consumers, bytes, stride)?;
     let data = fill_input(&mut soc, bytes);
     let mut producer = Invocation::tgen(
         0,
@@ -134,16 +236,16 @@ pub fn run_baseline(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<
     );
     producer.program = tgen_program(opts);
     let mut consumer_invs = Vec::new();
-    for c in 0..consumers {
+    for (c, &acc) in accs.iter().enumerate() {
         let mut inv = Invocation::tgen(
-            (c + 1) as u16,
+            acc,
             TgenArgs {
                 total_bytes: bytes,
                 burst_bytes: opts.burst_bytes,
                 rd_user: 0,
                 wr_user: 0,
                 vaddr_in: layout::MID,
-                vaddr_out: layout::out(c),
+                vaddr_out: layout::out_at(c, stride),
             },
         );
         inv.program = tgen_program(opts);
@@ -160,7 +262,7 @@ pub fn run_baseline(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<
     app.launch(&mut soc)?;
     let cycles = soc.run(opts.max_cycles)?;
     if opts.verify {
-        verify_outputs(&mut soc, consumers, &data)?;
+        verify_outputs(&mut soc, consumers, stride, &data)?;
     }
     Ok(cycles)
 }
@@ -170,13 +272,10 @@ pub fn run_baseline(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<
 /// one phase, synchronized by the P2P protocol.
 pub fn run_multicast(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result<u64> {
     let mut soc = Soc::new(opts.soc.clone())?;
-    ensure!(consumers + 1 <= soc.acc_count(), "not enough accelerator sockets");
-    ensure!(
-        consumers <= soc.cfg.mcast_capacity(),
-        "{} consumers exceed multicast capacity {}",
-        consumers,
-        soc.cfg.mcast_capacity()
-    );
+    let accs = consumer_accs(&soc, consumers, opts)?;
+    check_mcast_capacity(&soc, &accs, opts)?;
+    let stride = layout::stride_for(bytes);
+    check_layout(&soc, consumers, bytes, stride)?;
     let data = fill_input(&mut soc, bytes);
     let mut invocations = Vec::new();
     let mut producer = Invocation::tgen(
@@ -192,16 +291,16 @@ pub fn run_multicast(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result
     );
     producer.program = tgen_program(opts);
     invocations.push(producer);
-    for c in 0..consumers {
+    for (c, &acc) in accs.iter().enumerate() {
         let mut inv = Invocation::tgen(
-            (c + 1) as u16,
+            acc,
             TgenArgs {
                 total_bytes: bytes,
                 burst_bytes: opts.burst_bytes,
                 rd_user: 1, // LUT entry 1 -> producer
                 wr_user: 0,
                 vaddr_in: 0,
-                vaddr_out: layout::out(c),
+                vaddr_out: layout::out_at(c, stride),
             },
         )
         .with_src(1, 0);
@@ -211,7 +310,7 @@ pub fn run_multicast(consumers: usize, bytes: u32, opts: &Fig6Options) -> Result
     App::new().phase(invocations).launch(&mut soc)?;
     let cycles = soc.run(opts.max_cycles)?;
     if opts.verify {
-        verify_outputs(&mut soc, consumers, &data)?;
+        verify_outputs(&mut soc, consumers, stride, &data)?;
     }
     Ok(cycles)
 }
@@ -234,4 +333,26 @@ pub fn paper_consumer_counts() -> Vec<usize> {
 /// Data sizes from one burst (4 KB) to the 1 MB plateau.
 pub fn paper_data_sizes() -> Vec<u32> {
     vec![4 << 10, 16 << 10, 64 << 10, 256 << 10, 1 << 20]
+}
+
+/// Consumer counts of the scaled 16x16 sweep — past the paper's 16, up to
+/// 32 packed consumers (two per destination tile).
+pub fn extended_consumer_counts() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32]
+}
+
+/// Data sizes of the scaled sweep, out to 4 MB past the paper's plateau.
+pub fn extended_data_sizes() -> Vec<u32> {
+    vec![4 << 10, 64 << 10, 1 << 20, 4 << 20]
+}
+
+/// The `--quick` subset of [`paper_data_sizes`] (benches, examples, CI
+/// smoke) — kept here so every driver runs the same grid.
+pub fn quick_data_sizes() -> Vec<u32> {
+    vec![4 << 10, 64 << 10]
+}
+
+/// The `--quick --mesh16` subset of [`extended_data_sizes`].
+pub fn quick_extended_data_sizes() -> Vec<u32> {
+    vec![64 << 10, 1 << 20]
 }

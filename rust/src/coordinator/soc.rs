@@ -32,12 +32,13 @@ impl Soc {
     /// Build an idle SoC from a validated configuration.
     pub fn new(cfg: SocConfig) -> Result<Self> {
         cfg.validate()?;
-        let noc = Noc::new(MeshParams {
+        let mut noc = Noc::new(MeshParams {
             width: cfg.width,
             height: cfg.height,
             flit_bytes: cfg.flit_bytes(),
             queue_depth: cfg.noc.queue_depth,
         });
+        noc.set_tick_mode(cfg.noc.tick_mode);
         let mut tiles = Vec::with_capacity(cfg.tiles.len());
         let mut acc_index = Vec::new();
         let mut next_acc: u16 = 0;

@@ -7,11 +7,12 @@
 //! espsim config                        # print the default SoC config JSON
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use espsim::area::fig4_sweep;
 use espsim::config::SocConfig;
 use espsim::coordinator::experiments::{
-    paper_consumer_counts, paper_data_sizes, run_fig6_point, Fig6Options,
+    extended_consumer_counts, extended_data_sizes, paper_consumer_counts, paper_data_sizes,
+    run_fig6_point, Fig6Options,
 };
 
 const USAGE: &str = "\
@@ -22,8 +23,9 @@ USAGE:
       Fig. 4: router area sweep (bitwidth x multicast destinations).
   espsim run [--consumers N] [--kb K] [--single-buffered] [--config PATH]
       One Fig. 6 point: multicast vs shared-memory baseline.
-  espsim sweep [--config PATH]
-      The full Fig. 6 grid (consumers x data sizes).
+  espsim sweep [--config PATH] [--mesh16]
+      The full Fig. 6 grid (consumers x data sizes); --mesh16 runs the
+      scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim config
       Print the default SoC configuration as JSON.
 ";
@@ -120,15 +122,26 @@ fn main() -> Result<()> {
             );
         }
         "sweep" => {
+            let mesh16 = args.flag("--mesh16");
             let config = args.value("--config")?;
             args.finish()?;
-            let opts = load_opts(config)?;
+            // --mesh16 implies the scaled platform (256 MiB DRAM, packed
+            // consumers); a user config would silently undo what the
+            // 32-consumer / 4 MB grid needs, so refuse the combination.
+            ensure!(
+                !(mesh16 && config.is_some()),
+                "--mesh16 selects the scaled 16x16 platform; it cannot be combined with --config"
+            );
+            let opts = if mesh16 { Fig6Options::mesh_16x16() } else { load_opts(config)? };
+            let consumers =
+                if mesh16 { extended_consumer_counts() } else { paper_consumer_counts() };
+            let sizes = if mesh16 { extended_data_sizes() } else { paper_data_sizes() };
             println!(
                 "{:>10} {:>10} {:>12} {:>12} {:>8}",
                 "consumers", "bytes", "baseline", "multicast", "speedup"
             );
-            for &n in &paper_consumer_counts() {
-                for &bytes in &paper_data_sizes() {
+            for &n in &consumers {
+                for &bytes in &sizes {
                     let p = run_fig6_point(n, bytes, &opts)?;
                     println!(
                         "{:>10} {:>10} {:>12} {:>12} {:>7.2}x",

@@ -51,20 +51,50 @@ impl Dir {
 /// supports up to 16).
 pub const MAX_DESTS: usize = 16;
 
-/// Fixed header metadata bits (message kind, source coordinate, sequence /
-/// length fields) — calibrated so the capacity matches the paper's numbers.
-pub const HEADER_META_BITS: u32 = 29;
+/// Bits of one coordinate component spanning `0..n`: `ceil(log2(n))`, with
+/// a floor of 3 — the RTL's fixed coordinate field, sized for the 8x8
+/// meshes the paper prototypes.  Meshes up to 8x8 therefore share one
+/// encoding (and the paper's §4 capacities); wider meshes grow the field.
+pub const fn coord_component_bits(n: u8) -> u32 {
+    let mut bits = 3;
+    while (1u32 << bits) < n as u32 {
+        bits += 1;
+    }
+    bits
+}
 
-/// Bits to encode one destination (6-bit coordinate + valid bit, as in an
-/// 8x8-bounded mesh).
-pub const BITS_PER_DEST: u32 = 7;
+/// Bits to encode one destination in the header: the `(y, x)` coordinate
+/// of a `width x height` mesh plus a valid bit.  7 on meshes up to 8x8
+/// (the paper's encoding), 9 on a 16x16 mesh.
+pub const fn bits_per_dest(width: u8, height: u8) -> u32 {
+    coord_component_bits(height) + coord_component_bits(width) + 1
+}
 
-/// How many destinations a header flit of `bitwidth` bits can encode,
-/// capped at [`MAX_DESTS`].  64 -> 5, 128 -> 14, 256 -> 16, matching §4 of
-/// the paper.
+/// Header metadata bits that do not scale with the mesh (message kind,
+/// sequence / length fields) — calibrated so an 8x8 mesh reproduces the
+/// paper's capacities.
+pub const HEADER_FIXED_META_BITS: u32 = 23;
+
+/// Header metadata bits for a `width x height` mesh: the fixed fields plus
+/// the source coordinate.  29 on meshes up to 8x8, matching the paper.
+pub const fn header_meta_bits(width: u8, height: u8) -> u32 {
+    HEADER_FIXED_META_BITS + coord_component_bits(height) + coord_component_bits(width)
+}
+
+/// How many destinations a header flit of `bitwidth` bits can encode on a
+/// `width x height` mesh, capped at [`MAX_DESTS`].  On meshes up to 8x8
+/// this is the paper's §4 table (64 -> 5, 128 -> 14, 256 -> 16); wider
+/// meshes spend more header bits per coordinate and the capacity shrinks
+/// (16x16: 64 -> 3, 128 -> 10, 256 -> 16).
+pub fn header_dest_capacity_for(bitwidth: u32, width: u8, height: u8) -> usize {
+    let avail = bitwidth.saturating_sub(header_meta_bits(width, height));
+    ((avail / bits_per_dest(width, height)) as usize).min(MAX_DESTS)
+}
+
+/// Header destination capacity in the paper's (up to 8x8) encoding:
+/// 64 -> 5, 128 -> 14, 256 -> 16, matching §4.
 pub fn header_dest_capacity(bitwidth: u32) -> usize {
-    let avail = bitwidth.saturating_sub(HEADER_META_BITS);
-    ((avail / BITS_PER_DEST) as usize).min(MAX_DESTS)
+    header_dest_capacity_for(bitwidth, 8, 8)
 }
 
 /// A fixed-capacity destination list (the multicast header extension).
@@ -301,6 +331,38 @@ mod tests {
         assert_eq!(header_dest_capacity(128), 14);
         assert_eq!(header_dest_capacity(256), 16); // capped at 16
         assert_eq!(header_dest_capacity(32), 0); // no room: control-only
+    }
+
+    #[test]
+    fn coordinate_fields_floor_at_the_rtl_width() {
+        // Every mesh up to 8x8 shares the paper's encoding.
+        for n in 2u8..=8 {
+            assert_eq!(coord_component_bits(n), 3, "n={n}");
+        }
+        for n in 9u8..=16 {
+            assert_eq!(coord_component_bits(n), 4, "n={n}");
+        }
+        assert_eq!(bits_per_dest(8, 8), 7);
+        assert_eq!(bits_per_dest(4, 3), 7, "small meshes keep the 8x8 fields");
+        assert_eq!(bits_per_dest(16, 16), 9);
+        assert_eq!(header_meta_bits(8, 8), 29);
+        assert_eq!(header_meta_bits(16, 16), 31);
+    }
+
+    #[test]
+    fn header_capacity_shrinks_on_wide_meshes() {
+        // Paper numbers on every mesh up to 8x8...
+        for (w, h) in [(2u8, 2u8), (4, 3), (8, 8)] {
+            assert_eq!(header_dest_capacity_for(64, w, h), 5);
+            assert_eq!(header_dest_capacity_for(128, w, h), 14);
+            assert_eq!(header_dest_capacity_for(256, w, h), 16);
+        }
+        // ...and the recomputed 9-bit-destination capacities on 16x16.
+        assert_eq!(header_dest_capacity_for(64, 16, 16), 3);
+        assert_eq!(header_dest_capacity_for(128, 16, 16), 10);
+        assert_eq!(header_dest_capacity_for(256, 16, 16), 16); // 25, capped
+        // Mixed shapes size each axis's coordinate field independently.
+        assert_eq!(header_dest_capacity_for(128, 16, 4), 12); // 30 meta, 8/dest
     }
 
     #[test]

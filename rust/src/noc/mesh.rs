@@ -174,7 +174,7 @@ impl ActiveSet {
 }
 
 /// Per-plane statistics.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct MeshStats {
     /// Flit-hops: one per flit per output port traversal.
     pub flit_hops: u64,
@@ -286,6 +286,13 @@ impl Mesh {
     /// True when no flit or pending injection remains anywhere (O(1)).
     pub fn is_idle(&self) -> bool {
         self.work == 0
+    }
+
+    /// Items in flight (queued flits + pending injections) — the plane's
+    /// activity level, used by [`super::planes::Noc`] to decide whether
+    /// thread fan-out is worth it this cycle.
+    pub fn in_flight(&self) -> u64 {
+        self.work
     }
 
     /// Per-router forwarded-flit counters (for utilization reports).

@@ -18,9 +18,10 @@ pub mod planes;
 pub mod router;
 pub mod routing;
 
-pub use flit::{header_dest_capacity, CohOp, Coord, DestList, Dir, Flit, Message, MsgKind,
-               PktId, MAX_DESTS};
+pub use flit::{bits_per_dest, coord_component_bits, header_dest_capacity,
+               header_dest_capacity_for, header_meta_bits, CohOp, Coord, DestList, Dir, Flit,
+               Message, MsgKind, PktId, MAX_DESTS};
 pub use mesh::{Mesh, MeshParams, MeshStats};
-pub use planes::{Noc, Plane, NUM_PLANES};
+pub use planes::{Noc, Plane, TickMode, NUM_PLANES};
 pub use router::MAX_QUEUE_DEPTH;
 pub use routing::{branch_mask, hop_count, on_xy_path, partition_dests, xy_dir};

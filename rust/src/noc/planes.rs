@@ -41,15 +41,77 @@ impl Plane {
     }
 }
 
+/// How [`Noc::tick`] advances the six planes.
+///
+/// The planes share no state — each [`Mesh`] owns its routers, queues,
+/// packet slab, and stats, and tiles only touch the NoC between ticks — so
+/// a cycle may advance them concurrently without changing a single bit of
+/// the outcome (`tests/prop_noc_parallel.rs` pins this).  Fanning out
+/// costs a scoped-thread spawn per busy plane, so it only pays off when
+/// several planes carry substantial in-flight traffic; `Auto` applies that
+/// heuristic, and `Sequential` remains the always-correct fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TickMode {
+    /// One plane after another on the calling thread.
+    Sequential,
+    /// Every busy plane on its own scoped thread, unconditionally.
+    Parallel,
+    /// Fan out only when at least [`PAR_MIN_PLANES`] planes each carry at
+    /// least [`PAR_MIN_PLANE_WORK`] in-flight items.
+    #[default]
+    Auto,
+}
+
+impl TickMode {
+    /// Config-file code ("sequential", "parallel", "auto").
+    pub fn code(self) -> &'static str {
+        match self {
+            TickMode::Sequential => "sequential",
+            TickMode::Parallel => "parallel",
+            TickMode::Auto => "auto",
+        }
+    }
+
+    /// Parse a config-file code.
+    pub fn from_code(s: &str) -> Option<Self> {
+        Some(match s {
+            "sequential" => TickMode::Sequential,
+            "parallel" => TickMode::Parallel,
+            "auto" => TickMode::Auto,
+            _ => return None,
+        })
+    }
+}
+
+/// `Auto` threshold: minimum in-flight items per plane before the plane
+/// counts as worth a thread (a plane ticks in well under a thread-spawn's
+/// cost below this).
+pub const PAR_MIN_PLANE_WORK: u64 = 512;
+
+/// `Auto` threshold: minimum number of heavily-busy planes before
+/// [`Noc::tick`] fans out.
+pub const PAR_MIN_PLANES: usize = 2;
+
 /// The six-plane NoC.
 pub struct Noc {
     meshes: Vec<Mesh>,
+    mode: TickMode,
 }
 
 impl Noc {
-    /// Build all planes with identical parameters.
+    /// Build all planes with identical parameters ([`TickMode::Auto`]).
     pub fn new(p: MeshParams) -> Self {
-        Self { meshes: (0..NUM_PLANES).map(|_| Mesh::new(p)).collect() }
+        Self { meshes: (0..NUM_PLANES).map(|_| Mesh::new(p)).collect(), mode: TickMode::Auto }
+    }
+
+    /// Select how [`Noc::tick`] schedules the planes.
+    pub fn set_tick_mode(&mut self, mode: TickMode) {
+        self.mode = mode;
+    }
+
+    /// Current plane-scheduling mode.
+    pub fn tick_mode(&self) -> TickMode {
+        self.mode
     }
 
     /// Plane parameters.
@@ -72,11 +134,34 @@ impl Noc {
         self.meshes[plane.idx()].has_rx(tile)
     }
 
-    /// Advance every plane one cycle.
+    /// Advance every plane one cycle (scheduling per [`TickMode`]; the
+    /// result is identical in every mode).
     pub fn tick(&mut self, now: u64) {
-        for m in &mut self.meshes {
-            m.tick(now);
+        let parallel = match self.mode {
+            TickMode::Sequential => false,
+            TickMode::Parallel => true,
+            TickMode::Auto => {
+                self.meshes.iter().filter(|m| m.in_flight() >= PAR_MIN_PLANE_WORK).count()
+                    >= PAR_MIN_PLANES
+            }
+        };
+        if !parallel {
+            for m in &mut self.meshes {
+                m.tick(now);
+            }
+            return;
         }
+        std::thread::scope(|s| {
+            let mut busy = self.meshes.iter_mut().filter(|m| !m.is_idle());
+            // Keep one busy plane for the calling thread; spawn the rest.
+            let local = busy.next();
+            for m in busy {
+                s.spawn(move || m.tick(now));
+            }
+            if let Some(m) = local {
+                m.tick(now);
+            }
+        });
     }
 
     /// True when all planes are drained.
@@ -128,6 +213,47 @@ mod tests {
         assert!(matches!(noc.recv(Plane::DmaReq, (1, 1)).unwrap().kind, MsgKind::P2pReq { .. }));
         assert!(matches!(noc.recv(Plane::Misc, (1, 1)).unwrap().kind, MsgKind::Irq { .. }));
         assert!(noc.recv(Plane::CohReq, (1, 1)).is_none());
+    }
+
+    #[test]
+    fn parallel_mode_matches_sequential() {
+        let p = MeshParams { width: 4, height: 4, flit_bytes: 16, queue_depth: 4 };
+        let run = |mode: TickMode| {
+            let mut noc = Noc::new(p);
+            noc.set_tick_mode(mode);
+            assert_eq!(noc.tick_mode(), mode);
+            for (i, plane) in Plane::ALL.iter().enumerate() {
+                noc.send(
+                    *plane,
+                    (0, i as u8 % 4),
+                    Message::data(
+                        (0, i as u8 % 4),
+                        (3, 3),
+                        MsgKind::P2pData { seq: i as u32, prod_slot: 0 },
+                        std::sync::Arc::new(vec![i as u8; 300]),
+                    ),
+                );
+            }
+            let mut t = 0;
+            while !noc.is_idle() {
+                noc.tick(t);
+                t += 1;
+                assert!(t < 1000);
+            }
+            let seqs: Vec<u32> = Plane::ALL
+                .iter()
+                .map(|&pl| match noc.recv(pl, (3, 3)).expect("delivered").kind {
+                    MsgKind::P2pData { seq, .. } => seq,
+                    _ => unreachable!(),
+                })
+                .collect();
+            (t, noc.stats(), seqs)
+        };
+        let a = run(TickMode::Sequential);
+        let b = run(TickMode::Parallel);
+        let c = run(TickMode::Auto);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 
     #[test]

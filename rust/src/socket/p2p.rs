@@ -11,7 +11,10 @@
 //!   per-consumer *credit* of requested bytes;
 //! - a write burst with `user == n >= 2` waits until `n` distinct consumers
 //!   have joined the transaction, then sends **one multicast message** whose
-//!   header carries all destination coordinates.
+//!   header carries all destination coordinates.  A transaction whose
+//!   distinct destination *tiles* exceed the header capacity (possible past
+//!   the paper's operating points, e.g. unpacked fan-outs on big meshes)
+//!   serializes into one message per destination group instead.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -128,20 +131,10 @@ impl P2pUnit {
                 }
                 pairs.push((c.coord, c.slot));
             }
-            assert!(
-                dests.len() <= mcast_capacity,
-                "{} multicast destinations exceed NoC header capacity {}",
-                dests.len(),
-                mcast_capacity
-            );
-            let cons_slots = encode_cons_slots(&dests, &pairs);
             for c in &mut self.consumers[..n] {
                 c.credit -= chunk as u64;
             }
             self.bytes_sent += (chunk * n) as u64;
-            if dests.len() >= 2 {
-                self.multicasts += 1;
-            }
             let front = self.bursts.front_mut().unwrap();
             let payload: Arc<Vec<u8>> = if chunk == front.data.len() {
                 front.data.clone()
@@ -149,15 +142,30 @@ impl P2pUnit {
                 Arc::new(front.data[front.sent..front.sent + chunk].to_vec())
             };
             front.sent += chunk;
-            let kind = MsgKind::P2pData { seq: self.seq, prod_slot: self_slot };
-            self.seq += 1;
-            out.push(Message {
-                src: self_coord,
-                dests: DestList::from_slice(&dests),
-                kind,
-                payload,
-                cons_slots,
-            });
+            // One header encodes at most `mcast_capacity` destination
+            // tiles.  A transaction spanning more tiles serializes into one
+            // message per destination group — the producer socket replays
+            // the burst per group, as the RTL would — so an over-capacity
+            // fan-out degrades instead of being unsendable.  (Every Fig. 6
+            // configuration fits one group; extra messages only appear
+            // past the paper's operating points.)
+            for group in dests.chunks(mcast_capacity.max(1)) {
+                let group_pairs: Vec<(Coord, u8)> =
+                    pairs.iter().copied().filter(|(c, _)| group.contains(c)).collect();
+                let cons_slots = encode_cons_slots(group, &group_pairs);
+                if group.len() >= 2 {
+                    self.multicasts += 1;
+                }
+                let kind = MsgKind::P2pData { seq: self.seq, prod_slot: self_slot };
+                self.seq += 1;
+                out.push(Message {
+                    src: self_coord,
+                    dests: DestList::from_slice(group),
+                    kind,
+                    payload: payload.clone(),
+                    cons_slots,
+                });
+            }
             if front.sent == front.data.len() {
                 done.push(front.tag);
                 self.bursts.pop_front();
@@ -280,6 +288,36 @@ mod tests {
         u.submit_burst(burst(128), 2, 0);
         u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(out[0].dests.as_slice(), &[(0, 1), (0, 2)]);
+    }
+
+    #[test]
+    fn over_capacity_transaction_serializes_into_groups() {
+        // 5 consumers on 5 distinct tiles against a 2-tile header: the
+        // burst goes out as 3 messages (2+2+1 tiles), each consumer
+        // participating in exactly one of them, full payload each.
+        let mut u = P2pUnit::default();
+        let mut out = Vec::new();
+        let tiles = [(0u8, 1u8), (0, 2), (1, 0), (1, 1), (1, 2)];
+        for &t in &tiles {
+            u.on_request(t, 0, 256);
+        }
+        u.submit_burst(burst(256), 5, 3);
+        let done = u.tick((0, 0), 0, 2, &mut out);
+        assert_eq!(done, vec![3], "tag completes once the whole burst is out");
+        assert_eq!(out.len(), 3);
+        assert_eq!(
+            out.iter().map(|m| m.dests.len()).collect::<Vec<_>>(),
+            vec![2, 2, 1]
+        );
+        for &t in &tiles {
+            let covering: Vec<_> = out
+                .iter()
+                .filter(|m| cons_participates(&m.dests, m.cons_slots, t, 0))
+                .collect();
+            assert_eq!(covering.len(), 1, "tile {t:?} covered exactly once");
+            assert_eq!(covering[0].payload.len(), 256);
+        }
+        assert_eq!(u.multicasts, 2, "the 1-tile trailer group is not a multicast");
     }
 
     #[test]

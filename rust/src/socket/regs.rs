@@ -31,14 +31,16 @@ pub fn make_reg(slot: u8, regno: u16) -> u16 {
     ((slot as u16) << 12) | (regno & 0x0FFF)
 }
 
-/// Pack a source-LUT entry value.
+/// Pack a source-LUT entry value: 8-bit fields for each coordinate
+/// component (covers the full `u8` coordinate range, so meshes past 8x8
+/// need no repacking) and the socket slot.
 pub fn pack_src(coord: (u8, u8), slot: u8) -> u64 {
-    ((coord.0 as u64) << 12) | ((coord.1 as u64) << 8) | slot as u64
+    ((coord.0 as u64) << 16) | ((coord.1 as u64) << 8) | slot as u64
 }
 
 /// Unpack a source-LUT entry value.
 pub fn unpack_src(v: u64) -> ((u8, u8), u8) {
-    ((((v >> 12) & 0xF) as u8, ((v >> 8) & 0xF) as u8), (v & 0xFF) as u8)
+    ((((v >> 16) & 0xFF) as u8, ((v >> 8) & 0xFF) as u8), (v & 0xFF) as u8)
 }
 
 /// Invocation status values.
@@ -125,7 +127,7 @@ mod tests {
 
     #[test]
     fn src_pack_roundtrip() {
-        for c in [(0u8, 0u8), (2, 3), (7, 7)] {
+        for c in [(0u8, 0u8), (2, 3), (7, 7), (15, 9), (15, 15)] {
             for s in [0u8, 1] {
                 assert_eq!(unpack_src(pack_src(c, s)), (c, s));
             }

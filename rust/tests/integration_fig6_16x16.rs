@@ -1,0 +1,66 @@
+//! The scaled Fig. 6 sweep on the 16x16 platform: 32 packed consumers and
+//! transfers out to 4 MB, end-to-end verified (every consumer's output must
+//! equal the producer's input), with every point recorded to
+//! `BENCH_noc.json` — so each `cargo test` run refreshes the large-mesh
+//! perf baseline alongside the bench-produced records.
+
+use espsim::coordinator::experiments::{run_fig6_point, run_multicast, Fig6Options};
+use espsim::util::bench::{time_once, BenchJson};
+
+#[test]
+fn fig6_16x16_32_consumers_up_to_4mb_sweep() {
+    // Two points keep the debug-mode (`cargo test -q`) wall time bounded:
+    // the 32-consumer 1 MB plateau point and the headline 32-consumer 4 MB
+    // point; the full grid lives in `fig6_speedup -- --mesh16` (release).
+    let opts = Fig6Options::mesh_16x16();
+    let mut sink = BenchJson::from_args("fig6_16x16_test");
+    for (n, bytes) in [(32usize, 1u32 << 20), (32, 4 << 20)] {
+        let (p, wall) = time_once(|| {
+            run_fig6_point(n, bytes, &opts)
+                .unwrap_or_else(|e| panic!("{n} consumers, {bytes} bytes: {e}"))
+        });
+        // The multicast+P2P path must beat the sequential shared-memory
+        // baseline at every scaled operating point (data verified inside).
+        assert!(
+            p.speedup() > 1.0,
+            "{n} consumers, {bytes} bytes: speedup {:.2} <= 1",
+            p.speedup()
+        );
+        sink.record(
+            &format!("fig6_16x16_{n}c_{bytes}B"),
+            p.baseline_cycles + p.multicast_cycles,
+            wall,
+        );
+    }
+    assert_eq!(sink.len(), 2);
+    sink.finish();
+}
+
+#[test]
+fn fig6_16x16_more_consumers_than_header_capacity_needs_packing() {
+    // 32 consumers exceed the 16-destination header on their own; packing
+    // two consumer sockets per tile is what makes the transaction fit.
+    let packed = Fig6Options::mesh_16x16();
+    assert!(run_multicast(32, 64 << 10, &packed).is_ok());
+    let unpacked = Fig6Options { pack_consumers: false, ..Fig6Options::mesh_16x16() };
+    assert!(
+        run_multicast(32, 64 << 10, &unpacked).is_err(),
+        "32 unpacked consumers must exceed the 16-destination header"
+    );
+}
+
+#[test]
+fn fig6_16x16_speedup_grows_with_consumers() {
+    // The paper's headline trend extends past its 16-consumer axis: the
+    // sequential baseline scales linearly with N while one multicast per
+    // burst serves all N, so 32 consumers must beat 4.
+    let opts = Fig6Options::mesh_16x16();
+    let few = run_fig6_point(4, 256 << 10, &opts).unwrap();
+    let many = run_fig6_point(32, 256 << 10, &opts).unwrap();
+    assert!(
+        many.speedup() > few.speedup(),
+        "32-consumer speedup {:.2} should exceed 4-consumer {:.2}",
+        many.speedup(),
+        few.speedup()
+    );
+}

@@ -15,7 +15,8 @@ use std::sync::Arc;
 
 use espsim::noc::routing::neighbor;
 use espsim::noc::{
-    partition_dests, Coord, DestList, Dir, Mesh, MeshParams, Message, MsgKind,
+    partition_dests, Coord, DestList, Dir, Mesh, MeshParams, Message, MsgKind, Noc, Plane,
+    TickMode, NUM_PLANES,
 };
 use espsim::util::Prng;
 
@@ -548,6 +549,154 @@ fn prop_equivalent_under_heavy_contention() {
             }
         }
         run_equiv(100 + case, p, sends);
+    }
+}
+
+#[test]
+fn prop_equivalent_on_large_meshes() {
+    // The generalized coordinate bound: random 9..=16-wide meshes, random
+    // multicast workloads, still cycle-for-cycle identical to the seed
+    // full-scan scheduler.
+    let mut rng = Prng::new(0x1616_5EED);
+    for case in 0..8 {
+        let w = rng.range(9, 16) as u8;
+        let h = rng.range(9, 16) as u8;
+        let p = MeshParams {
+            width: w,
+            height: h,
+            flit_bytes: *rng.pick(&[16u32, 32]),
+            queue_depth: rng.range(2, 4) as usize,
+        };
+        let n_msgs = rng.range(2, 10);
+        let mut sends = Vec::new();
+        for seq in 0..n_msgs {
+            let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+            let fanout = rng.range(1, 12) as usize;
+            let mut dests = DestList::new();
+            let mut uniq: Vec<Coord> = Vec::new();
+            for _ in 0..fanout {
+                let d = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+                if !uniq.contains(&d) {
+                    uniq.push(d);
+                    dests.push(d);
+                }
+            }
+            let len = rng.range(0, 2500) as usize;
+            sends.push(Send {
+                cycle: rng.range(0, 80),
+                src,
+                msg: Message::multicast(
+                    src,
+                    dests,
+                    MsgKind::P2pData { seq: seq as u32, prod_slot: 0 },
+                    Arc::new(vec![rng.next_u64() as u8; len]),
+                ),
+            });
+        }
+        run_equiv(300 + case, p, sends);
+    }
+}
+
+#[test]
+fn prop_noc_equivalent_under_mixed_plane_activity() {
+    // Six reference planes vs one Noc with traffic spread across all six
+    // planes at once, in every tick-scheduling mode: per-plane idleness,
+    // flit-hops, and per-tile delivery sequences must stay identical.
+    let mut rng = Prng::new(0xA11_6_9_16);
+    for (case, &mode) in
+        [TickMode::Sequential, TickMode::Parallel, TickMode::Auto].iter().enumerate()
+    {
+        let w = rng.range(9, 14) as u8;
+        let h = rng.range(9, 14) as u8;
+        let p = MeshParams { width: w, height: h, flit_bytes: 16, queue_depth: 3 };
+        let mut noc = Noc::new(p);
+        noc.set_tick_mode(mode);
+        let mut golds: Vec<RefMesh> = (0..NUM_PLANES).map(|_| RefMesh::new(p)).collect();
+        let mut sends: Vec<(u64, usize, Send)> = Vec::new();
+        for seq in 0..20u32 {
+            let plane = rng.below(NUM_PLANES as u64) as usize;
+            let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+            let mut dests = DestList::new();
+            let mut uniq: Vec<Coord> = Vec::new();
+            for _ in 0..rng.range(1, 6) {
+                let d = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+                if !uniq.contains(&d) {
+                    uniq.push(d);
+                    dests.push(d);
+                }
+            }
+            let msg = Message::multicast(
+                src,
+                dests,
+                MsgKind::P2pData { seq, prod_slot: 0 },
+                Arc::new(vec![seq as u8; rng.range(0, 1200) as usize]),
+            );
+            sends.push((rng.range(0, 50), plane, Send { cycle: 0, src, msg }));
+        }
+        sends.sort_by_key(|(cycle, plane, _)| (*cycle, *plane));
+        let mut next = 0usize;
+        let mut t = 0u64;
+        loop {
+            while next < sends.len() && sends[next].0 == t {
+                let (_, plane, s) = &sends[next];
+                noc.send(Plane::ALL[*plane], s.src, s.msg.clone());
+                golds[*plane].send(s.src, s.msg.clone());
+                next += 1;
+            }
+            noc.tick(t);
+            for g in &mut golds {
+                g.tick(t);
+            }
+            t += 1;
+            let stats = noc.stats();
+            for (pi, g) in golds.iter_mut().enumerate() {
+                assert_eq!(
+                    stats[pi].flit_hops, g.flit_hops,
+                    "case {case} ({mode:?}): plane {pi} hops diverged at cycle {t}"
+                );
+                for y in 0..h {
+                    for x in 0..w {
+                        let c = (y, x);
+                        loop {
+                            match (noc.recv(Plane::ALL[pi], c), g.recv(c)) {
+                                (None, None) => break,
+                                (Some(a), Some(b)) => {
+                                    assert_eq!(
+                                        msg_seq(&a),
+                                        msg_seq(&b),
+                                        "case {case}: plane {pi} order diverged at {c:?}"
+                                    );
+                                }
+                                (a, b) => panic!(
+                                    "case {case}: plane {pi} delivery diverged at {c:?} \
+                                     cycle {t}: noc={:?} gold={:?}",
+                                    a.map(|m| msg_seq(&m)),
+                                    b.map(|m| msg_seq(&m))
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
+            assert_eq!(
+                noc.is_idle(),
+                golds.iter().all(|g| g.is_idle()),
+                "case {case}: idleness diverged at cycle {t}"
+            );
+            if next == sends.len() && noc.is_idle() {
+                break;
+            }
+            assert!(t < 2_000_000, "case {case}: did not drain");
+        }
+        let stats = noc.stats();
+        for (pi, g) in golds.iter().enumerate() {
+            assert_eq!(stats[pi].delivered, g.delivered, "case {case}: plane {pi} delivered");
+            assert_eq!(stats[pi].injected, g.injected, "case {case}: plane {pi} injected");
+            assert_eq!(
+                stats[pi].busy_cycles, g.busy_cycles,
+                "case {case}: plane {pi} busy cycles"
+            );
+        }
     }
 }
 

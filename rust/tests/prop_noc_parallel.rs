@@ -1,0 +1,164 @@
+//! Determinism of the parallel plane tick: `Noc::tick` with thread fan-out
+//! (`TickMode::Parallel`, and the `Auto` heuristic) must produce
+//! byte-identical per-plane statistics, delivery orders, *and* delivery
+//! cycles to the sequential fallback over randomized multi-plane workloads
+//! on meshes up to 16x16.  The six planes share no state, so this is a
+//! structural invariant — this suite is what keeps it that way.
+
+use std::sync::Arc;
+
+use espsim::noc::{
+    Coord, DestList, MeshParams, MeshStats, Message, MsgKind, Noc, Plane, TickMode, NUM_PLANES,
+};
+use espsim::util::Prng;
+
+/// One scheduled send of a workload.
+#[derive(Clone)]
+struct WSend {
+    cycle: u64,
+    plane: usize,
+    src: Coord,
+    msg: Message,
+}
+
+/// A full delivery trace entry: (cycle, plane, tile, seq, payload head).
+type Delivery = (u64, usize, Coord, u32, Option<u8>);
+
+fn seq_of(m: &Message) -> u32 {
+    match m.kind {
+        MsgKind::P2pData { seq, .. } => seq,
+        _ => panic!("unexpected kind"),
+    }
+}
+
+/// Run `sends` to quiescence, draining deliveries every cycle.  Returns the
+/// delivery trace, the per-plane stats, and the quiesce cycle.
+fn run(
+    mode: TickMode,
+    p: MeshParams,
+    sends: &[WSend],
+) -> (Vec<Delivery>, [MeshStats; NUM_PLANES], u64) {
+    let mut noc = Noc::new(p);
+    noc.set_tick_mode(mode);
+    let mut trace = Vec::new();
+    let mut next = 0usize;
+    let mut t = 0u64;
+    loop {
+        while next < sends.len() && sends[next].cycle == t {
+            let s = &sends[next];
+            noc.send(Plane::ALL[s.plane], s.src, s.msg.clone());
+            next += 1;
+        }
+        noc.tick(t);
+        t += 1;
+        for (pi, plane) in Plane::ALL.iter().enumerate() {
+            for y in 0..p.height {
+                for x in 0..p.width {
+                    while let Some(m) = noc.recv(*plane, (y, x)) {
+                        trace.push((t, pi, (y, x), seq_of(&m), m.payload.first().copied()));
+                    }
+                }
+            }
+        }
+        if next == sends.len() && noc.is_idle() {
+            break;
+        }
+        assert!(t < 2_000_000, "noc did not drain in {mode:?}");
+    }
+    (trace, noc.stats(), t)
+}
+
+fn random_workload(rng: &mut Prng, w: u8, h: u8, msgs: u64) -> Vec<WSend> {
+    let mut sends = Vec::new();
+    for seq in 0..msgs {
+        let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+        let mut dests = DestList::new();
+        let mut uniq: Vec<Coord> = Vec::new();
+        for _ in 0..rng.range(1, 8) {
+            let d = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+            if !uniq.contains(&d) {
+                uniq.push(d);
+                dests.push(d);
+            }
+        }
+        sends.push(WSend {
+            cycle: rng.range(0, 60),
+            plane: rng.below(NUM_PLANES as u64) as usize,
+            src,
+            msg: Message::multicast(
+                src,
+                dests,
+                MsgKind::P2pData { seq: seq as u32, prod_slot: 0 },
+                Arc::new(vec![seq as u8; rng.range(0, 2000) as usize]),
+            ),
+        });
+    }
+    sends.sort_by_key(|s| (s.cycle, s.plane));
+    sends
+}
+
+#[test]
+fn parallel_tick_matches_sequential_on_random_multi_plane_workloads() {
+    let mut rng = Prng::new(0xDE7E_2141);
+    for case in 0..6 {
+        let w = rng.range(4, 16) as u8;
+        let h = rng.range(4, 16) as u8;
+        let p = MeshParams {
+            width: w,
+            height: h,
+            flit_bytes: *rng.pick(&[8u32, 16, 32]),
+            queue_depth: rng.range(2, 4) as usize,
+        };
+        let sends = random_workload(&mut rng, w, h, rng.range(8, 24));
+        let seq = run(TickMode::Sequential, p, &sends);
+        let par = run(TickMode::Parallel, p, &sends);
+        let auto = run(TickMode::Auto, p, &sends);
+        assert_eq!(seq.0, par.0, "case {case}: delivery trace diverged (parallel)");
+        assert_eq!(seq.1, par.1, "case {case}: per-plane stats diverged (parallel)");
+        assert_eq!(seq.2, par.2, "case {case}: quiesce cycle diverged (parallel)");
+        assert_eq!(seq.0, auto.0, "case {case}: delivery trace diverged (auto)");
+        assert_eq!(seq.1, auto.1, "case {case}: per-plane stats diverged (auto)");
+        assert_eq!(seq.2, auto.2, "case {case}: quiesce cycle diverged (auto)");
+    }
+}
+
+#[test]
+fn parallel_tick_matches_sequential_on_a_busy_16x16() {
+    // Force every plane heavily busy on the full 16x16 mesh so the Auto
+    // heuristic actually fans out and the fan-out path sees deep queues.
+    let p = MeshParams { width: 16, height: 16, flit_bytes: 16, queue_depth: 4 };
+    let mut rng = Prng::new(0xB16_B057);
+    let mut sends = Vec::new();
+    let mut seq = 0u32;
+    for plane in 0..NUM_PLANES {
+        for _ in 0..12 {
+            let src = (rng.below(16) as u8, rng.below(16) as u8);
+            let mut dests = DestList::new();
+            let mut uniq: Vec<Coord> = Vec::new();
+            for _ in 0..rng.range(4, 16) {
+                let d = (rng.below(16) as u8, rng.below(16) as u8);
+                if !uniq.contains(&d) {
+                    uniq.push(d);
+                    dests.push(d);
+                }
+            }
+            sends.push(WSend {
+                cycle: rng.range(0, 10),
+                plane,
+                src,
+                msg: Message::multicast(
+                    src,
+                    dests,
+                    MsgKind::P2pData { seq, prod_slot: 0 },
+                    Arc::new(vec![seq as u8; 4096]),
+                ),
+            });
+            seq += 1;
+        }
+    }
+    sends.sort_by_key(|s| (s.cycle, s.plane));
+    let a = run(TickMode::Sequential, p, &sends);
+    let b = run(TickMode::Parallel, p, &sends);
+    assert_eq!(a.0.len(), b.0.len());
+    assert_eq!(a, b, "parallel 16x16 run diverged from sequential");
+}

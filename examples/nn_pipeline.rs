@@ -162,7 +162,12 @@ impl Pipeline {
                 kind: DpKind::Xla(self.stage0.clone()),
                 inputs: vec![(0, xs), (xs, w0s), (xs + w0s, b0s)],
                 out_offset: y_off,
-                cycles: matmul_cycles(self.batch as u64, self.d_in as u64, self.d_hid as u64, flops),
+                cycles: matmul_cycles(
+                    self.batch as u64,
+                    self.d_in as u64,
+                    self.d_hid as u64,
+                    flops,
+                ),
             }],
         ));
         // acc1..4: heads.  PLM: y@0, wh@ys, bh@ys+whs, out after.
@@ -175,7 +180,12 @@ impl Pipeline {
                         &[
                             Xfer { vaddr: 0, plm: 0, len: ys, user: 1 }, // pull y from acc0
                             Xfer { vaddr: WH + h as u64 * 0x10_0000, plm: ys, len: whs, user: 0 },
-                            Xfer { vaddr: BH + h as u64 * 0x10_0000, plm: ys + whs, len: bhs, user: 0 },
+                            Xfer {
+                                vaddr: BH + h as u64 * 0x10_0000,
+                                plm: ys + whs,
+                                len: bhs,
+                                user: 0,
+                            },
                         ],
                         &[0],
                         // Unicast P2P to the combiner.
@@ -266,7 +276,12 @@ impl Pipeline {
                 kind: DpKind::Xla(self.stage0.clone()),
                 inputs: vec![(0, xs), (xs, w0s), (xs + w0s, b0s)],
                 out_offset: y_off,
-                cycles: matmul_cycles(self.batch as u64, self.d_in as u64, self.d_hid as u64, flops),
+                cycles: matmul_cycles(
+                    self.batch as u64,
+                    self.d_in as u64,
+                    self.d_hid as u64,
+                    flops,
+                ),
             }],
         );
         let mut heads = Vec::new();

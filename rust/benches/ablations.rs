@@ -135,7 +135,12 @@ fn fork_vs_unicast() {
         for &d in &uniq {
             uc.send(
                 (0, 0),
-                Message::data((0, 0), d, MsgKind::P2pData { seq: 0, prod_slot: 0 }, payload.clone()),
+                Message::data(
+                    (0, 0),
+                    d,
+                    MsgKind::P2pData { seq: 0, prod_slot: 0 },
+                    payload.clone(),
+                ),
             );
         }
         let mut t2 = 0;
@@ -147,7 +152,10 @@ fn fork_vs_unicast() {
             format!("{}", uniq.len()),
             format!("{}", mc.stats.flit_hops),
             format!("{}", uc.stats.flit_hops),
-            format!("{:.0}%", (1.0 - mc.stats.flit_hops as f64 / uc.stats.flit_hops as f64) * 100.0),
+            {
+                let saved = 1.0 - mc.stats.flit_hops as f64 / uc.stats.flit_hops as f64;
+                format!("{:.0}%", saved * 100.0)
+            },
         ]);
     }
 }

@@ -312,8 +312,8 @@ impl CacheCtl {
                 };
                 self.forwards_served += 1;
                 let kind = MsgKind::Coh { op: CohOp::DataM, line: laddr, ack_count: 0 };
-                self.out
-                    .push((Plane::CohRsp, Message::data(self.coord, msg.src, kind, Arc::new(data))));
+                let rsp = Message::data(self.coord, msg.src, kind, Arc::new(data));
+                self.out.push((Plane::CohRsp, rsp));
             }
             CohOp::PutAck => {
                 self.evicting.remove(&laddr);

@@ -287,6 +287,15 @@ impl SocConfig {
         }
     }
 
+    /// The 8x8 scenario platform: 12 dual-socket accelerator tiles (24
+    /// sockets) spread over an 8x8 mesh with the default memory system —
+    /// big enough for every builtin scenario pattern (rings, shuffles,
+    /// fan-outs) while staying on the paper's coordinate encoding (meshes
+    /// up to 8x8 share the paper's header capacities).
+    pub fn scaled_8x8() -> Self {
+        Self::scaled_mesh(8, 8, 12)
+    }
+
     /// The 16x16 evaluation platform for the wide Fig. 6 sweeps: 17
     /// dual-socket accelerator tiles (34 sockets — producer + up to 32
     /// packed consumers + spare) and a memory system scaled up with the
@@ -576,6 +585,16 @@ mod tests {
         let c = SocConfig::small_3x3();
         c.validate().unwrap();
         assert_eq!(c.acc_sockets().len(), 6);
+    }
+
+    #[test]
+    fn scaled_8x8_validates_with_paper_encoding() {
+        let c = SocConfig::scaled_8x8();
+        c.validate().unwrap();
+        assert_eq!(c.acc_sockets().len(), 24);
+        // 8x8 stays on the paper's 3-bit coordinate floor, so the header
+        // capacities match the paper platform exactly.
+        assert_eq!(c.mcast_capacity(), SocConfig::paper_3x4().mcast_capacity());
     }
 
     #[test]

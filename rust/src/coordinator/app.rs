@@ -46,7 +46,13 @@ pub struct Invocation {
 impl Invocation {
     /// A traffic-generator invocation.
     pub fn tgen(acc: u16, args: traffic_gen::TgenArgs) -> Self {
-        Self { acc, program: ProgramKind::Tgen, args: args.pack(), srcs: Vec::new(), dp_calls: Vec::new() }
+        Self {
+            acc,
+            program: ProgramKind::Tgen,
+            args: args.pack(),
+            srcs: Vec::new(),
+            dp_calls: Vec::new(),
+        }
     }
 
     /// Add a source-LUT entry (consumer side of a P2P edge).
@@ -56,11 +62,28 @@ impl Invocation {
     }
 }
 
+/// A coherent-flag barrier appended to a phase: after the phase's IRQs the
+/// host *publishes* `val` at `addr` with a coherent store and spins until
+/// the flag reads back — the paper's coherence-based synchronization (§3)
+/// composing with P2P/multicast data movement inside the phase.  The
+/// store/load pair rides the three coherence planes (GetM + GetS against
+/// the directory), so downstream observers polling the flag line see the
+/// epoch flip without an IRQ round-trip through the host.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagBarrier {
+    /// Physical address of the flag word (keep flags a cache line apart).
+    pub addr: u64,
+    /// Epoch value published at the barrier.
+    pub val: u64,
+}
+
 /// A phase: invocations started together, joined on their IRQs.
 #[derive(Debug, Clone, Default)]
 pub struct Phase {
     /// Invocations in this phase.
     pub invocations: Vec<Invocation>,
+    /// Optional coherent-flag barrier after the IRQ join.
+    pub barrier: Option<FlagBarrier>,
 }
 
 /// A multi-phase application.
@@ -78,7 +101,20 @@ impl App {
 
     /// Append a phase.
     pub fn phase(mut self, invocations: Vec<Invocation>) -> Self {
-        self.phases.push(Phase { invocations });
+        self.phases.push(Phase { invocations, barrier: None });
+        self
+    }
+
+    /// Append a phase followed by a coherent-flag barrier: after the
+    /// phase's IRQ join the host publishes `val` at `addr` through its L1
+    /// and spins until the flag reads back (see [`FlagBarrier`]).
+    pub fn phase_with_flag_barrier(
+        mut self,
+        invocations: Vec<Invocation>,
+        addr: u64,
+        val: u64,
+    ) -> Self {
+        self.phases.push(Phase { invocations, barrier: Some(FlagBarrier { addr, val }) });
         self
     }
 
@@ -141,6 +177,10 @@ impl App {
                 irqs.push(inv.acc);
             }
             script.push(HostOp::WaitIrqs(irqs));
+            if let Some(b) = phase.barrier {
+                script.push(HostOp::SetFlag { addr: b.addr, val: b.val });
+                script.push(HostOp::WaitFlag { addr: b.addr, val: b.val });
+            }
         }
         soc.push_host_script(script);
         Ok(())
@@ -168,6 +208,33 @@ mod tests {
         )]);
         app.launch(&mut soc).unwrap();
         assert!(!soc.cpu_mut().done(), "script pending");
+    }
+
+    #[test]
+    fn flag_barrier_emits_coherent_host_ops() {
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        let inv = Invocation::tgen(
+            0,
+            traffic_gen::TgenArgs {
+                total_bytes: 4096,
+                burst_bytes: 4096,
+                rd_user: 0,
+                wr_user: 0,
+                vaddr_in: 0,
+                vaddr_out: 8192,
+            },
+        );
+        let app = App::new().phase_with_flag_barrier(vec![inv], 0x8000, 1);
+        assert!(app.phases[0].barrier.is_some());
+        app.launch(&mut soc).unwrap();
+        // The barrier's store+spin must resolve so the SoC still quiesces.
+        soc.run(1_000_000).unwrap();
+        let report = soc.report();
+        use crate::noc::Plane;
+        assert!(
+            report.planes[Plane::CohReq.idx()].delivered > 0,
+            "flag publish must ride the coherence-request plane"
+        );
     }
 
     #[test]

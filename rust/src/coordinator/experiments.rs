@@ -126,8 +126,11 @@ fn tgen_program(opts: &Fig6Options) -> ProgramKind {
     }
 }
 
-fn fill_input(soc: &mut Soc, bytes: u32) -> Vec<u8> {
-    // Deterministic, position-dependent pattern (catches reordering bugs).
+/// Write the deterministic, position-dependent input pattern (catches
+/// reordering bugs) at [`layout::IN`] and return a copy for verification.
+/// Shared with the scenario subsystem so every workload verifies against
+/// the same stimulus.
+pub fn fill_input(soc: &mut Soc, bytes: u32) -> Vec<u8> {
     let data: Vec<u8> =
         (0..bytes as u64).map(|i| (i.wrapping_mul(0x9E37_79B9) >> 16) as u8).collect();
     soc.write_mem(layout::IN, &data);

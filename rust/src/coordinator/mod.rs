@@ -3,10 +3,12 @@
 
 pub mod app;
 pub mod experiments;
+pub mod scenario;
 pub mod soc;
 pub mod stats;
 pub mod workloads;
 
-pub use app::{App, Invocation, Phase, ProgramKind};
+pub use app::{App, FlagBarrier, Invocation, Phase, ProgramKind};
+pub use scenario::{builtin_scenarios, Outcome, Pattern, Platform, Scenario};
 pub use soc::Soc;
 pub use stats::Report;

@@ -1,0 +1,691 @@
+//! Declarative communication scenarios: workloads as *data*.
+//!
+//! The paper's evaluation exercises one traffic shape (a producer
+//! multicasting to N consumers), but its thesis is *generalized*
+//! communication — P2P chains, multicast forwarding, and coherence-based
+//! synchronization composing freely.  A [`Scenario`] captures one such
+//! composition declaratively: a communication [`Pattern`], a [`Platform`]
+//! (the paper's 3x4, a scenario-sized 8x8, or the scaled 16x16), transfer
+//! sizes, and a seed.  Running it lowers the pattern onto the existing
+//! traffic-generator accelerators/ISA twice — once communication-optimized
+//! (P2P / multicast / coherent flags), once DMA-only through main memory —
+//! and reports cycles, per-plane NoC traffic, and the speedup over the
+//! DMA-only baseline.
+//!
+//! [`builtin_scenarios`] is the named registry behind `espsim scenarios`;
+//! [`Scenario::load_file`] reads additional scenarios from a JSON config.
+//! Every run is fully deterministic (same scenario + seed + tick mode ⇒
+//! byte-identical [`Outcome`], enforced by `tests/scenario_determinism.rs`),
+//! which is what lets CI gate on the recorded numbers via
+//! [`crate::util::bench::compare`].
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::accel::traffic_gen::TgenArgs;
+use crate::accel::{stage_program, Xfer};
+use crate::config::SocConfig;
+use crate::coordinator::experiments::{fill_input, layout};
+use crate::coordinator::stats::Report;
+use crate::coordinator::workloads::{multi_pull_invocation, Dataflow, EdgePolicy, Shape};
+use crate::coordinator::{App, Invocation, ProgramKind, Soc};
+use crate::noc::{TickMode, NUM_PLANES};
+use crate::util::Json;
+
+/// Evaluation platform a scenario runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Platform {
+    /// The paper's 3x4 mesh (18 sockets) — small and fast, used by tests.
+    Paper3x4,
+    /// An 8x8 mesh with 12 dual-socket accelerator tiles; shares the
+    /// paper's header coordinate encoding (3-bit floor).
+    Mesh8x8,
+    /// The scaled 16x16 platform (9-bit destinations, 256 MiB DRAM).
+    Mesh16x16,
+}
+
+impl Platform {
+    /// Config-file code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Platform::Paper3x4 => "paper_3x4",
+            Platform::Mesh8x8 => "mesh_8x8",
+            Platform::Mesh16x16 => "mesh_16x16",
+        }
+    }
+
+    /// Parse a config-file code.
+    pub fn from_code(s: &str) -> Result<Self> {
+        Ok(match s {
+            "paper_3x4" => Platform::Paper3x4,
+            "mesh_8x8" => Platform::Mesh8x8,
+            "mesh_16x16" => Platform::Mesh16x16,
+            _ => bail!("unknown platform {s:?}"),
+        })
+    }
+
+    /// The SoC configuration this platform stands for.
+    pub fn config(&self) -> SocConfig {
+        match self {
+            Platform::Paper3x4 => SocConfig::paper_3x4(),
+            Platform::Mesh8x8 => SocConfig::scaled_8x8(),
+            Platform::Mesh16x16 => SocConfig::scaled_16x16(),
+        }
+    }
+}
+
+/// A communication pattern: the roles and edges of a workload, independent
+/// of platform and transfer size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// `stages` accelerators in a pipeline; optimized lowering streams
+    /// every edge over unicast P2P in one phase.
+    P2pChain {
+        /// Pipeline depth (>= 2).
+        stages: u8,
+    },
+    /// One producer multicasting to `consumers` sinks (the paper's Fig. 6
+    /// shape, generalized to any platform).
+    MulticastFanout {
+        /// Fan-out (>= 1; 1 degenerates to unicast P2P).
+        consumers: u8,
+    },
+    /// Source scatters (multicast) to `workers`, which gather (unicast
+    /// P2P) into a merging sink — the NN-pipeline diamond.
+    ScatterGather {
+        /// Parallel workers between source and sink (>= 1).
+        workers: u8,
+    },
+    /// `producers` x `consumers` bipartite shuffle: every producer
+    /// multicasts its stream, every consumer merges all producer streams
+    /// with interleaved round-robin pulls.
+    AllToAllShuffle {
+        /// Producer count (>= 1).
+        producers: u8,
+        /// Consumer count (>= 1).
+        consumers: u8,
+    },
+    /// `nodes` accelerators on a ring exchanging boundary data with both
+    /// neighbors (red-black 1D stencil halo: evens push to odd neighbors,
+    /// then odds push back while evens drain to memory).
+    HaloExchange {
+        /// Ring size (even, >= 4).
+        nodes: u8,
+    },
+    /// A `stages`-deep producer/consumer pipeline where each phase moves
+    /// data over P2P and the host separates phases with a coherent-flag
+    /// barrier ([`crate::coordinator::app::FlagBarrier`]) instead of bare
+    /// IRQ joins — coherence-based synchronization composing with P2P.
+    CoherentPhases {
+        /// Number of P2P phases (each uses two accelerators; >= 1).
+        stages: u8,
+    },
+}
+
+impl Pattern {
+    /// Config-file code of the pattern kind.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Pattern::P2pChain { .. } => "p2p_chain",
+            Pattern::MulticastFanout { .. } => "multicast_fanout",
+            Pattern::ScatterGather { .. } => "scatter_gather",
+            Pattern::AllToAllShuffle { .. } => "all_to_all_shuffle",
+            Pattern::HaloExchange { .. } => "halo_exchange",
+            Pattern::CoherentPhases { .. } => "coherent_phases",
+        }
+    }
+
+    /// Accelerator sockets the pattern occupies.
+    pub fn sockets(&self) -> usize {
+        match *self {
+            Pattern::P2pChain { stages } => stages as usize,
+            Pattern::MulticastFanout { consumers } => consumers as usize + 1,
+            Pattern::ScatterGather { workers } => workers as usize + 2,
+            Pattern::AllToAllShuffle { producers, consumers } => {
+                producers as usize + consumers as usize
+            }
+            Pattern::HaloExchange { nodes } => nodes as usize,
+            Pattern::CoherentPhases { stages } => 2 * stages as usize,
+        }
+    }
+}
+
+/// One declarative workload: pattern + platform + transfer shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Registry / report name.
+    pub name: String,
+    /// Communication pattern.
+    pub pattern: Pattern,
+    /// Platform to lower onto.
+    pub platform: Platform,
+    /// Bytes each role streams (multiple of `burst_bytes`, <= 1 MiB).
+    pub bytes: u32,
+    /// DMA/P2P burst size.
+    pub burst_bytes: u32,
+    /// Seed for generated graphs (kept in the record for reproducibility).
+    pub seed: u64,
+    /// Simulation cycle budget per lowering.
+    pub max_cycles: u64,
+    /// NoC plane-tick scheduling (results are identical in every mode).
+    pub tick_mode: TickMode,
+}
+
+/// Measured result of one scenario run (both lowerings).
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Scenario name.
+    pub name: String,
+    /// Platform it ran on.
+    pub platform: Platform,
+    /// Cycles of the communication-optimized lowering.
+    pub cycles: u64,
+    /// Cycles of the DMA-only (memory-staged) baseline.
+    pub baseline_cycles: u64,
+    /// Flit-hops per NoC plane (optimized lowering).
+    pub plane_flits: [u64; NUM_PLANES],
+    /// Messages delivered per NoC plane (optimized lowering).
+    pub plane_delivered: [u64; NUM_PLANES],
+    /// P2P/multicast bytes delivered (optimized lowering).
+    pub p2p_bytes: u64,
+    /// DMA bytes moved at the memory tile (optimized lowering).
+    pub dma_bytes: u64,
+    /// Invocation spans `(acc, start, end)` of the optimized lowering —
+    /// the scenario-level delivery trace the determinism suite pins.
+    pub invocation_spans: Vec<(u16, u64, u64)>,
+}
+
+impl Outcome {
+    /// Speedup of the optimized lowering over the DMA-only baseline.
+    pub fn speedup(&self) -> f64 {
+        self.baseline_cycles as f64 / self.cycles as f64
+    }
+
+    /// Total flit-hops across planes (optimized lowering).
+    pub fn total_flits(&self) -> u64 {
+        self.plane_flits.iter().sum()
+    }
+}
+
+/// Flag words for [`Pattern::CoherentPhases`] live below the data layout.
+const FLAG_BASE: u64 = 0x2000;
+/// Per-node staging/output regions are 1 MiB apart (bounds `bytes`).
+const REGION_STRIDE: u64 = 0x0010_0000;
+/// Node staging regions (DMA-only lowerings).
+const STAGE_BASE: u64 = 0x0100_0000;
+/// Final output regions.
+const OUT_BASE: u64 = 0x0200_0000;
+
+fn stage(i: usize) -> u64 {
+    STAGE_BASE + i as u64 * REGION_STRIDE
+}
+
+fn out(i: usize) -> u64 {
+    OUT_BASE + i as u64 * REGION_STRIDE
+}
+
+impl Scenario {
+    /// A scenario with the default transfer shape (64 KiB in 4 KiB bursts).
+    pub fn new(name: &str, pattern: Pattern, platform: Platform) -> Self {
+        Self {
+            name: name.to_string(),
+            pattern,
+            platform,
+            bytes: 64 << 10,
+            burst_bytes: 4 << 10,
+            seed: 1,
+            max_cycles: 200_000_000,
+            tick_mode: TickMode::Auto,
+        }
+    }
+
+    /// Structural validation (pattern arity, transfer shape, layout).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "scenario needs a name");
+        ensure!(self.burst_bytes > 0, "burst_bytes must be positive");
+        ensure!(
+            self.bytes > 0 && self.bytes % self.burst_bytes == 0,
+            "bytes ({}) must be a positive multiple of burst_bytes ({})",
+            self.bytes,
+            self.burst_bytes
+        );
+        ensure!(
+            self.bytes as u64 <= REGION_STRIDE,
+            "bytes ({}) exceeds the 1 MiB per-node region stride",
+            self.bytes
+        );
+        let acc = self.platform.config().acc;
+        ensure!(
+            self.burst_bytes <= acc.max_burst_bytes,
+            "burst_bytes ({}) exceeds the socket burst limit ({})",
+            self.burst_bytes,
+            acc.max_burst_bytes
+        );
+        // Merging roles (multi-source pulls, staged multi-reads) hold one
+        // full transfer in the PLM; streaming-only patterns are unbounded.
+        let staged_in_plm = matches!(
+            self.pattern,
+            Pattern::ScatterGather { .. }
+                | Pattern::AllToAllShuffle { .. }
+                | Pattern::HaloExchange { .. }
+        );
+        ensure!(
+            !staged_in_plm || self.bytes <= acc.plm_bytes,
+            "bytes ({}) exceeds the {}-byte PLM a merging role stages through",
+            self.bytes,
+            acc.plm_bytes
+        );
+        match self.pattern {
+            Pattern::P2pChain { stages } => ensure!(stages >= 2, "chain needs >= 2 stages"),
+            Pattern::MulticastFanout { consumers } => {
+                ensure!(consumers >= 1, "fan-out needs >= 1 consumer")
+            }
+            Pattern::ScatterGather { workers } => ensure!(workers >= 1, "needs >= 1 worker"),
+            Pattern::AllToAllShuffle { producers, consumers } => ensure!(
+                producers >= 1 && consumers >= 1,
+                "shuffle needs >= 1 producer and consumer"
+            ),
+            Pattern::HaloExchange { nodes } => ensure!(
+                nodes >= 4 && nodes % 2 == 0,
+                "halo ring needs an even node count >= 4"
+            ),
+            Pattern::CoherentPhases { stages } => ensure!(stages >= 1, "needs >= 1 stage"),
+        }
+        Ok(())
+    }
+
+    /// Fresh SoC for one lowering.
+    fn soc(&self) -> Result<Soc> {
+        let mut cfg = self.platform.config();
+        cfg.noc.tick_mode = self.tick_mode;
+        let soc = Soc::new(cfg)?;
+        ensure!(
+            self.pattern.sockets() <= soc.acc_count(),
+            "pattern {} needs {} sockets, platform {} has {}",
+            self.pattern.code(),
+            self.pattern.sockets(),
+            self.platform.code(),
+            soc.acc_count()
+        );
+        Ok(soc)
+    }
+
+    /// Run both lowerings and measure.
+    pub fn run(&self) -> Result<Outcome> {
+        self.validate()?;
+        let r = match self.pattern {
+            Pattern::P2pChain { stages } => self.run_dataflow(Shape::Chain(stages)),
+            Pattern::MulticastFanout { consumers } => self.run_dataflow(Shape::Tree(consumers)),
+            Pattern::ScatterGather { workers } => self.run_dataflow(Shape::Diamond(workers)),
+            Pattern::AllToAllShuffle { producers, consumers } => {
+                self.run_dataflow(Shape::Bipartite(producers, consumers))
+            }
+            Pattern::HaloExchange { nodes } => self.run_halo(nodes as usize),
+            Pattern::CoherentPhases { stages } => self.run_coherent(stages as usize),
+        };
+        r.with_context(|| format!("scenario {} on {}", self.name, self.platform.code()))
+    }
+
+    fn outcome(&self, cycles: u64, baseline_cycles: u64, report: &Report) -> Outcome {
+        let mut plane_flits = [0u64; NUM_PLANES];
+        let mut plane_delivered = [0u64; NUM_PLANES];
+        for (i, p) in report.planes.iter().enumerate() {
+            plane_flits[i] = p.flit_hops;
+            plane_delivered[i] = p.delivered;
+        }
+        Outcome {
+            name: self.name.clone(),
+            platform: self.platform,
+            cycles,
+            baseline_cycles,
+            plane_flits,
+            plane_delivered,
+            p2p_bytes: report.p2p_bytes(),
+            dma_bytes: report.dma_bytes(),
+            invocation_spans: report.invocations.clone(),
+        }
+    }
+
+    /// Graph-shaped patterns ride the dataflow lowering: P2P/multicast
+    /// edges for the optimized run, memory staging for the baseline.
+    fn run_dataflow(&self, shape: Shape) -> Result<Outcome> {
+        let g = Dataflow::generate(shape, self.bytes, self.burst_bytes, self.seed);
+        let mut soc = self.soc()?;
+        let cycles = g.run_budget(&mut soc, EdgePolicy::P2p, self.max_cycles)?;
+        let report = soc.report();
+        let mut base = self.soc()?;
+        let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
+        Ok(self.outcome(cycles, baseline, &report))
+    }
+
+    /// Red-black halo exchange on a ring of `n` nodes.
+    ///
+    /// Optimized (2 phases): evens read the input and multicast to both
+    /// odd neighbors while odds merge the two incoming streams; then odds
+    /// multicast back and evens merge + drain to memory.  Baseline
+    /// (3 phases): the same exchanges staged through per-node DRAM regions.
+    fn run_halo(&self, n: usize) -> Result<Outcome> {
+        let bytes = self.bytes;
+        let burst = self.burst_bytes;
+        let left = |i: usize| ((i + n - 1) % n) as u16;
+        let right = |i: usize| ((i + 1) % n) as u16;
+
+        // --- optimized: P2P/multicast neighbor exchange.
+        let mut soc = self.soc()?;
+        fill_input(&mut soc, bytes);
+        let mut phase_a = Vec::new();
+        let mut phase_b = Vec::new();
+        for i in 0..n {
+            if i % 2 == 0 {
+                phase_a.push(Invocation::tgen(
+                    i as u16,
+                    TgenArgs {
+                        total_bytes: bytes,
+                        burst_bytes: burst,
+                        rd_user: 0,
+                        wr_user: 2, // multicast to both odd neighbors
+                        vaddr_in: layout::IN,
+                        vaddr_out: 0,
+                    },
+                ));
+                let writes = [Xfer { vaddr: out(i), plm: 0, len: bytes, user: 0 }];
+                phase_b.push(multi_pull_invocation(
+                    i as u16,
+                    &[left(i), right(i)],
+                    bytes,
+                    burst,
+                    &writes,
+                ));
+            } else {
+                phase_a.push(multi_pull_invocation(
+                    i as u16,
+                    &[left(i), right(i)],
+                    bytes,
+                    burst,
+                    &[],
+                ));
+                // Push the halo held in PLM back to both even neighbors.
+                let mut inv = Invocation::tgen(
+                    i as u16,
+                    TgenArgs {
+                        total_bytes: 0,
+                        burst_bytes: 1,
+                        rd_user: 0,
+                        wr_user: 0,
+                        vaddr_in: 0,
+                        vaddr_out: 0,
+                    },
+                );
+                let writes = [Xfer { vaddr: 0, plm: 0, len: bytes, user: 2 }];
+                inv.program = ProgramKind::Custom(stage_program(&[], &[], &writes, burst));
+                inv.args = [0; 8];
+                phase_b.push(inv);
+            }
+        }
+        App::new().phase(phase_a).phase(phase_b).launch(&mut soc)?;
+        let cycles = soc.run(self.max_cycles)?;
+        let report = soc.report();
+
+        // --- baseline: the same exchange staged through DRAM.
+        let mut base = self.soc()?;
+        fill_input(&mut base, bytes);
+        let mem_stream = |acc: usize, vin: u64, vout: u64| {
+            Invocation::tgen(
+                acc as u16,
+                TgenArgs {
+                    total_bytes: bytes,
+                    burst_bytes: burst,
+                    rd_user: 0,
+                    wr_user: 0,
+                    vaddr_in: vin,
+                    vaddr_out: vout,
+                },
+            )
+        };
+        let mem_merge = |acc: usize, vout: u64| {
+            let reads = [
+                Xfer { vaddr: stage(left(acc) as usize), plm: 0, len: bytes, user: 0 },
+                Xfer { vaddr: stage(right(acc) as usize), plm: 0, len: bytes, user: 0 },
+            ];
+            let writes = [Xfer { vaddr: vout, plm: 0, len: bytes, user: 0 }];
+            let mut inv = Invocation::tgen(
+                acc as u16,
+                TgenArgs {
+                    total_bytes: 0,
+                    burst_bytes: 1,
+                    rd_user: 0,
+                    wr_user: 0,
+                    vaddr_in: 0,
+                    vaddr_out: 0,
+                },
+            );
+            inv.program = ProgramKind::Custom(stage_program(&reads, &[], &writes, burst));
+            inv.args = [0; 8];
+            inv
+        };
+        let evens = (0..n).filter(|i| i % 2 == 0);
+        let odds = (0..n).filter(|i| i % 2 == 1);
+        let app = App::new()
+            .phase(evens.clone().map(|i| mem_stream(i, layout::IN, stage(i))).collect())
+            .phase(odds.map(|i| mem_merge(i, stage(i))).collect())
+            .phase(evens.map(|i| mem_merge(i, out(i))).collect());
+        app.launch(&mut base)?;
+        let baseline = base.run(self.max_cycles)?;
+        Ok(self.outcome(cycles, baseline, &report))
+    }
+
+    /// `stages` P2P producer/consumer phases separated by coherent-flag
+    /// barriers; the baseline is the same pipeline as a DMA-only chain.
+    fn run_coherent(&self, stages: usize) -> Result<Outcome> {
+        let bytes = self.bytes;
+        let burst = self.burst_bytes;
+
+        let mut soc = self.soc()?;
+        let data = fill_input(&mut soc, bytes);
+        let mut app = App::new();
+        for j in 0..stages {
+            let prod = (2 * j) as u16;
+            let cons = prod + 1;
+            let vin = if j == 0 { layout::IN } else { stage(j - 1) };
+            let p = Invocation::tgen(
+                prod,
+                TgenArgs {
+                    total_bytes: bytes,
+                    burst_bytes: burst,
+                    rd_user: 0,
+                    wr_user: 1, // unicast P2P to the phase's consumer
+                    vaddr_in: vin,
+                    vaddr_out: 0,
+                },
+            );
+            let c = Invocation::tgen(
+                cons,
+                TgenArgs {
+                    total_bytes: bytes,
+                    burst_bytes: burst,
+                    rd_user: 1,
+                    wr_user: 0,
+                    vaddr_in: 0,
+                    vaddr_out: stage(j),
+                },
+            )
+            .with_src(1, prod);
+            app = app.phase_with_flag_barrier(vec![p, c], FLAG_BASE + j as u64 * 64, j as u64 + 1);
+        }
+        app.launch(&mut soc)?;
+        let cycles = soc.run(self.max_cycles)?;
+        let got = soc.read_mem(stage(stages - 1), bytes as usize);
+        ensure!(got == data, "coherent pipeline corrupted its stream");
+        let report = soc.report();
+
+        // Baseline: the same 2*stages accelerators as a DMA-only chain.
+        let g = Dataflow::generate(Shape::Chain(2 * stages as u8), bytes, burst, self.seed);
+        let mut base = self.soc()?;
+        let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
+        Ok(self.outcome(cycles, baseline, &report))
+    }
+
+    /// Serialize to the scenario-file JSON schema.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::from(self.name.as_str()));
+        m.insert("pattern".to_string(), Json::from(self.pattern.code()));
+        m.insert("platform".to_string(), Json::from(self.platform.code()));
+        m.insert("bytes".to_string(), Json::from(self.bytes as u64));
+        m.insert("burst_bytes".to_string(), Json::from(self.burst_bytes as u64));
+        m.insert("seed".to_string(), Json::from(self.seed));
+        m.insert("max_cycles".to_string(), Json::from(self.max_cycles));
+        m.insert("tick_mode".to_string(), Json::from(self.tick_mode.code()));
+        match self.pattern {
+            Pattern::P2pChain { stages } | Pattern::CoherentPhases { stages } => {
+                m.insert("stages".to_string(), Json::from(stages as u64));
+            }
+            Pattern::MulticastFanout { consumers } => {
+                m.insert("consumers".to_string(), Json::from(consumers as u64));
+            }
+            Pattern::ScatterGather { workers } => {
+                m.insert("workers".to_string(), Json::from(workers as u64));
+            }
+            Pattern::AllToAllShuffle { producers, consumers } => {
+                m.insert("producers".to_string(), Json::from(producers as u64));
+                m.insert("consumers".to_string(), Json::from(consumers as u64));
+            }
+            Pattern::HaloExchange { nodes } => {
+                m.insert("nodes".to_string(), Json::from(nodes as u64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse one scenario object of the scenario-file schema; unspecified
+    /// transfer-shape fields fall back to the defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let name = j.req("name")?.as_str()?;
+        let param = |key: &str| -> Result<u8> {
+            let v = j.req(key)?.as_u64()?;
+            ensure!((1..=u8::MAX as u64).contains(&v), "{key} out of range: {v}");
+            Ok(v as u8)
+        };
+        let pattern = match j.req("pattern")?.as_str()? {
+            "p2p_chain" => Pattern::P2pChain { stages: param("stages")? },
+            "multicast_fanout" => Pattern::MulticastFanout { consumers: param("consumers")? },
+            "scatter_gather" => Pattern::ScatterGather { workers: param("workers")? },
+            "all_to_all_shuffle" => Pattern::AllToAllShuffle {
+                producers: param("producers")?,
+                consumers: param("consumers")?,
+            },
+            "halo_exchange" => Pattern::HaloExchange { nodes: param("nodes")? },
+            "coherent_phases" => Pattern::CoherentPhases { stages: param("stages")? },
+            other => bail!("unknown pattern {other:?}"),
+        };
+        let platform = Platform::from_code(j.req("platform")?.as_str()?)?;
+        let mut s = Scenario::new(name, pattern, platform);
+        let as_u32 = |v: &Json, key: &str| -> Result<u32> {
+            let n = v.as_u64()?;
+            u32::try_from(n).map_err(|_| anyhow!("{key} out of range: {n}"))
+        };
+        if let Some(v) = j.get("bytes") {
+            s.bytes = as_u32(v, "bytes")?;
+        }
+        if let Some(v) = j.get("burst_bytes") {
+            s.burst_bytes = as_u32(v, "burst_bytes")?;
+        }
+        if let Some(v) = j.get("seed") {
+            s.seed = v.as_u64()?;
+        }
+        if let Some(v) = j.get("max_cycles") {
+            s.max_cycles = v.as_u64()?;
+        }
+        if let Some(v) = j.get("tick_mode") {
+            let code = v.as_str()?;
+            s.tick_mode = TickMode::from_code(code)
+                .ok_or_else(|| anyhow!("unknown tick_mode {code:?}"))?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Load a scenario file: `{"scenarios": [ {...}, ... ]}`.
+    pub fn load_file(path: impl AsRef<std::path::Path>) -> Result<Vec<Scenario>> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let doc = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        let list = doc.req("scenarios")?.as_arr()?;
+        ensure!(!list.is_empty(), "{}: empty scenario list", path.display());
+        list.iter()
+            .map(|j| Scenario::from_json(j).with_context(|| format!("in {}", path.display())))
+            .collect()
+    }
+}
+
+/// The named registry behind `espsim scenarios`: one scenario per pattern,
+/// parameterized by platform.  Every entry fits all three platforms.
+pub fn builtin_scenarios(platform: Platform) -> Vec<Scenario> {
+    vec![
+        Scenario::new("chain4", Pattern::P2pChain { stages: 4 }, platform),
+        Scenario::new("fanout8", Pattern::MulticastFanout { consumers: 8 }, platform),
+        Scenario::new("scatter_gather4", Pattern::ScatterGather { workers: 4 }, platform),
+        Scenario::new(
+            "shuffle4x4",
+            Pattern::AllToAllShuffle { producers: 4, consumers: 4 },
+            platform,
+        ),
+        Scenario::new("halo_ring8", Pattern::HaloExchange { nodes: 8 }, platform),
+        Scenario::new("coherent_pipeline3", Pattern::CoherentPhases { stages: 3 }, platform),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_distinct_and_valid_on_every_platform() {
+        for platform in [Platform::Paper3x4, Platform::Mesh8x8, Platform::Mesh16x16] {
+            let scenarios = builtin_scenarios(platform);
+            assert!(scenarios.len() >= 5, "registry must cover >= 5 patterns");
+            let mut codes: Vec<&str> = scenarios.iter().map(|s| s.pattern.code()).collect();
+            codes.dedup();
+            assert_eq!(codes.len(), scenarios.len(), "patterns must be distinct");
+            let accs = platform.config().acc_sockets().len();
+            for s in &scenarios {
+                s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+                assert!(s.pattern.sockets() <= accs, "{} fits {:?}", s.name, platform);
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_malformed_scenarios() {
+        let mut s = Scenario::new("bad", Pattern::P2pChain { stages: 1 }, Platform::Paper3x4);
+        assert!(s.validate().is_err(), "1-stage chain");
+        s.pattern = Pattern::HaloExchange { nodes: 5 };
+        assert!(s.validate().is_err(), "odd ring");
+        s.pattern = Pattern::P2pChain { stages: 2 };
+        s.bytes = 6000; // not a burst multiple
+        assert!(s.validate().is_err(), "partial bursts");
+        s.bytes = 2 << 20;
+        assert!(s.validate().is_err(), "beyond the region stride");
+    }
+
+    #[test]
+    fn json_roundtrips_every_builtin() {
+        for s in builtin_scenarios(Platform::Mesh8x8) {
+            let j = s.to_json();
+            let s2 = Scenario::from_json(&j).unwrap();
+            assert_eq!(s, s2, "{} roundtrip", s.name);
+        }
+        assert!(Scenario::from_json(&Json::parse("{\"name\":\"x\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn chain_scenario_beats_its_dma_baseline() {
+        let mut s = Scenario::new("t", Pattern::P2pChain { stages: 3 }, Platform::Paper3x4);
+        s.bytes = 8 << 10;
+        let o = s.run().unwrap();
+        assert!(o.cycles > 0 && o.baseline_cycles > 0);
+        assert!(o.speedup() > 1.0, "P2P chain {} vs memory {}", o.cycles, o.baseline_cycles);
+        assert!(o.p2p_bytes > 0 && o.total_flits() > 0);
+    }
+}

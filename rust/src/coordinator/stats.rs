@@ -86,7 +86,8 @@ impl Report {
             );
         }
         for (acc, start, end) in &self.invocations {
-            let _ = writeln!(s, "inv acc{:<3} [{start:>8} .. {end:>8}]  {:>8} cy", acc, end - start);
+            let _ =
+                writeln!(s, "inv acc{:<3} [{start:>8} .. {end:>8}]  {:>8} cy", acc, end - start);
         }
         s
     }

@@ -13,9 +13,10 @@
 use anyhow::{ensure, Result};
 
 use crate::accel::traffic_gen::TgenArgs;
+use crate::accel::{stage_program, Xfer};
 #[cfg(test)]
 use crate::config::SocConfig;
-use crate::coordinator::{App, Invocation, Soc};
+use crate::coordinator::{App, Invocation, ProgramKind, Soc};
 use crate::util::Prng;
 
 /// How graph edges move data.
@@ -58,6 +59,10 @@ pub enum Shape {
     Tree(u8),
     /// Source -> n parallel workers -> sink (the NN-pipeline shape).
     Diamond(u8),
+    /// `m` producers each feeding all of `n` consumers (the map-reduce
+    /// shuffle: every producer multicasts, every consumer merges `m`
+    /// streams) — `Bipartite(m, n)`.
+    Bipartite(u8, u8),
     /// Random DAG with `n` nodes and random cross-level edges.
     Random(u8),
 }
@@ -93,6 +98,18 @@ impl Dataflow {
                     inputs: (1..=n as u16).collect(),
                     level: 2,
                 });
+            }
+            Shape::Bipartite(m, n) => {
+                for i in 0..m as u16 {
+                    nodes.push(Node { id: i, inputs: vec![], level: 0 });
+                }
+                for i in 0..n as u16 {
+                    nodes.push(Node {
+                        id: m as u16 + i,
+                        inputs: (0..m as u16).collect(),
+                        level: 1,
+                    });
+                }
             }
             Shape::Random(n) => {
                 // Levelized random DAG; every non-source consumes 1..=2
@@ -163,10 +180,15 @@ impl Dataflow {
         0x0280_0000 + id as u64 * 0x0010_0000
     }
 
-    /// Lower the graph to an [`App`] under `policy` and run it on `soc`.
-    /// Returns total cycles; verifies every sink's output equals the
-    /// workload input (traffic generators are identity).
+    /// [`Dataflow::run`] with the default 100M-cycle budget.
     pub fn run(&self, soc: &mut Soc, policy: EdgePolicy) -> Result<u64> {
+        self.run_budget(soc, policy, 100_000_000)
+    }
+
+    /// Lower the graph to an [`App`] under `policy` and run it on `soc`
+    /// within `max_cycles`.  Returns total cycles; verifies every sink's
+    /// output equals the workload input (traffic generators are identity).
+    pub fn run_budget(&self, soc: &mut Soc, policy: EdgePolicy, max_cycles: u64) -> Result<u64> {
         ensure!(self.nodes.len() <= soc.acc_count(), "graph larger than the SoC");
         let data: Vec<u8> =
             (0..self.bytes as u64).map(|i| (i.wrapping_mul(0x9E37_79B9) >> 8) as u8).collect();
@@ -179,11 +201,67 @@ impl Dataflow {
                 for level in 0..self.levels() {
                     let mut phase = Vec::new();
                     for n in self.nodes.iter().filter(|n| n.level == level) {
+                        let sink = self.fanout(n.id) == 0;
+                        if n.inputs.len() > 1 {
+                            // Multi-input node: DMA-read every staged
+                            // producer region (the memory-policy mirror of
+                            // the P2P multi-pull), then one stream out.
+                            // Burst-granular Xfers pinned at PLM offset 0
+                            // keep PLM use bounded by the burst size, so
+                            // transfers larger than the PLM still stream
+                            // (the single-input tgen path never stages
+                            // more than two banks either).
+                            let bursts = self.bytes.div_ceil(self.burst);
+                            let chunk = |b: u32| self.burst.min(self.bytes - b * self.burst);
+                            let mut reads = Vec::new();
+                            for &p in &n.inputs {
+                                for b in 0..bursts {
+                                    reads.push(Xfer {
+                                        vaddr: Self::stage_addr(p) + (b * self.burst) as u64,
+                                        plm: 0,
+                                        len: chunk(b),
+                                        user: 0,
+                                    });
+                                }
+                            }
+                            let vout = if sink {
+                                Self::out_addr(n.id)
+                            } else {
+                                Self::stage_addr(n.id)
+                            };
+                            let writes: Vec<Xfer> = (0..bursts)
+                                .map(|b| Xfer {
+                                    vaddr: vout + (b * self.burst) as u64,
+                                    plm: 0,
+                                    len: chunk(b),
+                                    user: 0,
+                                })
+                                .collect();
+                            let mut inv = Invocation::tgen(
+                                n.id,
+                                TgenArgs {
+                                    total_bytes: 0,
+                                    burst_bytes: 1,
+                                    rd_user: 0,
+                                    wr_user: 0,
+                                    vaddr_in: 0,
+                                    vaddr_out: 0,
+                                },
+                            );
+                            inv.program = ProgramKind::Custom(stage_program(
+                                &reads,
+                                &[],
+                                &writes,
+                                self.burst,
+                            ));
+                            inv.args = [0; 8];
+                            phase.push(inv);
+                            continue;
+                        }
                         let vaddr_in = match n.inputs.first() {
                             None => Self::input_addr(),
                             Some(&p) => Self::stage_addr(p),
                         };
-                        let sink = self.fanout(n.id) == 0;
                         phase.push(Invocation::tgen(
                             n.id,
                             TgenArgs {
@@ -214,55 +292,21 @@ impl Dataflow {
                         "P2P lowering supports multi-input nodes only at sinks"
                     );
                     if n.inputs.len() > 1 {
-                        // Multi-input sink: a generated program pulling one
-                        // burst from each producer round-robin, then writing
-                        // one identity stream out.  Interleaving matters:
-                        // draining sources *sequentially* deadlocks — an
-                        // unserved worker stops pulling from the upstream
-                        // multicast (its bounded write buffer fills), which
-                        // stalls the producer for the worker the sink IS
-                        // draining (documented in DESIGN.md §deviations).
-                        use crate::accel::{stage_program, Xfer};
-                        let mut reads = Vec::new();
-                        for b in 0..self.bytes.div_ceil(self.burst) {
-                            for (i, _) in n.inputs.iter().enumerate() {
-                                let len = self.burst.min(self.bytes - b * self.burst);
-                                reads.push(Xfer {
-                                    vaddr: 0,
-                                    plm: 0,
-                                    len,
-                                    user: (1 + i) as u16,
-                                });
-                            }
-                        }
+                        // Multi-input sink: round-robin pulls from every
+                        // producer, then one identity stream out.
                         let writes = [Xfer {
                             vaddr: Self::out_addr(n.id),
                             plm: 0,
                             len: self.bytes,
                             user: 0,
                         }];
-                        let mut inv = Invocation::tgen(
+                        phase.push(multi_pull_invocation(
                             n.id,
-                            TgenArgs {
-                                total_bytes: 0,
-                                burst_bytes: 1,
-                                rd_user: 0,
-                                wr_user: 0,
-                                vaddr_in: 0,
-                                vaddr_out: 0,
-                            },
-                        );
-                        inv.program = crate::coordinator::ProgramKind::Custom(stage_program(
-                            &reads,
-                            &[],
-                            &writes,
+                            &n.inputs,
+                            self.bytes,
                             self.burst,
+                            &writes,
                         ));
-                        inv.args = [0; 8];
-                        for (i, &p) in n.inputs.iter().enumerate() {
-                            inv = inv.with_src((1 + i) as u16, p);
-                        }
-                        phase.push(inv);
                         continue;
                     }
                     let rd_user = if n.inputs.is_empty() { 0 } else { 1 };
@@ -290,7 +334,7 @@ impl Dataflow {
             }
         }
         app.launch(soc)?;
-        let cycles = soc.run(100_000_000)?;
+        let cycles = soc.run(max_cycles)?;
         for n in self.nodes.iter().filter(|n| self.fanout(n.id) == 0 && !n.inputs.is_empty()) {
             // Single-input sinks carry the full identity stream.
             if n.inputs.len() == 1 {
@@ -300,6 +344,49 @@ impl Dataflow {
         }
         Ok(cycles)
     }
+}
+
+/// Build a round-robin multi-source pull invocation: a generated program
+/// that pulls `bytes` from each of `srcs` (installed as source-LUT entries
+/// `1..=srcs.len()`) one burst at a time, *interleaved across sources*,
+/// then emits `writes` from the PLM (memory DMA when `user == 0`,
+/// P2P/multicast otherwise).  The interleaving matters: draining sources
+/// sequentially deadlocks — an unserved producer stops accepting pulls from
+/// its other consumers once its bounded write buffer fills, which stalls
+/// the producer the consumer IS draining (documented in DESIGN.md
+/// §deviations).  Shared by the dataflow lowering's multi-input sinks and
+/// the scenario subsystem's shuffle/halo patterns.
+pub fn multi_pull_invocation(
+    acc: u16,
+    srcs: &[u16],
+    bytes: u32,
+    burst: u32,
+    writes: &[Xfer],
+) -> Invocation {
+    let mut reads = Vec::new();
+    for b in 0..bytes.div_ceil(burst) {
+        let len = burst.min(bytes - b * burst);
+        for i in 0..srcs.len() {
+            reads.push(Xfer { vaddr: 0, plm: 0, len, user: (1 + i) as u16 });
+        }
+    }
+    let mut inv = Invocation::tgen(
+        acc,
+        TgenArgs {
+            total_bytes: 0,
+            burst_bytes: 1,
+            rd_user: 0,
+            wr_user: 0,
+            vaddr_in: 0,
+            vaddr_out: 0,
+        },
+    );
+    inv.program = ProgramKind::Custom(stage_program(&reads, &[], writes, burst));
+    inv.args = [0; 8];
+    for (i, &p) in srcs.iter().enumerate() {
+        inv = inv.with_src((1 + i) as u16, p);
+    }
+    inv
 }
 
 #[cfg(test)]
@@ -323,6 +410,23 @@ mod tests {
         assert_eq!(d.nodes.len(), 5);
         assert_eq!(d.fanout(0), 3);
         assert_eq!(d.nodes.last().unwrap().inputs.len(), 3);
+    }
+
+    #[test]
+    fn bipartite_shuffle_runs_p2p() {
+        let g = Dataflow::generate(Shape::Bipartite(3, 3), 8 << 10, 4096, 0);
+        assert_eq!(g.nodes.len(), 6);
+        assert_eq!(g.levels(), 2);
+        for p in 0..3u16 {
+            assert_eq!(g.fanout(p), 3, "every producer feeds every consumer");
+        }
+        let mut soc = Soc::new(SocConfig::paper_3x4()).unwrap();
+        g.run(&mut soc, EdgePolicy::P2p).unwrap();
+        let report = soc.report();
+        for sink in 3..6u16 {
+            let (_, s) = report.sockets.iter().find(|(id, _)| *id == sink).unwrap();
+            assert_eq!(s.p2p_read_bytes, 3 * (8 << 10) as u64, "sink {sink} merges 3 streams");
+        }
     }
 
     #[test]

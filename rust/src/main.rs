@@ -14,6 +14,9 @@ use espsim::coordinator::experiments::{
     extended_consumer_counts, extended_data_sizes, paper_consumer_counts, paper_data_sizes,
     run_fig6_point, Fig6Options,
 };
+use espsim::coordinator::scenario::{builtin_scenarios, Platform, Scenario};
+use espsim::util::bench::{fmt_secs, time_once, BenchJson, CompareOpts, Table};
+use espsim::util::Json;
 
 const USAGE: &str = "\
 espsim — ESP multicast-NoC paper reproduction
@@ -26,6 +29,20 @@ USAGE:
   espsim sweep [--config PATH] [--mesh16]
       The full Fig. 6 grid (consumers x data sizes); --mesh16 runs the
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
+  espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
+                   [--list] [--json]
+      Run the declarative scenario registry (P2P chains, multicast
+      fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
+      coherence-barrier pipelines) against the DMA-only baseline and
+      record each point into BENCH_noc.json.  Default platform is the
+      8x8 mesh; --mesh16 selects the 16x16 platform; --file runs
+      scenarios from a JSON config instead of the builtin registry.
+  espsim compare BASELINE FRESH [--tol-cycles F] [--tol-speedup F]
+                 [--tol-throughput F] [--warn-only]
+      Diff a fresh bench document against a committed baseline with
+      per-metric tolerances; exits nonzero on regression (the CI perf
+      gate).  Tolerances are fractions (default 0.02 cycles, 0.05
+      speedup; throughput ungated unless requested).
   espsim config
       Print the default SoC configuration as JSON.
 ";
@@ -46,6 +63,11 @@ impl Args {
         } else {
             None
         }
+    }
+
+    /// Next positional (non-flag) argument, or an error naming it.
+    fn positional(&mut self, what: &str) -> Result<String> {
+        self.subcommand().ok_or_else(|| anyhow!("missing {what} argument\n\n{USAGE}"))
     }
 
     fn flag(&mut self, name: &str) -> bool {
@@ -151,6 +173,127 @@ fn main() -> Result<()> {
                         p.multicast_cycles,
                         p.speedup()
                     );
+                }
+            }
+        }
+        "scenarios" => {
+            let list = args.flag("--list");
+            let mesh16 = args.flag("--mesh16");
+            let _json = args.flag("--json"); // re-detected by BenchJson
+            let filter = args.value("--filter")?;
+            let file = args.value("--file")?;
+            let bytes: Option<u32> = args.value("--bytes")?.map(|v| v.parse()).transpose()?;
+            args.finish()?;
+            ensure!(
+                !(mesh16 && file.is_some()),
+                "--mesh16 selects the builtin registry's platform; scenario files carry their own"
+            );
+            let platform = if mesh16 { Platform::Mesh16x16 } else { Platform::Mesh8x8 };
+            let mut scenarios = match &file {
+                Some(path) => Scenario::load_file(path)?,
+                None => builtin_scenarios(platform),
+            };
+            if let Some(f) = &filter {
+                scenarios.retain(|s| s.name.contains(f.as_str()));
+            }
+            if let Some(b) = bytes {
+                for s in &mut scenarios {
+                    s.bytes = b;
+                }
+            }
+            ensure!(!scenarios.is_empty(), "no scenarios match");
+            if list {
+                for s in &scenarios {
+                    println!(
+                        "{:24} {:20} {:10} {:>8} B",
+                        s.name,
+                        s.pattern.code(),
+                        s.platform.code(),
+                        s.bytes
+                    );
+                }
+                return Ok(());
+            }
+            let bench_name = match (&file, mesh16) {
+                (Some(_), _) => "scenarios_custom",
+                (None, false) => "scenarios_8x8",
+                (None, true) => "scenarios_16x16",
+            };
+            let mut sink = BenchJson::from_args(bench_name);
+            let t = Table::new(
+                &["scenario", "pattern", "optimized", "dma-only", "speedup", "p2p-KiB", "wall"],
+                &[20, 18, 12, 12, 8, 8, 9],
+            );
+            // A failing scenario must not discard the points already
+            // measured: finish the sink before propagating the error so
+            // the CI artifact keeps the partial record set.
+            let mut failure: Option<anyhow::Error> = None;
+            for s in &scenarios {
+                let (outcome, wall) = time_once(|| s.run());
+                let o = match outcome {
+                    Ok(o) => o,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                };
+                // `wall` covers BOTH lowerings, so the simulator-throughput
+                // metric must too (the default cycles/wall would understate
+                // it); the extras override replaces it with total simulated
+                // cycles per wall-second, the fig6 bench convention.
+                let total_cps = (o.cycles + o.baseline_cycles) as f64 / wall.max(1e-12);
+                sink.record_with(
+                    &format!("{}_{}", s.name, s.platform.code()),
+                    o.cycles,
+                    wall,
+                    &[
+                        ("cycles_per_sec", Json::Num(total_cps)),
+                        ("baseline_cycles", Json::from(o.baseline_cycles)),
+                        ("speedup", Json::Num(o.speedup())),
+                        ("p2p_bytes", Json::from(o.p2p_bytes)),
+                        ("dma_bytes", Json::from(o.dma_bytes)),
+                        ("flit_hops", Json::from(o.total_flits())),
+                        ("pattern", Json::from(s.pattern.code())),
+                        ("platform", Json::from(s.platform.code())),
+                    ],
+                );
+                t.row(&[
+                    s.name.clone(),
+                    s.pattern.code().to_string(),
+                    format!("{}", o.cycles),
+                    format!("{}", o.baseline_cycles),
+                    format!("{:.2}x", o.speedup()),
+                    format!("{}", o.p2p_bytes >> 10),
+                    fmt_secs(wall),
+                ]);
+            }
+            sink.finish();
+            if let Some(e) = failure {
+                return Err(e);
+            }
+        }
+        "compare" => {
+            let warn_only = args.flag("--warn-only");
+            let mut opts = CompareOpts::default();
+            if let Some(v) = args.value("--tol-cycles")? {
+                opts.tol_cycles = v.parse()?;
+            }
+            if let Some(v) = args.value("--tol-speedup")? {
+                opts.tol_speedup = v.parse()?;
+            }
+            if let Some(v) = args.value("--tol-throughput")? {
+                opts.tol_throughput = Some(v.parse()?);
+            }
+            let baseline = args.positional("BASELINE")?;
+            let fresh = args.positional("FRESH")?;
+            args.finish()?;
+            let report = espsim::util::bench::compare_files(&baseline, &fresh, &opts)?;
+            print!("{}", report.render());
+            if !report.passed() {
+                if warn_only {
+                    eprintln!("perf gate: regressions found (warn-only mode, not failing)");
+                } else {
+                    bail!("perf gate: fresh run regressed against {baseline}");
                 }
             }
         }

@@ -609,7 +609,8 @@ mod tests {
     #[test]
     fn unicast_single_flit_delivery() {
         let mut m = mesh3x3();
-        m.send((0, 0), Message::ctrl((0, 0), (2, 2), MsgKind::P2pReq { len: 4, prod_slot: 0, cons_slot: 0 }));
+        let req = MsgKind::P2pReq { len: 4, prod_slot: 0, cons_slot: 0 };
+        m.send((0, 0), Message::ctrl((0, 0), (2, 2), req));
         run_until_idle(&mut m, 100);
         let got = m.recv((2, 2)).expect("delivered");
         assert_eq!(got.src, (0, 0));
@@ -623,7 +624,12 @@ mod tests {
         let data: Vec<u8> = (0..200u16).map(|i| i as u8).collect();
         m.send(
             (1, 0),
-            Message::data((1, 0), (1, 2), MsgKind::P2pData { seq: 7, prod_slot: 0 }, Arc::new(data.clone())),
+            Message::data(
+                (1, 0),
+                (1, 2),
+                MsgKind::P2pData { seq: 7, prod_slot: 0 },
+                Arc::new(data.clone()),
+            ),
         );
         run_until_idle(&mut m, 200);
         let got = m.recv((1, 2)).expect("delivered");
@@ -685,7 +691,8 @@ mod tests {
 
         let mut uc = mesh3x3();
         for &d in &dests {
-            uc.send((0, 0), Message::data((0, 0), d, MsgKind::P2pData { seq: 0, prod_slot: 0 }, payload.clone()));
+            let kind = MsgKind::P2pData { seq: 0, prod_slot: 0 };
+            uc.send((0, 0), Message::data((0, 0), d, kind, payload.clone()));
         }
         run_until_idle(&mut uc, 2000);
 
@@ -701,7 +708,8 @@ mod tests {
     fn one_cycle_per_hop_when_uncontended() {
         let mut m = mesh3x3();
         // (0,0) -> (0,2): 2 hops, single-flit message.
-        m.send((0, 0), Message::ctrl((0, 0), (0, 2), MsgKind::P2pReq { len: 0, prod_slot: 0, cons_slot: 0 }));
+        let req = MsgKind::P2pReq { len: 0, prod_slot: 0, cons_slot: 0 };
+        m.send((0, 0), Message::ctrl((0, 0), (0, 2), req));
         let mut t = 0;
         let mut delivered_at = None;
         while delivered_at.is_none() && t < 50 {
@@ -771,7 +779,12 @@ mod tests {
         for i in 0..10u32 {
             m.send(
                 (0, 0),
-                Message::data((0, 0), (2, 2), MsgKind::P2pData { seq: i, prod_slot: 0 }, Arc::new(vec![0; 64])),
+                Message::data(
+                    (0, 0),
+                    (2, 2),
+                    MsgKind::P2pData { seq: i, prod_slot: 0 },
+                    Arc::new(vec![0; 64]),
+                ),
             );
         }
         run_until_idle(&mut m, 5000);
@@ -785,7 +798,8 @@ mod tests {
     #[test]
     fn stats_count_hops_and_deliveries() {
         let mut m = mesh3x3();
-        m.send((0, 0), Message::ctrl((0, 0), (0, 1), MsgKind::P2pReq { len: 1, prod_slot: 0, cons_slot: 0 }));
+        let req = MsgKind::P2pReq { len: 1, prod_slot: 0, cons_slot: 0 };
+        m.send((0, 0), Message::ctrl((0, 0), (0, 1), req));
         run_until_idle(&mut m, 100);
         assert_eq!(m.stats.delivered, 1);
         assert!(m.stats.flit_hops >= 2); // at least src router + dest eject

@@ -202,7 +202,8 @@ mod tests {
     fn planes_are_independent() {
         let mut noc =
             Noc::new(MeshParams { width: 3, height: 3, flit_bytes: 32, queue_depth: 4 });
-        noc.send(Plane::DmaReq, (0, 0), Message::ctrl((0, 0), (1, 1), MsgKind::P2pReq { len: 8, prod_slot: 0, cons_slot: 0 }));
+        let req = MsgKind::P2pReq { len: 8, prod_slot: 0, cons_slot: 0 };
+        noc.send(Plane::DmaReq, (0, 0), Message::ctrl((0, 0), (1, 1), req));
         noc.send(Plane::Misc, (0, 0), Message::ctrl((0, 0), (1, 1), MsgKind::Irq { acc: 0 }));
         let mut t = 0;
         while !noc.is_idle() {

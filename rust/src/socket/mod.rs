@@ -332,7 +332,12 @@ impl Socket {
                 self.p2p_rd
                     .entry((prod, prod_slot))
                     .or_default()
-                    .push_back(P2pRead { tag: rc.tag, plm_addr: rc.plm_addr, len: rc.len, received: 0 });
+                    .push_back(P2pRead {
+                        tag: rc.tag,
+                        plm_addr: rc.plm_addr,
+                        len: rc.len,
+                        received: 0,
+                    });
                 self.p2p_rd_outstanding += 1;
                 let kind =
                     MsgKind::P2pReq { len: rc.len, prod_slot, cons_slot: self.slot };
@@ -411,7 +416,8 @@ impl Socket {
             let (phys, miss) = self.tlb.translate(vaddr).expect("unmapped accelerator vaddr");
             penalty += miss;
             let payload = Arc::new(data[off as usize..(off + chunk) as usize].to_vec());
-            let kind = MsgKind::DmaWriteReq { addr: phys, len: chunk, tag: wc.tag, slot: self.slot };
+            let kind =
+                MsgKind::DmaWriteReq { addr: phys, len: chunk, tag: wc.tag, slot: self.slot };
             let msg = Message::data(self.coord, self.mem_tile, kind, payload);
             if penalty == 0 {
                 self.out.push((Plane::DmaReq, msg));

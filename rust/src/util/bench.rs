@@ -82,12 +82,23 @@ impl BenchJson {
 
     /// Add one measured point: `cycles` simulated in `wall_s` seconds.
     pub fn record(&mut self, point: &str, cycles: u64, wall_s: f64) {
+        self.record_with(point, cycles, wall_s, &[]);
+    }
+
+    /// Like [`BenchJson::record`], with extra domain metrics attached to
+    /// the record (e.g. `baseline_cycles`, `speedup`).  Extra keys override
+    /// the standard fields on collision, so a caller can substitute its own
+    /// notion of e.g. `cycles_per_sec`.
+    pub fn record_with(&mut self, point: &str, cycles: u64, wall_s: f64, extra: &[(&str, Json)]) {
         let mut m = BTreeMap::new();
         m.insert("bench".to_string(), Json::from(self.bench.as_str()));
         m.insert("point".to_string(), Json::from(point));
         m.insert("cycles".to_string(), Json::from(cycles));
         m.insert("wall_s".to_string(), Json::Num(wall_s));
         m.insert("cycles_per_sec".to_string(), Json::Num(cycles as f64 / wall_s.max(1e-12)));
+        for (k, v) in extra {
+            m.insert((*k).to_string(), v.clone());
+        }
         self.records.push(Json::Obj(m));
     }
 
@@ -130,6 +141,218 @@ impl BenchJson {
             Err(e) => eprintln!("warning: could not write {}: {e}", self.path.display()),
         }
     }
+}
+
+/// Per-metric tolerances for [`compare`]: the allowed fractional
+/// *worsening* of each metric before a point counts as a regression.
+/// Simulated `cycles` are deterministic, so their tolerance is tight;
+/// wall-clock throughput is machine noise and is not gated unless asked.
+#[derive(Debug, Clone, Copy)]
+pub struct CompareOpts {
+    /// Allowed fractional increase in simulated `cycles` (0.02 = +2%).
+    pub tol_cycles: f64,
+    /// Allowed fractional drop in `speedup` (recorded by scenario runs).
+    pub tol_speedup: f64,
+    /// Also gate `cycles_per_sec` (simulator throughput): allowed
+    /// fractional drop.  `None` (the default) skips the metric, since CI
+    /// runners vary too much for wall-clock to gate merges.
+    pub tol_throughput: Option<f64>,
+}
+
+impl Default for CompareOpts {
+    fn default() -> Self {
+        Self { tol_cycles: 0.02, tol_speedup: 0.05, tol_throughput: None }
+    }
+}
+
+/// One metric of one point that got worse past its tolerance.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    /// Bench section the point belongs to.
+    pub bench: String,
+    /// Point name.
+    pub point: String,
+    /// Metric that regressed (`cycles`, `speedup`, `cycles_per_sec`).
+    pub metric: &'static str,
+    /// Committed baseline value.
+    pub baseline: f64,
+    /// Freshly measured value.
+    pub fresh: f64,
+}
+
+impl Regression {
+    /// Fractional change, signed so that positive = worse for the metric.
+    pub fn worsening(&self) -> f64 {
+        if self.baseline == 0.0 {
+            return 0.0;
+        }
+        let delta = (self.fresh - self.baseline) / self.baseline;
+        if self.metric == "cycles" {
+            delta
+        } else {
+            -delta
+        }
+    }
+}
+
+/// Outcome of diffing a fresh bench document against a committed baseline.
+#[derive(Debug, Default)]
+pub struct CompareReport {
+    /// Points present in both documents and checked metric-by-metric.
+    pub points_checked: usize,
+    /// Metrics that got worse past tolerance.
+    pub regressions: Vec<Regression>,
+    /// `bench/point` entries the baseline has but the fresh run lost
+    /// (a silently dropped measurement is treated as a failure).
+    pub missing_points: Vec<String>,
+    /// Fresh points with no baseline yet (informational).
+    pub new_points: usize,
+    /// Baseline bench sections the fresh run did not execute at all;
+    /// skipped rather than failed so a partial run (e.g. the scenario
+    /// gate) can be compared against a full baseline.
+    pub skipped_benches: Vec<String>,
+}
+
+impl CompareReport {
+    /// Did the fresh run hold the baseline?
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing_points.is_empty()
+    }
+
+    /// Human-readable summary (one line per finding).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "bench-compare: {} points checked, {} regressions, {} missing, {} new",
+            self.points_checked,
+            self.regressions.len(),
+            self.missing_points.len(),
+            self.new_points
+        );
+        for r in &self.regressions {
+            let _ = writeln!(
+                s,
+                "  REGRESSION {}/{}: {} {} -> {} ({:+.1}% worse)",
+                r.bench,
+                r.point,
+                r.metric,
+                r.baseline,
+                r.fresh,
+                r.worsening() * 100.0
+            );
+        }
+        for m in &self.missing_points {
+            let _ = writeln!(s, "  MISSING {m} (in baseline, absent from fresh run)");
+        }
+        if !self.skipped_benches.is_empty() {
+            let skipped = self.skipped_benches.join(", ");
+            let _ = writeln!(s, "  skipped benches not in fresh run: {skipped}");
+        }
+        if self.points_checked == 0 && self.passed() {
+            let _ = writeln!(
+                s,
+                "  baseline has no overlapping records yet (bootstrap): run the benches and \
+                 commit the produced BENCH_noc.json to arm the gate"
+            );
+        }
+        s
+    }
+}
+
+/// Index a bench document's records by `(bench, point)`.
+fn index_records(doc: &Json) -> Vec<((String, String), &Json)> {
+    let mut out = Vec::new();
+    if let Some(Json::Arr(recs)) = doc.get("records") {
+        for r in recs {
+            if let (Some(Ok(b)), Some(Ok(p))) =
+                (r.get("bench").map(|v| v.as_str()), r.get("point").map(|v| v.as_str()))
+            {
+                out.push(((b.to_string(), p.to_string()), r));
+            }
+        }
+    }
+    out
+}
+
+/// Diff a fresh bench document against a committed baseline with per-metric
+/// tolerances.  Both documents use the [`BenchJson`] schema
+/// (`{"records": [{"bench", "point", "cycles", ...}]}`).  Baseline bench
+/// sections absent from the fresh document are skipped; baseline *points*
+/// of an executed bench must all reappear.  This is the library half of the
+/// CI perf gate; `espsim compare` is the nonzero-exit wrapper around it.
+pub fn compare(baseline: &Json, fresh: &Json, opts: &CompareOpts) -> CompareReport {
+    let base = index_records(baseline);
+    let fresh_idx = index_records(fresh);
+    let fresh_benches: std::collections::BTreeSet<&str> =
+        fresh_idx.iter().map(|((b, _), _)| b.as_str()).collect();
+    let mut report = CompareReport::default();
+
+    let metric = |r: &Json, key: &str| r.get(key).and_then(|v| v.as_f64().ok());
+    for ((bench, point), brec) in &base {
+        if !fresh_benches.contains(bench.as_str()) {
+            if !report.skipped_benches.contains(bench) {
+                report.skipped_benches.push(bench.clone());
+            }
+            continue;
+        }
+        let Some((_, frec)) = fresh_idx.iter().find(|(k, _)| &k.0 == bench && &k.1 == point)
+        else {
+            report.missing_points.push(format!("{bench}/{point}"));
+            continue;
+        };
+        report.points_checked += 1;
+        let mut check = |name: &'static str, tol: f64, higher_is_worse: bool| {
+            match (metric(brec, name), metric(frec, name)) {
+                (Some(b), Some(f)) => {
+                    let bad = if higher_is_worse {
+                        f > b * (1.0 + tol)
+                    } else {
+                        f < b * (1.0 - tol)
+                    };
+                    if bad {
+                        report.regressions.push(Regression {
+                            bench: bench.clone(),
+                            point: point.clone(),
+                            metric: name,
+                            baseline: b,
+                            fresh: f,
+                        });
+                    }
+                }
+                // A gated metric the baseline has but the fresh record
+                // dropped is a silent un-gating, not a pass.
+                (Some(_), None) => {
+                    report.missing_points.push(format!("{bench}/{point} metric {name}"));
+                }
+                (None, _) => {}
+            }
+        };
+        check("cycles", opts.tol_cycles, true);
+        check("speedup", opts.tol_speedup, false);
+        if let Some(t) = opts.tol_throughput {
+            check("cycles_per_sec", t, false);
+        }
+    }
+    let base_keys: std::collections::BTreeSet<&(String, String)> =
+        base.iter().map(|(k, _)| k).collect();
+    report.new_points = fresh_idx.iter().filter(|(k, _)| !base_keys.contains(k)).count();
+    report
+}
+
+/// [`compare`] over files on disk.
+pub fn compare_files(
+    baseline: impl AsRef<std::path::Path>,
+    fresh: impl AsRef<std::path::Path>,
+    opts: &CompareOpts,
+) -> anyhow::Result<CompareReport> {
+    let read = |p: &std::path::Path| -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", p.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {}: {e}", p.display()))
+    };
+    Ok(compare(&read(baseline.as_ref())?, &read(fresh.as_ref())?, opts))
 }
 
 /// Simple aligned-table printer.
@@ -199,6 +422,125 @@ mod tests {
         let (v, s) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(s >= 0.0);
+    }
+
+    fn doc(records: &str) -> Json {
+        Json::parse(&format!("{{\"records\":[{records}]}}")).unwrap()
+    }
+
+    fn rec(bench: &str, point: &str, cycles: u64, speedup: f64) -> String {
+        format!(
+            "{{\"bench\":\"{bench}\",\"point\":\"{point}\",\"cycles\":{cycles},\
+             \"wall_s\":0.1,\"cycles_per_sec\":{},\"speedup\":{speedup}}}",
+            cycles as f64 / 0.1
+        )
+    }
+
+    #[test]
+    fn compare_passes_identical_and_improved_runs() {
+        let base = doc(&rec("s", "p1", 1000, 2.0));
+        let same = compare(&base, &base, &CompareOpts::default());
+        assert!(same.passed());
+        assert_eq!(same.points_checked, 1);
+        // Fewer cycles and more speedup are improvements, not regressions.
+        let better = doc(&rec("s", "p1", 900, 2.5));
+        assert!(compare(&base, &better, &CompareOpts::default()).passed());
+    }
+
+    #[test]
+    fn compare_flags_doctored_cycle_regression() {
+        let base = doc(&rec("s", "p1", 1000, 2.0));
+        let slower = doc(&rec("s", "p1", 1100, 2.0)); // +10% > 2% tolerance
+        let r = compare(&base, &slower, &CompareOpts::default());
+        assert!(!r.passed());
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].metric, "cycles");
+        assert!(r.regressions[0].worsening() > 0.09);
+        assert!(r.render().contains("REGRESSION s/p1"));
+        // Within tolerance passes.
+        let noise = doc(&rec("s", "p1", 1010, 2.0)); // +1% < 2%
+        assert!(compare(&base, &noise, &CompareOpts::default()).passed());
+    }
+
+    #[test]
+    fn compare_flags_speedup_drops_and_missing_points() {
+        let base = doc(&format!("{},{}", rec("s", "p1", 1000, 2.0), rec("s", "p2", 500, 3.0)));
+        let degraded = doc(&rec("s", "p1", 1000, 1.5)); // speedup -25%, p2 gone
+        let r = compare(&base, &degraded, &CompareOpts::default());
+        assert!(!r.passed());
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].metric, "speedup");
+        assert_eq!(r.missing_points, vec!["s/p2".to_string()]);
+    }
+
+    #[test]
+    fn compare_flags_gated_metrics_dropped_from_fresh_records() {
+        let base = doc(&rec("s", "p1", 1000, 2.0));
+        // Same point, but the fresh record stopped emitting `speedup`.
+        let fresh = Json::parse(
+            "{\"records\":[{\"bench\":\"s\",\"point\":\"p1\",\"cycles\":1000,\"wall_s\":0.1}]}",
+        )
+        .unwrap();
+        let r = compare(&base, &fresh, &CompareOpts::default());
+        assert!(!r.passed(), "silently un-gated metric must fail");
+        assert!(r.missing_points.iter().any(|m| m.contains("metric speedup")));
+    }
+
+    #[test]
+    fn compare_skips_benches_absent_from_fresh_and_counts_new_points() {
+        let base = doc(&format!("{},{}", rec("fig6", "a", 900, 1.7), rec("s", "p1", 1000, 2.0)));
+        let fresh = doc(&format!("{},{}", rec("s", "p1", 1000, 2.0), rec("s", "p9", 400, 1.1)));
+        let r = compare(&base, &fresh, &CompareOpts::default());
+        assert!(r.passed(), "fig6 not rerun -> skipped, not failed");
+        assert_eq!(r.skipped_benches, vec!["fig6".to_string()]);
+        assert_eq!(r.new_points, 1);
+        assert_eq!(r.points_checked, 1);
+    }
+
+    #[test]
+    fn compare_empty_baseline_bootstraps_green() {
+        let base = Json::parse("{\"records\":[]}").unwrap();
+        let fresh = doc(&rec("s", "p1", 1000, 2.0));
+        let r = compare(&base, &fresh, &CompareOpts::default());
+        assert!(r.passed());
+        assert_eq!(r.points_checked, 0);
+        assert!(r.render().contains("bootstrap"));
+    }
+
+    #[test]
+    fn compare_throughput_gated_only_on_request() {
+        let base = doc(&rec("s", "p1", 1000, 2.0));
+        // Same cycles, halved wall-clock throughput.
+        let fresh = Json::parse(
+            "{\"records\":[{\"bench\":\"s\",\"point\":\"p1\",\"cycles\":1000,\
+             \"wall_s\":0.2,\"cycles_per_sec\":5000,\"speedup\":2.0}]}",
+        )
+        .unwrap();
+        assert!(compare(&base, &fresh, &CompareOpts::default()).passed());
+        let gated = CompareOpts { tol_throughput: Some(0.2), ..CompareOpts::default() };
+        let r = compare(&base, &fresh, &gated);
+        assert!(!r.passed());
+        assert_eq!(r.regressions[0].metric, "cycles_per_sec");
+    }
+
+    #[test]
+    fn record_with_attaches_extra_metrics() {
+        let dir = std::env::temp_dir().join(format!("espsim_bench_extra_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_extra.json");
+        let mut s = BenchJson {
+            bench: "scen".to_string(),
+            path: path.clone(),
+            records: Vec::new(),
+            echo: false,
+        };
+        s.record_with("p", 100, 0.5, &[("speedup", Json::Num(1.5))]);
+        s.finish();
+        let d = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let r = &d.get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r.get("speedup").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(r.get("cycles").unwrap().as_u64().unwrap(), 100);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

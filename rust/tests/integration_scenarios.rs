@@ -1,0 +1,147 @@
+//! End-to-end tests of the declarative scenario subsystem: the builtin
+//! registry runs every communication pattern against its DMA-only
+//! baseline, scenario files load from JSON, and the bench-compare gate
+//! flags doctored regressions with a failing report (the library half of
+//! the CI `perf-gate` job's nonzero exit).
+
+use espsim::coordinator::scenario::{builtin_scenarios, Pattern, Platform, Scenario};
+use espsim::noc::Plane;
+use espsim::util::bench::{compare, CompareOpts};
+use espsim::util::Json;
+
+/// Small transfers keep the debug-mode (`cargo test -q`) wall time
+/// bounded; the CLI default (64 KiB) runs in the release-mode perf gate.
+fn small(mut s: Scenario) -> Scenario {
+    s.bytes = 16 << 10;
+    s
+}
+
+#[test]
+fn builtin_registry_runs_every_pattern_on_the_paper_platform() {
+    let scenarios = builtin_scenarios(Platform::Paper3x4);
+    assert!(scenarios.len() >= 5);
+    for s in scenarios.into_iter().map(small) {
+        let o = s.run().unwrap_or_else(|e| panic!("{}: {e:#}", s.name));
+        assert!(o.cycles > 0 && o.baseline_cycles > 0, "{} measured nothing", s.name);
+        assert!(
+            o.p2p_bytes > 0,
+            "{}: every optimized lowering moves P2P/multicast traffic",
+            s.name
+        );
+        assert!(o.total_flits() > 0, "{}: NoC must carry traffic", s.name);
+        assert!(
+            o.speedup() > 0.5,
+            "{}: optimized lowering pathologically slow ({} vs {})",
+            s.name,
+            o.cycles,
+            o.baseline_cycles
+        );
+    }
+}
+
+#[test]
+fn chain_and_fanout_beat_their_dma_baselines() {
+    for name in ["chain4", "fanout8"] {
+        let s = small(
+            builtin_scenarios(Platform::Paper3x4).into_iter().find(|s| s.name == name).unwrap(),
+        );
+        let o = s.run().unwrap();
+        assert!(
+            o.speedup() > 1.0,
+            "{name}: optimized {} should beat DMA-only {}",
+            o.cycles,
+            o.baseline_cycles
+        );
+    }
+}
+
+#[test]
+fn coherent_phases_ride_the_coherence_planes() {
+    let s = small(
+        builtin_scenarios(Platform::Paper3x4)
+            .into_iter()
+            .find(|s| matches!(s.pattern, Pattern::CoherentPhases { .. }))
+            .unwrap(),
+    );
+    let o = s.run().unwrap();
+    assert!(
+        o.plane_flits[Plane::CohReq.idx()] > 0,
+        "flag barriers must put GetM/GetS traffic on the coherence-request plane"
+    );
+    assert!(o.plane_flits[Plane::CohRsp.idx()] > 0, "and grants on the response plane");
+    // The bulk data still rides the DMA planes.
+    assert!(o.plane_flits[Plane::DmaRsp.idx()] > 0);
+}
+
+#[test]
+fn mesh16_platform_runs_a_scenario() {
+    let mut s = Scenario::new(
+        "chain4_16",
+        Pattern::P2pChain { stages: 4 },
+        Platform::Mesh16x16,
+    );
+    s.bytes = 16 << 10;
+    let o = s.run().unwrap();
+    assert!(o.cycles > 0 && o.p2p_bytes > 0);
+}
+
+#[test]
+fn scenario_files_load_and_reject_garbage() {
+    let dir = std::env::temp_dir().join(format!("espsim_scn_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenarios.json");
+
+    // A file covering a custom subset, written from the typed form.
+    let subset = vec![
+        small(Scenario::new("c2", Pattern::P2pChain { stages: 2 }, Platform::Paper3x4)),
+        small(Scenario::new(
+            "sh22",
+            Pattern::AllToAllShuffle { producers: 2, consumers: 2 },
+            Platform::Paper3x4,
+        )),
+    ];
+    let doc = format!(
+        "{{\"scenarios\":[{}]}}",
+        subset.iter().map(|s| s.to_json().to_string()).collect::<Vec<_>>().join(",")
+    );
+    std::fs::write(&path, doc).unwrap();
+    let loaded = Scenario::load_file(&path).unwrap();
+    assert_eq!(loaded, subset);
+    // Loaded scenarios actually run.
+    let o = loaded[0].run().unwrap();
+    assert!(o.cycles > 0);
+
+    // Unknown pattern and empty lists are rejected.
+    let bad = "{\"scenarios\":[{\"name\":\"x\",\"pattern\":\"warp\",\"platform\":\"paper_3x4\"}]}";
+    std::fs::write(&path, bad).unwrap();
+    assert!(Scenario::load_file(&path).is_err());
+    std::fs::write(&path, "{\"scenarios\":[]}").unwrap();
+    assert!(Scenario::load_file(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance check for the perf gate: feed `compare` a doctored
+/// regression built from a *real* scenario measurement and require a
+/// failing report (which `espsim compare` turns into a nonzero exit).
+#[test]
+fn bench_compare_fails_a_doctored_scenario_regression() {
+    let s = small(builtin_scenarios(Platform::Paper3x4).remove(0));
+    let o = s.run().unwrap();
+    let rec = |cycles: u64, speedup: f64| {
+        format!(
+            "{{\"records\":[{{\"bench\":\"scenarios_8x8\",\"point\":\"{}\",\
+             \"cycles\":{cycles},\"wall_s\":0.1,\"speedup\":{speedup}}}]}}",
+            s.name
+        )
+    };
+    let baseline = Json::parse(&rec(o.cycles, o.speedup())).unwrap();
+    let honest = compare(&baseline, &baseline, &CompareOpts::default());
+    assert!(honest.passed(), "identical rerun must pass the gate");
+    // Doctor the fresh run: +25% cycles, -25% speedup.
+    let doctored =
+        Json::parse(&rec(o.cycles + o.cycles / 4, o.speedup() * 0.75)).unwrap();
+    let r = compare(&baseline, &doctored, &CompareOpts::default());
+    assert!(!r.passed(), "doctored regression must fail the gate");
+    assert!(r.regressions.iter().any(|x| x.metric == "cycles"));
+    assert!(r.regressions.iter().any(|x| x.metric == "speedup"));
+}

@@ -153,8 +153,13 @@ fn prop_phase_barriers_order_invocations() {
         let report = soc.report();
         let phase1_end =
             report.invocations.iter().filter(|(a, _, _)| *a < 3).map(|(_, _, e)| *e).max().unwrap();
-        let phase2_start =
-            report.invocations.iter().filter(|(a, _, _)| *a >= 3).map(|(_, s, _)| *s).min().unwrap();
+        let phase2_start = report
+            .invocations
+            .iter()
+            .filter(|(a, _, _)| *a >= 3)
+            .map(|(_, s, _)| *s)
+            .min()
+            .unwrap();
         assert!(
             phase2_start > phase1_end,
             "phase 2 started at {phase2_start} before phase 1 ended at {phase1_end}"

@@ -1,0 +1,70 @@
+//! Scenario determinism: the same scenario + seed + tick mode must produce
+//! a byte-identical `Outcome` — cycles, per-plane flit/delivery stats,
+//! byte counters, and invocation spans (the scenario-level delivery trace)
+//! — on repeated runs AND across the sequential/parallel/auto plane-tick
+//! modes.  This is what makes the recorded `BENCH_noc.json` numbers
+//! gateable: any nondeterminism here would turn the CI perf gate into a
+//! coin flip.
+
+use espsim::coordinator::scenario::{builtin_scenarios, Pattern, Platform, Scenario};
+use espsim::noc::TickMode;
+
+/// Debug formatting covers every Outcome field, so string equality is the
+/// byte-identical check.
+fn fingerprint(s: &Scenario) -> String {
+    format!("{:?}", s.run().unwrap_or_else(|e| panic!("{}: {e:#}", s.name)))
+}
+
+#[test]
+fn outcomes_identical_across_tick_modes_and_reruns() {
+    for mut s in builtin_scenarios(Platform::Paper3x4) {
+        s.bytes = 8 << 10;
+        let mut prints = Vec::new();
+        for mode in [TickMode::Sequential, TickMode::Parallel, TickMode::Auto] {
+            s.tick_mode = mode;
+            let a = fingerprint(&s);
+            let b = fingerprint(&s);
+            assert_eq!(a, b, "{}: rerun diverged in {mode:?}", s.name);
+            prints.push(a);
+        }
+        assert_eq!(prints[0], prints[1], "{}: parallel != sequential", s.name);
+        assert_eq!(prints[0], prints[2], "{}: auto != sequential", s.name);
+    }
+}
+
+#[test]
+fn outcomes_identical_across_tick_modes_on_the_16x16_platform() {
+    // One representative multi-plane scenario at scale: the coherent
+    // pipeline exercises coherence + DMA + misc planes together, which is
+    // where parallel plane ticking could plausibly diverge.
+    let mut s = Scenario::new(
+        "coh2_16",
+        Pattern::CoherentPhases { stages: 2 },
+        Platform::Mesh16x16,
+    );
+    s.bytes = 8 << 10;
+    let mut prints = Vec::new();
+    for mode in [TickMode::Sequential, TickMode::Parallel, TickMode::Auto] {
+        s.tick_mode = mode;
+        prints.push(fingerprint(&s));
+    }
+    assert_eq!(prints[0], prints[1], "parallel != sequential");
+    assert_eq!(prints[0], prints[2], "auto != sequential");
+}
+
+#[test]
+fn generated_graph_scenarios_depend_only_on_the_seed() {
+    // The shuffle pattern goes through the dataflow generator: same seed
+    // same graph; different seeds may differ but must still run.
+    let mut a = Scenario::new(
+        "sh",
+        Pattern::AllToAllShuffle { producers: 2, consumers: 2 },
+        Platform::Paper3x4,
+    );
+    a.bytes = 8 << 10;
+    let mut b = a.clone();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "same seed, same outcome");
+    b.seed = 999;
+    let o = b.run().unwrap();
+    assert!(o.cycles > 0);
+}

@@ -15,9 +15,12 @@
 
 use espsim::config::SocConfig;
 use espsim::coordinator::experiments::{run_fig6_point, run_multicast, Fig6Options};
+use espsim::coordinator::scenario::{Pattern, Platform, Scenario};
 use espsim::coordinator::Soc;
 use espsim::noc::{DestList, Mesh, MeshParams, Message, MsgKind};
-use espsim::util::bench::{measure, time_once, BenchJson, Table};
+use espsim::sched::SchedMode;
+use espsim::util::bench::{fmt_secs, measure, time_once, BenchJson, Table};
+use espsim::util::Json;
 use std::sync::Arc;
 
 fn buffering(sink: &mut BenchJson) {
@@ -237,6 +240,50 @@ fn workload_shapes() {
     }
 }
 
+fn sched_scan_vs_worklist(sink: &mut BenchJson) {
+    println!("\n== ablation 8: full-scan vs activity-driven SoC scheduler ==");
+    println!("   (coherence-barrier pipeline, both lowerings; cycles must be identical)");
+    let t = Table::new(
+        &["platform", "sim-cycles", "full-scan", "worklist", "speedup"],
+        &[9, 11, 10, 10, 8],
+    );
+    for (name, platform) in [("8x8", Platform::Mesh8x8), ("16x16", Platform::Mesh16x16)] {
+        let mut s = Scenario::new(
+            "coherent_pipeline3",
+            Pattern::CoherentPhases { stages: 3 },
+            platform,
+        );
+        s.sched = SchedMode::FullScan;
+        let (scan, scan_wall) = time_once(|| s.run().unwrap());
+        s.sched = SchedMode::Worklist;
+        let (wl, wl_wall) = time_once(|| s.run().unwrap());
+        assert_eq!(
+            (scan.cycles, scan.baseline_cycles),
+            (wl.cycles, wl.baseline_cycles),
+            "schedulers diverged on {name}"
+        );
+        let sim_cycles = wl.cycles + wl.baseline_cycles;
+        let speedup = scan_wall / wl_wall.max(1e-12);
+        sink.record(&format!("ablation8_sched_fullscan_{name}"), sim_cycles, scan_wall);
+        sink.record_with(
+            &format!("ablation8_sched_worklist_{name}"),
+            sim_cycles,
+            wl_wall,
+            &[
+                ("sched_speedup", Json::Num(speedup)),
+                ("sim_cycles_per_sec", Json::Num(sim_cycles as f64 / wl_wall.max(1e-12))),
+            ],
+        );
+        t.row(&[
+            name.to_string(),
+            format!("{sim_cycles}"),
+            fmt_secs(scan_wall),
+            fmt_secs(wl_wall),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+}
+
 fn main() {
     let mut sink = BenchJson::from_args("ablations");
     buffering(&mut sink);
@@ -246,5 +293,6 @@ fn main() {
     fork_vs_unicast();
     sync_latency();
     workload_shapes();
+    sched_scan_vs_worklist(&mut sink);
     sink.finish();
 }

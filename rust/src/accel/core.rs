@@ -8,6 +8,7 @@
 
 use crate::accel::datapath::{self, DpCall};
 use crate::accel::isa::{Instr, NUM_REGS};
+use crate::sched::Wake;
 use crate::socket::{DmaDir, Socket, TAG_NONE};
 
 /// Core execution state.
@@ -95,14 +96,24 @@ impl AccCore {
     }
 
     /// Execute at most one instruction this cycle.
-    pub fn tick(&mut self, now: u64, socket: &mut Socket, plm: &mut [u8]) {
+    ///
+    /// The returned [`Wake`] classifies the cycle: `Busy` while the
+    /// pipeline can advance by itself, `Sleeping` on a datapath wait
+    /// (`RunDp`/`Wdp` against a known busy-until), `Parked` on a `Wdma`
+    /// spin — the joined tag completes only through a socket delivery (or
+    /// the socket's own timed sends, which the tile aggregates in).  Spin
+    /// retries skipped by a parked core would each have re-polled an
+    /// unchanged tag, so `dma_stall_cycles`/`dp_stall_cycles` count
+    /// *executed* retries and are scheduler-dependent by design.
+    pub fn tick(&mut self, now: u64, socket: &mut Socket, plm: &mut [u8]) -> Wake {
         if self.state != CoreState::Running {
-            return;
+            return Wake::Parked;
         }
         let Some(&instr) = self.program.get(self.pc) else {
             panic!("pc {} past end of program", self.pc);
         };
         let mut next_pc = self.pc + 1;
+        let mut wake = Wake::Busy;
         match instr {
             Instr::Seti { rd, imm } => self.set_reg(rd, imm as i64 as u64),
             Instr::Add { rd, ra, rb } => {
@@ -138,13 +149,15 @@ impl AccCore {
                 let t = self.regs[tag as usize];
                 if !(t == TAG_NONE as u64 || socket.is_done(t as u32)) {
                     self.stats.dma_stall_cycles += 1;
-                    next_pc = self.pc; // spin
+                    next_pc = self.pc; // spin: only a completion can unblock
+                    wake = Wake::Parked;
                 }
             }
             Instr::RunDp { call } => {
                 if now < self.dp_busy_until {
                     self.stats.dp_stall_cycles += 1;
                     next_pc = self.pc; // datapath busy: wait to launch
+                    wake = Wake::at(now, self.dp_busy_until);
                 } else {
                     let call = self
                         .dp_calls
@@ -160,6 +173,7 @@ impl AccCore {
                 if now < self.dp_busy_until {
                     self.stats.dp_stall_cycles += 1;
                     next_pc = self.pc;
+                    wake = Wake::at(now, self.dp_busy_until);
                 }
             }
             Instr::Blt { ra, rb, off } => {
@@ -180,12 +194,14 @@ impl AccCore {
             Instr::Jmp { off } => next_pc = (self.pc as i64 + off as i64) as usize,
             Instr::Done => {
                 self.state = CoreState::Finished;
+                wake = Wake::Parked; // tile completion logic takes over
             }
         }
         if next_pc != self.pc || matches!(instr, Instr::Jmp { off: 0 }) {
             self.stats.instrs += 1;
         }
         self.pc = next_pc;
+        wake
     }
 }
 

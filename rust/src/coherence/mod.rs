@@ -17,6 +17,15 @@
 //! [`Plane::CohReq`], forwards on [`Plane::CohFwd`], responses on
 //! [`Plane::CohRsp`]), which breaks message-dependent deadlock exactly as
 //! in ESP.
+//!
+//! **Scheduler contract** (DESIGN.md §SoC scheduler): both controllers
+//! are purely message-driven — no timed state, every transition caused by
+//! a `handle_msg` or an explicit load/store/evict call — and all their
+//! cross-tile effects ride the three coherence planes.  That is what lets
+//! a tile holding one *park* while a transaction is in flight or while a
+//! spinner's flag line sits cached: the state it waits on can only change
+//! via a delivery (data grant, InvAck, the `Inv` a producer's flag store
+//! triggers), and every delivery unparks its destination tile.
 
 pub mod directory;
 
@@ -169,6 +178,23 @@ impl CacheCtl {
             self.out.push((Plane::CohReq, Message::ctrl(self.coord, self.dir_tile, kind)));
         }
         None
+    }
+
+    /// Coherent load for spin-polling: reads a resident line **without**
+    /// refreshing its LRU position or hit counter, so re-polling an
+    /// unchanged flag is architecturally invisible — the property that
+    /// lets the SoC scheduler park a spinner without diverging from the
+    /// poll-every-cycle reference even under eviction pressure.  A miss
+    /// falls back to the ordinary [`CacheCtl::load`] path (starting a
+    /// GetS on the first call).
+    pub fn peek_load(&mut self, addr: u64) -> Option<u64> {
+        let (laddr, off) = self.line_of(addr);
+        if let Some(line) = self.lines.get(&laddr) {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(&line.data[off..off + 8]);
+            return Some(u64::from_le_bytes(w));
+        }
+        self.load(addr)
     }
 
     /// Coherent store of the 8-byte word at `addr`.  Returns `true` when
@@ -407,6 +433,24 @@ mod tests {
         let h = w.caches[0].hits;
         assert_eq!(w.load(0, 64), 0xDEAD_BEEF);
         assert!(w.caches[0].hits > h);
+    }
+
+    #[test]
+    fn peek_load_reads_without_touching_lru_or_stats() {
+        let mut w = World::new(1);
+        w.dram[0..8].copy_from_slice(&7u64.to_le_bytes());
+        assert_eq!(w.load(0, 0), 7, "fill the line");
+        let hits = w.caches[0].hits;
+        let lru = w.caches[0].lru.clone();
+        for _ in 0..10 {
+            assert_eq!(w.caches[0].peek_load(0), Some(7));
+        }
+        assert_eq!(w.caches[0].hits, hits, "peek must not count hits");
+        assert_eq!(w.caches[0].lru, lru, "peek must not reorder the LRU");
+        // A missing line falls back to the ordinary load path.
+        assert_eq!(w.caches[0].peek_load(4096), None);
+        w.settle();
+        assert_eq!(w.caches[0].peek_load(4096), Some(0));
     }
 
     #[test]

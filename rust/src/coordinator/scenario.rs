@@ -29,6 +29,7 @@ use crate::coordinator::stats::Report;
 use crate::coordinator::workloads::{multi_pull_invocation, Dataflow, EdgePolicy, Shape};
 use crate::coordinator::{App, Invocation, ProgramKind, Soc};
 use crate::noc::{TickMode, NUM_PLANES};
+use crate::sched::SchedMode;
 use crate::util::Json;
 
 /// Evaluation platform a scenario runs on.
@@ -168,6 +169,9 @@ pub struct Scenario {
     pub max_cycles: u64,
     /// NoC plane-tick scheduling (results are identical in every mode).
     pub tick_mode: TickMode,
+    /// SoC tile scheduling (worklist or the full-scan reference; results
+    /// are cycle-identical in both — `tests/prop_soc_sched.rs`).
+    pub sched: SchedMode,
 }
 
 /// Measured result of one scenario run (both lowerings).
@@ -235,6 +239,7 @@ impl Scenario {
             seed: 1,
             max_cycles: 200_000_000,
             tick_mode: TickMode::Auto,
+            sched: SchedMode::default(),
         }
     }
 
@@ -297,7 +302,8 @@ impl Scenario {
     fn soc(&self) -> Result<Soc> {
         let mut cfg = self.platform.config();
         cfg.noc.tick_mode = self.tick_mode;
-        let soc = Soc::new(cfg)?;
+        let mut soc = Soc::new(cfg)?;
+        soc.set_sched_mode(self.sched);
         ensure!(
             self.pattern.sockets() <= soc.acc_count(),
             "pattern {} needs {} sockets, platform {} has {}",
@@ -536,6 +542,7 @@ impl Scenario {
         m.insert("seed".to_string(), Json::from(self.seed));
         m.insert("max_cycles".to_string(), Json::from(self.max_cycles));
         m.insert("tick_mode".to_string(), Json::from(self.tick_mode.code()));
+        m.insert("sched".to_string(), Json::from(self.sched.code()));
         match self.pattern {
             Pattern::P2pChain { stages } | Pattern::CoherentPhases { stages } => {
                 m.insert("stages".to_string(), Json::from(stages as u64));
@@ -600,6 +607,11 @@ impl Scenario {
             let code = v.as_str()?;
             s.tick_mode = TickMode::from_code(code)
                 .ok_or_else(|| anyhow!("unknown tick_mode {code:?}"))?;
+        }
+        if let Some(v) = j.get("sched") {
+            let code = v.as_str()?;
+            s.sched =
+                SchedMode::from_code(code).ok_or_else(|| anyhow!("unknown sched {code:?}"))?;
         }
         s.validate()?;
         Ok(s)

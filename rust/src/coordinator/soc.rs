@@ -1,14 +1,148 @@
 //! SoC assembly and the global simulation loop.
+//!
+//! [`Soc::run`] is **activity-driven**: tiles report a [`Wake`] state from
+//! every tick, the scheduler keeps a busy worklist plus a min-heap
+//! wake-queue of timed events, NoC deliveries unpark their destination
+//! tile, and when nothing is busy and the NoC is idle the loop
+//! fast-forwards `now` straight to the next timed wake instead of ticking
+//! through provably dead cycles.  [`SchedMode::FullScan`] retains the
+//! seed's tick-every-tile loop as the executable reference model;
+//! `tests/prop_soc_sched.rs` pins the two cycle-for-cycle identical.
+//! DESIGN.md §SoC scheduler documents the wake-state lattice, the legal
+//! fast-forward conditions, and the unpark obligations a new tile or
+//! socket implementation must meet.
 
-use anyhow::{anyhow, ensure, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{anyhow, Result};
 
 use crate::accel::{AccCore, DpCall};
 use crate::config::{SocConfig, TileKind};
 use crate::noc::{Coord, MeshParams, Noc};
+use crate::sched::{SchedMode, Wake};
 use crate::socket::Socket;
 use crate::tile::{AccTile, CpuTile, HostOp, IoTile, MemTile, Tile};
 
 use super::stats::Report;
+
+/// Per-tile scheduler state (parallel to [`Soc::tiles`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    /// On the run list for the next cycle.
+    Busy,
+    /// Timed wake pending at the recorded cycle.
+    Sleeping(u64),
+    /// Waiting on a delivery; `blocked` records whether the tile was
+    /// non-idle when it parked (so quiescence stays O(active)).
+    Parked { blocked: bool },
+}
+
+/// The tile worklist + wake-queue behind the activity-driven [`Soc::run`].
+struct Sched {
+    /// Current state per tile.
+    state: Vec<St>,
+    /// Tiles to tick next cycle, ascending index order.
+    run_list: Vec<u32>,
+    /// Timed wakes `(cycle, tile)`.  Entries go stale when a delivery
+    /// unparks the tile first; stale entries are skipped lazily on pop.
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Live `Sleeping` tiles (the heap may additionally hold stale
+    /// entries).
+    sleepers: usize,
+    /// Parked tiles that are not idle — tiles whose wait must resolve
+    /// before the SoC can quiesce.
+    blocked_parked: usize,
+    /// Next cycle's run list under construction during a tick.
+    scratch: Vec<u32>,
+}
+
+impl Sched {
+    fn new(tiles: usize) -> Self {
+        Self {
+            state: vec![St::Parked { blocked: false }; tiles],
+            run_list: Vec::new(),
+            heap: BinaryHeap::new(),
+            sleepers: 0,
+            blocked_parked: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Start (or restart) a worklist run: every tile is ticked on the
+    /// first cycle, after which the wake states it reports take over.
+    /// This is what makes backdoor mutation between runs safe — the
+    /// scheduler assumes nothing about state it did not observe.
+    fn reset_all_busy(&mut self) {
+        self.heap.clear();
+        self.sleepers = 0;
+        self.blocked_parked = 0;
+        self.scratch.clear();
+        self.run_list.clear();
+        self.run_list.extend(0..self.state.len() as u32);
+        for s in &mut self.state {
+            *s = St::Busy;
+        }
+    }
+
+    /// A delivery (or due timer) makes `i` runnable next cycle.
+    fn unpark(&mut self, i: u32) {
+        match self.state[i as usize] {
+            St::Busy => return,
+            St::Sleeping(_) => self.sleepers -= 1,
+            St::Parked { blocked } => self.blocked_parked -= blocked as usize,
+        }
+        self.state[i as usize] = St::Busy;
+        if let Err(pos) = self.run_list.binary_search(&i) {
+            self.run_list.insert(pos, i);
+        }
+    }
+
+    /// Move every sleeper due at or before `now` onto the run list.
+    fn wake_due(&mut self, now: u64) {
+        while let Some(&Reverse((t, i))) = self.heap.peek() {
+            if t > now {
+                break;
+            }
+            self.heap.pop();
+            if self.state[i as usize] == St::Sleeping(t) {
+                self.unpark(i);
+            }
+        }
+    }
+
+    /// Earliest live timed wake, discarding stale heap entries.
+    fn next_wake(&mut self) -> Option<u64> {
+        while let Some(&Reverse((t, i))) = self.heap.peek() {
+            if self.state[i as usize] == St::Sleeping(t) {
+                return Some(t);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Record the wake a tile reported; `idle_if_parked` is the tile's
+    /// [`Tile::idle`] (only consulted when it parks).
+    fn note(&mut self, i: u32, wake: Wake, idle_if_parked: bool) {
+        self.state[i as usize] = match wake {
+            Wake::Busy => {
+                self.scratch.push(i);
+                St::Busy
+            }
+            Wake::Sleeping { until } => {
+                self.heap.push(Reverse((until, i)));
+                self.sleepers += 1;
+                St::Sleeping(until)
+            }
+            Wake::Parked => {
+                let blocked = !idle_if_parked;
+                self.blocked_parked += blocked as usize;
+                St::Parked { blocked }
+            }
+        };
+    }
+}
 
 /// The simulated SoC: tiles + multi-plane NoC + the cycle loop.
 pub struct Soc {
@@ -22,10 +156,13 @@ pub struct Soc {
     pub now: u64,
     /// Accelerator id -> (tile index, slot).
     acc_index: Vec<(usize, u8)>,
-    /// Index of the tile most recently observed busy: the quiesce probe
-    /// checks it first, so the per-cycle idle test in [`Soc::run`] is O(1)
-    /// while anything is still running instead of a full tile scan.
+    /// Full-scan reference probe: index of the tile most recently observed
+    /// busy, so the reference quiesce test is O(1) while anything runs.
     busy_tile_hint: usize,
+    /// How [`Soc::run`] schedules tile ticks.
+    sched_mode: SchedMode,
+    /// Worklist scheduler state.
+    sched: Sched,
 }
 
 impl Soc {
@@ -61,7 +198,28 @@ impl Soc {
                 TileKind::Empty => Tile::Empty,
             });
         }
-        Ok(Self { cfg, noc, tiles, now: 0, acc_index, busy_tile_hint: 0 })
+        let sched = Sched::new(tiles.len());
+        Ok(Self {
+            cfg,
+            noc,
+            tiles,
+            now: 0,
+            acc_index,
+            busy_tile_hint: 0,
+            sched_mode: SchedMode::default(),
+            sched,
+        })
+    }
+
+    /// Select how [`Soc::run`] schedules tile ticks (results are
+    /// cycle-for-cycle identical in both modes).
+    pub fn set_sched_mode(&mut self, mode: SchedMode) {
+        self.sched_mode = mode;
+    }
+
+    /// Current tile-scheduling mode.
+    pub fn sched_mode(&self) -> SchedMode {
+        self.sched_mode
     }
 
     /// Number of accelerator sockets.
@@ -137,7 +295,10 @@ impl Soc {
         self.cpu_mut().push_script(ops);
     }
 
-    /// Advance one cycle.
+    /// Advance one cycle, ticking every tile (the full-scan reference
+    /// step).  Hand-driven harnesses that mutate [`Soc::tiles`] directly
+    /// keep using this; [`Soc::run`] re-seeds its worklist from scratch,
+    /// so interleaving manual ticks, backdoor writes and `run` is safe.
     pub fn tick(&mut self) {
         let now = self.now;
         for t in &mut self.tiles {
@@ -147,16 +308,41 @@ impl Soc {
         self.now += 1;
     }
 
+    /// One worklist cycle: tick the busy tiles in ascending index order
+    /// (order across tiles is unobservable — tiles only interact through
+    /// NoC deliveries, which land no earlier than the next cycle — but a
+    /// deterministic order keeps runs reproducible), advance the NoC, and
+    /// unpark every tile that received a delivery.
+    fn tick_scheduled(&mut self) {
+        let now = self.now;
+        debug_assert!(self.sched.scratch.is_empty());
+        let mut cur = std::mem::take(&mut self.sched.run_list);
+        for &i in &cur {
+            let tile = &mut self.tiles[i as usize];
+            let wake = tile.tick(now, &mut self.noc);
+            let idle_if_parked = wake != Wake::Parked || tile.idle();
+            self.sched.note(i, wake, idle_if_parked);
+        }
+        cur.clear();
+        self.sched.run_list = std::mem::replace(&mut self.sched.scratch, cur);
+        self.noc.tick(now);
+        let sched = &mut self.sched;
+        let cfg = &self.cfg;
+        self.noc.for_each_delivered(|c| sched.unpark(cfg.index_of(c) as u32));
+        self.now += 1;
+    }
+
     /// Everything drained and the host script finished?
     pub fn idle(&self) -> bool {
         self.noc.is_idle() && self.tiles.iter().all(|t| t.idle())
     }
 
-    /// The per-cycle quiesce probe behind [`Soc::run`]: a fast O(1) reject
-    /// (NoC work counters, then the tile last seen busy), deferring to the
-    /// canonical [`Soc::idle`] only on the rare cycle where the hinted
-    /// tile drains — so the steady-state cost is O(active) rather than
-    /// O(tiles) every cycle, while idleness has exactly one definition.
+    /// The per-cycle quiesce probe of the full-scan reference loop: a fast
+    /// O(1) reject (NoC work counters, then the tile last seen busy),
+    /// deferring to the canonical [`Soc::idle`] only on the rare cycle
+    /// where the hinted tile drains — so the steady-state cost is
+    /// O(active) rather than O(tiles) every cycle, while idleness has
+    /// exactly one definition.
     fn quiesced(&mut self) -> bool {
         if !self.noc.is_idle() {
             return false;
@@ -176,19 +362,76 @@ impl Soc {
         false
     }
 
-    /// Run until idle; errors out after `max_cycles`.
+    /// Worklist quiescence, equivalent to [`Soc::idle`] in O(active): a
+    /// live sleeper or a blocked parked tile is non-idle by construction,
+    /// so only the (small) run list needs the canonical per-tile check.
+    fn wl_quiesced(&self) -> bool {
+        self.noc.is_idle()
+            && self.sched.sleepers == 0
+            && self.sched.blocked_parked == 0
+            && self.sched.run_list.iter().all(|&i| self.tiles[i as usize].idle())
+    }
+
+    /// Run until idle; errors out after `max_cycles`.  The budget is
+    /// checked uniformly before every cycle, so `run(0)` never advances:
+    /// it returns `Ok(0)` on an already-idle SoC and errors otherwise.
     pub fn run(&mut self, max_cycles: u64) -> Result<u64> {
+        match self.sched_mode {
+            SchedMode::FullScan => self.run_full_scan(max_cycles),
+            SchedMode::Worklist => self.run_worklist(max_cycles),
+        }
+    }
+
+    /// The shared budget/deadlock error (tests substring-match on it, so
+    /// every exit path must agree on the wording).
+    fn stall_err(max_cycles: u64) -> anyhow::Error {
+        anyhow!("SoC did not quiesce within {max_cycles} cycles (deadlock or runaway)")
+    }
+
+    /// The full-scan reference loop: every tile, every cycle.
+    fn run_full_scan(&mut self, max_cycles: u64) -> Result<u64> {
         let start = self.now;
-        // Let the first ops enter the system before testing idleness.
-        self.tick();
         while !self.quiesced() {
+            if self.now - start >= max_cycles {
+                return Err(Self::stall_err(max_cycles));
+            }
             self.tick();
-            ensure!(
-                self.now - start < max_cycles,
-                "SoC did not quiesce within {max_cycles} cycles (deadlock or runaway)"
-            );
         }
         Ok(self.now - start)
+    }
+
+    /// The activity-driven loop: worklist + wake-queue + fast-forward.
+    fn run_worklist(&mut self, max_cycles: u64) -> Result<u64> {
+        let start = self.now;
+        self.sched.reset_all_busy();
+        loop {
+            self.sched.wake_due(self.now);
+            if self.wl_quiesced() {
+                return Ok(self.now - start);
+            }
+            if self.sched.run_list.is_empty() && self.noc.is_idle() {
+                // Idle-cycle fast-forward: no tile can run, nothing is in
+                // flight, and deliveries only happen when something runs —
+                // every cycle up to the next timed wake is provably dead.
+                let Some(t) = self.sched.next_wake() else {
+                    // Not quiescent, yet nothing can ever wake: the
+                    // full-scan loop would burn the whole budget on this
+                    // deadlock, so report it the same way.
+                    return Err(Self::stall_err(max_cycles));
+                };
+                // Checked *before* jumping so a blown budget does not
+                // advance `now` past it.
+                if t - start >= max_cycles {
+                    return Err(Self::stall_err(max_cycles));
+                }
+                self.now = t;
+                self.sched.wake_due(t);
+            }
+            if self.now - start >= max_cycles {
+                return Err(Self::stall_err(max_cycles));
+            }
+            self.tick_scheduled();
+        }
     }
 
     /// Collect a statistics report.
@@ -220,5 +463,83 @@ impl Soc {
             .position(|&(t, s)| t == ti && s == slot)
             .map(|i| i as u16)
             .ok_or_else(|| anyhow!("no accelerator at {coord:?} slot {slot}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle_soc(mode: SchedMode) -> Soc {
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        soc.set_sched_mode(mode);
+        soc
+    }
+
+    #[test]
+    fn run_zero_budget_is_uniform_across_modes() {
+        for mode in [SchedMode::FullScan, SchedMode::Worklist] {
+            let mut soc = idle_soc(mode);
+            assert_eq!(soc.run(0).unwrap(), 0, "{mode:?}: idle SoC, zero budget");
+            assert_eq!(soc.now, 0, "{mode:?}: run(0) must not advance a cycle");
+            soc.push_host_script(vec![HostOp::Delay(5)]);
+            assert!(soc.run(0).is_err(), "{mode:?}: busy SoC, zero budget");
+            assert_eq!(soc.now, 0, "{mode:?}: failed run(0) must not advance");
+        }
+    }
+
+    #[test]
+    fn run_on_idle_soc_counts_zero_cycles() {
+        for mode in [SchedMode::FullScan, SchedMode::Worklist] {
+            let mut soc = idle_soc(mode);
+            assert_eq!(soc.run(1000).unwrap(), 0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn fast_forward_matches_full_scan_on_host_delays() {
+        // A script of pure delays quiesces at the same cycle in both
+        // modes, and the worklist mode records the same done_at even
+        // though it fast-forwards across the dead cycles.
+        let run = |mode: SchedMode| {
+            let mut soc = idle_soc(mode);
+            soc.push_host_script(vec![
+                HostOp::Delay(100),
+                HostOp::Delay(1),
+                HostOp::Delay(2345),
+            ]);
+            let cycles = soc.run(100_000).unwrap();
+            (cycles, soc.now, soc.report().cpu.done_at)
+        };
+        let a = run(SchedMode::FullScan);
+        let b = run(SchedMode::Worklist);
+        assert_eq!(a, b);
+        assert_eq!(a.2, Some(100 + 1 + 2345));
+    }
+
+    #[test]
+    fn worklist_detects_deadlock_instead_of_burning_the_budget() {
+        let mut soc = idle_soc(SchedMode::Worklist);
+        // An IRQ wait nothing will ever satisfy.
+        soc.push_host_script(vec![HostOp::WaitIrqs(vec![0])]);
+        let err = soc.run(1_000_000).unwrap_err().to_string();
+        assert!(err.contains("did not quiesce"), "{err}");
+        // The full-scan reference reports the same failure.
+        let mut soc = idle_soc(SchedMode::FullScan);
+        soc.push_host_script(vec![HostOp::WaitIrqs(vec![0])]);
+        let err2 = soc.run(10_000).unwrap_err().to_string();
+        assert!(err2.contains("did not quiesce"), "{err2}");
+    }
+
+    #[test]
+    fn budget_exhaustion_is_cycle_identical_across_modes() {
+        // A 100-cycle delay against a 40-cycle budget: both modes must
+        // fail, and neither may run past the budget.
+        for mode in [SchedMode::FullScan, SchedMode::Worklist] {
+            let mut soc = idle_soc(mode);
+            soc.push_host_script(vec![HostOp::Delay(100)]);
+            assert!(soc.run(40).is_err(), "{mode:?}");
+            assert!(soc.now <= 40, "{mode:?}: ran past the budget to {}", soc.now);
+        }
     }
 }

@@ -36,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod noc;
 pub mod runtime;
+pub mod sched;
 pub mod socket;
 pub mod sync;
 pub mod tile;

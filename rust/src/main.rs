@@ -15,6 +15,7 @@ use espsim::coordinator::experiments::{
     run_fig6_point, Fig6Options,
 };
 use espsim::coordinator::scenario::{builtin_scenarios, Platform, Scenario};
+use espsim::sched::SchedMode;
 use espsim::util::bench::{fmt_secs, time_once, BenchJson, CompareOpts, Table};
 use espsim::util::Json;
 
@@ -30,13 +31,16 @@ USAGE:
       The full Fig. 6 grid (consumers x data sizes); --mesh16 runs the
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
-                   [--list] [--json]
+                   [--sched MODE] [--list] [--json]
       Run the declarative scenario registry (P2P chains, multicast
       fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
       coherence-barrier pipelines) against the DMA-only baseline and
       record each point into BENCH_noc.json.  Default platform is the
       8x8 mesh; --mesh16 selects the 16x16 platform; --file runs
       scenarios from a JSON config instead of the builtin registry.
+      --sched picks the SoC tile scheduler ("worklist", the default, or
+      the "full_scan" reference) — simulated cycles are identical in
+      both, so the CI perf gate cross-checks the two documents.
   espsim compare BASELINE FRESH [--tol-cycles F] [--tol-speedup F]
                  [--tol-throughput F] [--warn-only]
       Diff a fresh bench document against a committed baseline with
@@ -183,6 +187,13 @@ fn main() -> Result<()> {
             let filter = args.value("--filter")?;
             let file = args.value("--file")?;
             let bytes: Option<u32> = args.value("--bytes")?.map(|v| v.parse()).transpose()?;
+            let sched = args
+                .value("--sched")?
+                .map(|code| {
+                    SchedMode::from_code(&code)
+                        .ok_or_else(|| anyhow!("unknown --sched {code:?} (worklist, full_scan)"))
+                })
+                .transpose()?;
             args.finish()?;
             ensure!(
                 !(mesh16 && file.is_some()),
@@ -199,6 +210,11 @@ fn main() -> Result<()> {
             if let Some(b) = bytes {
                 for s in &mut scenarios {
                     s.bytes = b;
+                }
+            }
+            if let Some(m) = sched {
+                for s in &mut scenarios {
+                    s.sched = m;
                 }
             }
             ensure!(!scenarios.is_empty(), "no scenarios match");
@@ -241,6 +257,8 @@ fn main() -> Result<()> {
                 // metric must too (the default cycles/wall would understate
                 // it); the extras override replaces it with total simulated
                 // cycles per wall-second, the fig6 bench convention.
+                // `sim_cycles_per_sec` is the same number under the name
+                // the scheduler-speedup gate reads.
                 let total_cps = (o.cycles + o.baseline_cycles) as f64 / wall.max(1e-12);
                 sink.record_with(
                     &format!("{}_{}", s.name, s.platform.code()),
@@ -248,6 +266,7 @@ fn main() -> Result<()> {
                     wall,
                     &[
                         ("cycles_per_sec", Json::Num(total_cps)),
+                        ("sim_cycles_per_sec", Json::Num(total_cps)),
                         ("baseline_cycles", Json::from(o.baseline_cycles)),
                         ("speedup", Json::Num(o.speedup())),
                         ("p2p_bytes", Json::from(o.p2p_bytes)),

@@ -210,6 +210,10 @@ pub struct Mesh {
     /// Items in flight: flits in router/branch queues + messages waiting
     /// to inject.  O(1) idle detection and an early-out for idle planes.
     work: u64,
+    /// Tiles a message fully ejected at during the most recent tick — the
+    /// SoC scheduler drains this to unpark delivery targets.  Cleared at
+    /// the top of every tick; may contain duplicates.
+    delivered: Vec<Coord>,
     /// Reused plan scratch (avoids two allocations per active cycle).
     scratch_drains: Vec<(u32, u8)>,
     scratch_moves: Vec<Move>,
@@ -244,6 +248,7 @@ impl Mesh {
             inj_active: ActiveSet::with_len(n),
             rr: 0,
             work: 0,
+            delivered: Vec::new(),
             scratch_drains: Vec::new(),
             scratch_moves: Vec::new(),
             stats: MeshStats::default(),
@@ -300,8 +305,25 @@ impl Mesh {
         self.routers.iter().map(|r| (r.coord, r.flits_forwarded)).collect()
     }
 
+    /// Tiles that had a message fully delivered during the most recent
+    /// [`Mesh::tick`] (duplicates possible; cleared by the next tick or
+    /// by [`Mesh::clear_delivered`]).
+    pub fn delivered_tiles(&self) -> &[Coord] {
+        &self.delivered
+    }
+
+    /// Consume the delivery record.  [`super::planes::Noc`] clears after
+    /// draining because an idle plane is skipped by the parallel tick and
+    /// would otherwise keep re-reporting its last active cycle.
+    pub fn clear_delivered(&mut self) {
+        self.delivered.clear();
+    }
+
     /// Advance one cycle.
     pub fn tick(&mut self, now: u64) {
+        if !self.delivered.is_empty() {
+            self.delivered.clear();
+        }
         if self.work == 0 {
             return; // idle plane: nothing can move
         }
@@ -477,6 +499,7 @@ impl Mesh {
                     let msg = self.pkts.eject_tail(flit.pkt);
                     self.eject[r].push_back(msg);
                     self.stats.delivered += 1;
+                    self.delivered.push(coord);
                 }
             } else {
                 let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
@@ -548,6 +571,7 @@ impl Mesh {
                     let msg = self.pkts.eject_tail(flit.pkt);
                     self.eject[r].push_back(msg);
                     self.stats.delivered += 1;
+                    self.delivered.push(coord);
                 }
             } else {
                 let nc = neighbor(coord, d, self.p.width, self.p.height).unwrap();
@@ -851,6 +875,24 @@ mod tests {
         let hops = m.stats.flit_hops;
         m.tick(10_000);
         assert_eq!(m.stats.flit_hops, hops);
+    }
+
+    #[test]
+    fn delivered_tiles_track_tail_ejections_per_tick() {
+        let mut m = mesh3x3();
+        m.send((0, 0), Message::ctrl((0, 0), (2, 2), MsgKind::Irq { acc: 1 }));
+        let mut seen = Vec::new();
+        for t in 0..50 {
+            m.tick(t);
+            seen.extend(m.delivered_tiles().iter().copied());
+            if m.is_idle() {
+                break;
+            }
+        }
+        assert_eq!(seen, vec![(2, 2)], "exactly one delivery, at the destination");
+        // A later tick clears the record even on an idle mesh.
+        m.tick(100);
+        assert!(m.delivered_tiles().is_empty());
     }
 
     #[test]

@@ -169,6 +169,23 @@ impl Noc {
         self.meshes.iter().all(|m| m.is_idle())
     }
 
+    /// Visit every tile that had a message fully delivered (tail ejected)
+    /// during the most recent [`Noc::tick`], on any plane, consuming the
+    /// record.  The SoC scheduler uses this to unpark delivery targets;
+    /// duplicates are possible (several planes or messages delivering to
+    /// one tile) and callers must be idempotent.  Call between ticks —
+    /// the record is consumed here (a plane that goes idle is skipped by
+    /// the parallel tick, so only the drain can clear it) and cleared by
+    /// the plane's next tick otherwise.
+    pub fn for_each_delivered(&mut self, mut f: impl FnMut(Coord)) {
+        for m in &mut self.meshes {
+            for &c in m.delivered_tiles() {
+                f(c);
+            }
+            m.clear_delivered();
+        }
+    }
+
     /// Per-plane statistics snapshot.
     pub fn stats(&self) -> [MeshStats; NUM_PLANES] {
         std::array::from_fn(|i| self.meshes[i].stats.clone())

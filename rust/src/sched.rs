@@ -1,0 +1,142 @@
+//! Wake states for the activity-driven SoC scheduler.
+//!
+//! Every schedulable component ([`crate::tile::Tile`] and, below it,
+//! [`crate::socket::Socket`] and [`crate::accel::AccCore`]) reports a
+//! [`Wake`] from its tick: what the scheduler must do for the component's
+//! *next* tick to be indistinguishable from ticking it every cycle.  The
+//! three states form a lattice ordered by urgency
+//! (`Busy` ≺ `Sleeping { until }` ≺ `Parked`, earlier-demand wins), and
+//! [`Wake::earliest`] is the meet — an aggregate (a tile with two sockets,
+//! a socket plus its core) is as urgent as its most urgent part.
+//!
+//! The contract a `Wake` value asserts:
+//!
+//! - [`Wake::Busy`]: the next cycle's tick may make progress on its own —
+//!   tick me again next cycle.
+//! - [`Wake::Sleeping`]: every tick before `until` is a provable no-op
+//!   *unless a message is delivered to me first*; tick me at `until` (or
+//!   at delivery, whichever comes first).
+//! - [`Wake::Parked`]: every future tick is a provable no-op until a
+//!   message is delivered to me; don't tick me at all.
+//!
+//! "Provable no-op" means: no NoC traffic, no architectural state change,
+//! and no statistics change *observable through
+//! [`crate::coordinator::Report`]*.  One exemption: spin-retry counters
+//! (`CoreStats::dma_stall_cycles`) count *executed* retries, which is
+//! scheduler-dependent by design (see DESIGN.md §SoC scheduler).  Flag
+//! polls need no exemption — they go through `CacheCtl::peek_load`, which
+//! leaves LRU order and hit counters untouched, so a skipped re-poll is
+//! architecturally invisible even under cache eviction pressure.
+//!
+//! Deliveries always win: the [`crate::coordinator::Soc`] loop unparks a
+//! tile the cycle after any message ejects at it, so a `Sleeping`/`Parked`
+//! component never needs to predict message arrival — only its own timed
+//! events (DMA/DRAM latency, datapath busy windows, host delays).
+
+/// What a component needs from the scheduler after a tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wake {
+    /// Tick me next cycle.
+    Busy,
+    /// Timed event pending: tick me at `until` (a delivery may wake me
+    /// earlier).  Invariant: `until` is strictly in the future.
+    Sleeping {
+        /// Absolute cycle of the component's next self-driven event.
+        until: u64,
+    },
+    /// Waiting on an external stimulus: tick me only after a delivery.
+    Parked,
+}
+
+impl Wake {
+    /// Wake at absolute cycle `at`: [`Wake::Busy`] when `at` is this or
+    /// next cycle (the scheduler ticks at `now + 1` anyway), otherwise
+    /// [`Wake::Sleeping`].
+    #[inline]
+    pub fn at(now: u64, at: u64) -> Wake {
+        if at <= now + 1 {
+            Wake::Busy
+        } else {
+            Wake::Sleeping { until: at }
+        }
+    }
+
+    /// The meet of two wake states: the earlier demand wins.
+    #[inline]
+    pub fn earliest(self, other: Wake) -> Wake {
+        match (self, other) {
+            (Wake::Busy, _) | (_, Wake::Busy) => Wake::Busy,
+            (Wake::Sleeping { until: a }, Wake::Sleeping { until: b }) => {
+                Wake::Sleeping { until: a.min(b) }
+            }
+            (s @ Wake::Sleeping { .. }, Wake::Parked) => s,
+            (Wake::Parked, s @ Wake::Sleeping { .. }) => s,
+            (Wake::Parked, Wake::Parked) => Wake::Parked,
+        }
+    }
+}
+
+/// How [`crate::coordinator::Soc::run`] schedules tile ticks.  Both modes
+/// are cycle-for-cycle identical (`tests/prop_soc_sched.rs` pins this);
+/// `FullScan` is retained as the executable reference model and the
+/// ablation baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Tick every tile every cycle (the seed model).
+    FullScan,
+    /// Tile worklists + wake-queue + idle-cycle fast-forward.
+    #[default]
+    Worklist,
+}
+
+impl SchedMode {
+    /// Config-file code ("full_scan", "worklist").
+    pub fn code(self) -> &'static str {
+        match self {
+            SchedMode::FullScan => "full_scan",
+            SchedMode::Worklist => "worklist",
+        }
+    }
+
+    /// Parse a config-file code.
+    pub fn from_code(s: &str) -> Option<Self> {
+        Some(match s {
+            "full_scan" => SchedMode::FullScan,
+            "worklist" => SchedMode::Worklist,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_collapses_imminent_wakes_to_busy() {
+        assert_eq!(Wake::at(10, 10), Wake::Busy);
+        assert_eq!(Wake::at(10, 11), Wake::Busy);
+        assert_eq!(Wake::at(10, 12), Wake::Sleeping { until: 12 });
+    }
+
+    #[test]
+    fn earliest_is_the_lattice_meet() {
+        let s5 = Wake::Sleeping { until: 5 };
+        let s9 = Wake::Sleeping { until: 9 };
+        assert_eq!(Wake::Busy.earliest(Wake::Parked), Wake::Busy);
+        assert_eq!(s9.earliest(Wake::Busy), Wake::Busy);
+        assert_eq!(s5.earliest(s9), s5);
+        assert_eq!(s9.earliest(s5), s5);
+        assert_eq!(Wake::Parked.earliest(s9), s9);
+        assert_eq!(Wake::Parked.earliest(Wake::Parked), Wake::Parked);
+    }
+
+    #[test]
+    fn sched_mode_codes_roundtrip() {
+        for m in [SchedMode::FullScan, SchedMode::Worklist] {
+            assert_eq!(SchedMode::from_code(m.code()), Some(m));
+        }
+        assert_eq!(SchedMode::from_code("bogus"), None);
+        assert_eq!(SchedMode::default(), SchedMode::Worklist);
+    }
+}

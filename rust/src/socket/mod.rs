@@ -32,6 +32,7 @@ use std::sync::Arc;
 
 use crate::config::AccConfig;
 use crate::noc::{Coord, Message, MsgKind, Plane};
+use crate::sched::Wake;
 
 pub use interface::{DmaDir, LiChannel, ReadCtrl, WriteCtrl};
 pub use p2p::{cons_participates, P2pUnit};
@@ -318,7 +319,14 @@ impl Socket {
 
     /// One socket cycle: accept at most one read-control and one
     /// write-control beat, progress the P2P unit, release delayed sends.
-    pub fn tick(&mut self, now: u64, plm: &mut [u8]) {
+    ///
+    /// The returned [`Wake`] is the socket's self-driven schedule: `Busy`
+    /// while control beats remain queued, `Sleeping` until the earliest
+    /// TLB-delayed send, `Parked` otherwise — including when P2P bursts
+    /// wait for consumer credit, since credit only arrives as a `P2pReq`
+    /// delivery (which unparks the tile).  Outstanding DMA/P2P reads and
+    /// write acks likewise complete only through deliveries.
+    pub fn tick(&mut self, now: u64, plm: &mut [u8]) -> Wake {
         // Accept one read-control beat.
         if let Some(rc) = self.rd_ctrl.pop() {
             self.stats.bursts += 1;
@@ -363,6 +371,10 @@ impl Socket {
         // Per-consumer byte accounting lives in the unit (distinct dest
         // coords under-count when two consumer slots share a tile).
         self.stats.p2p_write_bytes = self.p2p.bytes_sent;
+        // A tag completing *here* (after the core's tick this cycle) may
+        // unblock a Wdma spin: stay busy one cycle so the core observes
+        // it, exactly when the full-scan reference would.
+        let completed_tags = !tags.is_empty();
         for t in tags {
             self.done.insert(t);
         }
@@ -377,6 +389,13 @@ impl Socket {
                     i += 1;
                 }
             }
+        }
+        if completed_tags || !self.rd_ctrl.is_empty() || !self.wr_ctrl.is_empty() {
+            return Wake::Busy; // one control beat accepted per cycle
+        }
+        match self.delayed.iter().map(|d| d.0).min() {
+            Some(ready) => Wake::at(now, ready),
+            None => Wake::Parked,
         }
     }
 

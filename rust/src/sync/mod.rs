@@ -53,8 +53,14 @@ pub struct FlagOps;
 
 impl FlagOps {
     /// Try to read flag at `addr`; `None` while the line is being fetched.
+    ///
+    /// Polls go through [`CacheCtl::peek_load`]: re-reading an unchanged
+    /// resident flag must not touch LRU order or hit counters, so a
+    /// spinning poll is architecturally a no-op — which is what lets the
+    /// SoC scheduler *park* a spinner and stay cycle-identical to the
+    /// poll-every-cycle reference model (DESIGN.md §SoC scheduler).
     pub fn poll(cache: &mut CacheCtl, addr: u64) -> Option<u64> {
-        cache.load(addr)
+        cache.peek_load(addr)
     }
 
     /// Try to set flag at `addr`; `false` while ownership is acquired.
@@ -64,7 +70,7 @@ impl FlagOps {
 
     /// Convenience: has the flag reached `expect`?  (One poll step.)
     pub fn test(cache: &mut CacheCtl, addr: u64, expect: u64) -> bool {
-        matches!(cache.load(addr), Some(v) if v == expect)
+        matches!(cache.peek_load(addr), Some(v) if v == expect)
     }
 }
 

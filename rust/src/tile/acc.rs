@@ -14,6 +14,7 @@ use crate::accel::{AccCore, CoreState};
 use crate::coherence::CacheCtl;
 use crate::config::{AccConfig, SocConfig};
 use crate::noc::{Coord, Message, MsgKind, Noc, Plane};
+use crate::sched::Wake;
 use crate::socket::{split_reg, Socket, Status};
 
 /// The accelerator tile.
@@ -71,8 +72,13 @@ impl AccTile {
         }
     }
 
-    /// Advance one cycle.
-    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+    /// Advance one cycle.  The tile's [`Wake`] is the meet of its parts:
+    /// each slot contributes the earlier of its core's and socket's wake
+    /// (a fully idle slot contributes `Parked`), and the shared L2 is
+    /// purely message-driven, so it never needs a timed wake — every
+    /// coherence transition it waits on arrives as a delivery on the
+    /// coherence planes, which unparks the tile.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) -> Wake {
         // ---- Route incoming messages.
         while let Some(msg) = noc.recv(Plane::DmaRsp, self.coord) {
             match msg.kind {
@@ -122,6 +128,7 @@ impl AccTile {
         }
 
         // ---- Per-slot pipeline.
+        let mut wake = Wake::Parked;
         for s in 0..self.sockets.len() {
             let (socket, core, plm) =
                 (&mut self.sockets[s], &mut self.cores[s], &mut self.plms[s]);
@@ -140,19 +147,23 @@ impl AccTile {
                 core.start(&socket.regs.args);
                 self.started_at[s] = now;
             }
-            core.tick(now, socket, plm);
-            socket.tick(now, plm);
+            let core_wake = core.tick(now, socket, plm);
+            let socket_wake = socket.tick(now, plm);
+            let mut slot_wake = core_wake.earliest(socket_wake);
             // Completion: program done and every transfer drained.
             if core.state() == CoreState::Finished && socket.quiescent() {
                 socket.regs.status = Status::Done;
                 socket.send_irq();
                 core.acknowledge_finish();
                 self.invocation_log.push((socket.acc_id, self.started_at[s], now));
+                slot_wake = Wake::Parked; // idle until the next start pulse
             }
             for (plane, m) in socket.drain_out() {
                 noc.send(plane, self.coord, m);
             }
+            wake = wake.earliest(slot_wake);
         }
+        wake
     }
 
     /// All cores idle and sockets drained?

@@ -12,6 +12,7 @@ use std::collections::{HashSet, VecDeque};
 use crate::coherence::CacheCtl;
 use crate::config::HostConfig;
 use crate::noc::{Coord, Message, MsgKind, Noc, Plane};
+use crate::sched::Wake;
 use crate::sync::FlagOps;
 
 /// One host operation.
@@ -83,8 +84,13 @@ impl CpuTile {
         self.script.is_empty() && self.last_now >= self.busy_until
     }
 
-    /// Advance one cycle.
-    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+    /// Advance one cycle.  The returned [`Wake`] tells the SoC scheduler
+    /// when the next tick can do anything: a busy window sleeps until it
+    /// ends, a blocked wait (IRQs not yet arrived, flag transaction in
+    /// flight, flag cached with the wrong value) parks until a delivery —
+    /// an IRQ, a coherence response, or the invalidation the producer's
+    /// flag store triggers.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) -> Wake {
         self.last_now = now;
         // IRQs and coherence traffic are serviced even while busy.
         while let Some(msg) = noc.recv(Plane::Misc, self.coord) {
@@ -105,18 +111,19 @@ impl CpuTile {
         }
 
         if now < self.busy_until {
-            return;
+            return Wake::at(now, self.busy_until);
         }
         let Some(op) = self.script.front() else {
             if self.stats.done_at.is_none() {
                 self.stats.done_at = Some(now);
             }
-            return;
+            return Wake::Parked;
         };
         match op {
             HostOp::Delay(d) => {
                 self.busy_until = now + d;
                 self.script.pop_front();
+                Wake::at(now, self.busy_until)
             }
             HostOp::WriteReg { tile, reg, val } => {
                 let kind = MsgKind::RegWrite { reg: *reg, val: *val };
@@ -124,6 +131,7 @@ impl CpuTile {
                 self.stats.reg_writes += 1;
                 self.busy_until = now + self.cfg.reg_write_gap as u64;
                 self.script.pop_front();
+                Wake::at(now, self.busy_until)
             }
             HostOp::WaitIrqs(accs) => {
                 if accs.iter().all(|a| self.irqs.contains(a)) {
@@ -133,22 +141,37 @@ impl CpuTile {
                     }
                     self.busy_until = now + self.cfg.irq_overhead as u64 * n;
                     self.script.pop_front();
+                    Wake::at(now, self.busy_until)
+                } else {
+                    Wake::Parked
                 }
             }
             HostOp::SetFlag { addr, val } => {
-                if FlagOps::set(&mut self.l1, *addr, *val) {
+                let done = FlagOps::set(&mut self.l1, *addr, *val);
+                if done {
                     self.script.pop_front();
                 }
                 for (plane, m) in self.l1.drain_out() {
                     noc.send(plane, self.coord, m);
+                }
+                if done {
+                    Wake::Busy
+                } else {
+                    Wake::Parked
                 }
             }
             HostOp::WaitFlag { addr, val } => {
-                if FlagOps::poll(&mut self.l1, *addr) == Some(*val) {
+                let done = FlagOps::poll(&mut self.l1, *addr) == Some(*val);
+                if done {
                     self.script.pop_front();
                 }
                 for (plane, m) in self.l1.drain_out() {
                     noc.send(plane, self.coord, m);
+                }
+                if done {
+                    Wake::Busy
+                } else {
+                    Wake::Parked
                 }
             }
         }

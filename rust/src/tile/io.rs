@@ -4,6 +4,7 @@
 //! endpoint.
 
 use crate::noc::{Coord, Noc, Plane};
+use crate::sched::Wake;
 
 /// The I/O tile.
 pub struct IoTile {
@@ -19,13 +20,15 @@ impl IoTile {
         Self { coord, sunk: [0; crate::noc::NUM_PLANES] }
     }
 
-    /// Drain every plane.
-    pub fn tick(&mut self, _now: u64, noc: &mut Noc) {
+    /// Drain every plane.  Purely reactive: only a delivery gives the
+    /// next tick anything to do.
+    pub fn tick(&mut self, _now: u64, noc: &mut Noc) -> Wake {
         for p in Plane::ALL {
             while noc.recv(p, self.coord).is_some() {
                 self.sunk[p.idx()] += 1;
             }
         }
+        Wake::Parked
     }
 }
 

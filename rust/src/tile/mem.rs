@@ -13,6 +13,7 @@ use std::sync::Arc;
 use crate::coherence::Directory;
 use crate::config::MemConfig;
 use crate::noc::{Coord, Message, MsgKind, Noc, Plane};
+use crate::sched::Wake;
 
 /// Set-associative LLC metadata (data lives in the DRAM array; the LLC
 /// tracks presence + dirtiness for timing).
@@ -168,8 +169,11 @@ impl MemTile {
     }
 
     /// Advance one cycle: accept requests, progress the directory, emit
-    /// ready responses.
-    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+    /// ready responses.  Wake state: bounded ingress (DMA requests beyond
+    /// `requests_per_cycle`, the one-per-cycle directory port) keeps the
+    /// tile busy while a backlog waits; otherwise it sleeps until the
+    /// earliest delayed response and parks when none is pending.
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) -> Wake {
         // Accept DMA requests (bounded ingress).
         for _ in 0..self.cfg.requests_per_cycle {
             let Some(msg) = noc.recv(Plane::DmaReq, self.coord) else { break };
@@ -222,6 +226,13 @@ impl MemTile {
             } else {
                 i += 1;
             }
+        }
+        if noc.has_rx(Plane::DmaReq, self.coord) || noc.has_rx(Plane::CohReq, self.coord) {
+            return Wake::Busy; // ingress backlog beyond this cycle's bound
+        }
+        match self.jobs.iter().map(|j| j.0).min() {
+            Some(ready) => Wake::at(now, ready),
+            None => Wake::Parked,
         }
     }
 

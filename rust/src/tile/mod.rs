@@ -12,6 +12,7 @@ pub use io::IoTile;
 pub use mem::{MemStats, MemTile};
 
 use crate::noc::Noc;
+use crate::sched::Wake;
 
 /// One mesh tile.
 pub enum Tile {
@@ -28,14 +29,17 @@ pub enum Tile {
 }
 
 impl Tile {
-    /// Advance this tile one cycle.
-    pub fn tick(&mut self, now: u64, noc: &mut Noc) {
+    /// Advance this tile one cycle.  Returns the tile's [`Wake`] state:
+    /// when (absent a delivery) its next tick can do anything at all —
+    /// the contract the SoC worklist scheduler runs on (see
+    /// [`crate::sched`] and DESIGN.md §SoC scheduler).
+    pub fn tick(&mut self, now: u64, noc: &mut Noc) -> Wake {
         match self {
             Tile::Cpu(t) => t.tick(now, noc),
             Tile::Mem(t) => t.tick(now, noc),
             Tile::Io(t) => t.tick(now, noc),
             Tile::Acc(t) => t.tick(now, noc),
-            Tile::Empty => {}
+            Tile::Empty => Wake::Parked,
         }
     }
 

@@ -13,7 +13,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::util::Json;
 
-use crate::noc::{header_dest_capacity_for, Coord, TickMode, MAX_DESTS, MAX_QUEUE_DEPTH};
+use crate::noc::{header_dest_capacity_for, Coord, RouteTable, TickMode, MAX_DESTS,
+                 MAX_QUEUE_DEPTH};
 
 /// Largest supported mesh edge.  Coordinates stay `u8`, but the header
 /// destination encoding (see [`crate::noc::flit::bits_per_dest`]) and the
@@ -158,6 +159,15 @@ pub struct AccConfig {
     pub l2_bytes: u32,
     /// Datapath throughput: words processed per cycle once running.
     pub dp_words_per_cycle: u32,
+    /// Cycles a socket waits for a DMA sub-response or P2P data before
+    /// re-sending the request.  0 disables retry entirely (the default:
+    /// a healthy NoC never drops, so the machinery must cost nothing).
+    /// Degraded-mode runs enable it so link kills surface as bounded
+    /// retries instead of silent hangs.
+    pub retry_timeout: u32,
+    /// Resends attempted per request before the socket declares the
+    /// destination blackholed and parks with a fault diagnosis.
+    pub max_retries: u32,
 }
 
 impl Default for AccConfig {
@@ -170,6 +180,8 @@ impl Default for AccConfig {
             l2_enabled: false,
             l2_bytes: 32 << 10,
             dp_words_per_cycle: 8,
+            retry_timeout: 0,
+            max_retries: 3,
         }
     }
 }
@@ -216,6 +228,11 @@ pub struct SocConfig {
     pub acc: AccConfig,
     /// Host cost model.
     pub host: HostConfig,
+    /// Harvest mask: tiles whose router (and tile) are disabled — the
+    /// partial-good floorplan of a chip with manufacturing defects.
+    /// Harvested tiles are never scheduled, injected at, or routed
+    /// *through*; CPU/Mem/IO tiles must survive (validated).
+    pub harvest: Vec<Coord>,
 }
 
 impl SocConfig {
@@ -235,6 +252,7 @@ impl SocConfig {
             mem: MemConfig::default(),
             acc: AccConfig::default(),
             host: HostConfig::default(),
+            harvest: Vec::new(),
         }
     }
 
@@ -253,6 +271,7 @@ impl SocConfig {
             mem: MemConfig::default(),
             acc: AccConfig::default(),
             host: HostConfig::default(),
+            harvest: Vec::new(),
         }
     }
 
@@ -284,6 +303,7 @@ impl SocConfig {
             mem: MemConfig::default(),
             acc: AccConfig::default(),
             host: HostConfig::default(),
+            harvest: Vec::new(),
         }
     }
 
@@ -369,9 +389,22 @@ impl SocConfig {
             set_u64(a, "page_bytes", |v| cfg.acc.page_bytes = v as u32)?;
             set_u64(a, "l2_bytes", |v| cfg.acc.l2_bytes = v as u32)?;
             set_u64(a, "dp_words_per_cycle", |v| cfg.acc.dp_words_per_cycle = v as u32)?;
+            set_u64(a, "retry_timeout", |v| cfg.acc.retry_timeout = v as u32)?;
+            set_u64(a, "max_retries", |v| cfg.acc.max_retries = v as u32)?;
             if let Some(b) = a.get("l2_enabled") {
                 cfg.acc.l2_enabled = b.as_bool()?;
             }
+        }
+        if let Some(h) = j.get("harvest") {
+            cfg.harvest = h
+                .as_arr()?
+                .iter()
+                .map(|c| {
+                    let pair = c.as_arr()?;
+                    ensure!(pair.len() == 2, "harvest entry must be [y, x]");
+                    Ok((pair[0].as_u64()? as u8, pair[1].as_u64()? as u8))
+                })
+                .collect::<Result<Vec<Coord>>>()?;
         }
         if let Some(h) = j.get("host") {
             set_u64(h, "invocation_overhead", |v| cfg.host.invocation_overhead = v as u32)?;
@@ -432,7 +465,20 @@ impl SocConfig {
                     ("l2_enabled", Json::from(self.acc.l2_enabled)),
                     ("l2_bytes", Json::from(self.acc.l2_bytes as u64)),
                     ("dp_words_per_cycle", Json::from(self.acc.dp_words_per_cycle as u64)),
+                    ("retry_timeout", Json::from(self.acc.retry_timeout as u64)),
+                    ("max_retries", Json::from(self.acc.max_retries as u64)),
                 ]),
+            ),
+            (
+                "harvest",
+                Json::Arr(
+                    self.harvest
+                        .iter()
+                        .map(|&(y, x)| {
+                            Json::Arr(vec![Json::from(y as u64), Json::from(x as u64)])
+                        })
+                        .collect(),
+                ),
             ),
             (
                 "host",
@@ -508,10 +554,15 @@ impl SocConfig {
             .max(1)
     }
 
-    /// `(tile coord, slot)` of every accelerator socket, in a stable order.
+    /// `(tile coord, slot)` of every *live* accelerator socket, in a
+    /// stable order.  Sockets on harvested tiles do not exist: they are
+    /// never scheduled and never assigned scenario roles.
     pub fn acc_sockets(&self) -> Vec<(Coord, u8)> {
         let mut v = Vec::new();
         for (i, t) in self.tiles.iter().enumerate() {
+            if self.is_harvested(self.coord_of(i)) {
+                continue;
+            }
             if let TileKind::Acc { accs } = t {
                 for s in 0..*accs {
                     v.push((self.coord_of(i), s));
@@ -519,6 +570,35 @@ impl SocConfig {
             }
         }
         v
+    }
+
+    /// Is tile `c` on the harvest mask (disabled)?
+    pub fn is_harvested(&self, c: Coord) -> bool {
+        self.harvest.contains(&c)
+    }
+
+    /// Harvest mesh rows (convenience for the degraded-mode sweeps):
+    /// every tile of each row in `rows` is disabled except CPU/Mem/IO
+    /// tiles (which must survive) and a single *bridge* tile at column 0,
+    /// which keeps the mesh halves connected — the realistic partial-good
+    /// floorplan, where a defect row loses its compute but one router
+    /// column still stitches the fabric together.  Push coordinates onto
+    /// `harvest` directly for full-row (disconnecting) kills.
+    pub fn harvest_rows(&mut self, rows: &[u8]) {
+        for &y in rows {
+            assert!(y < self.height, "harvest row {y} outside mesh height {}", self.height);
+            for x in 0..self.width {
+                let c = (y, x);
+                let keep = x == 0
+                    || matches!(
+                        self.tiles[self.index_of(c)],
+                        TileKind::Cpu | TileKind::Mem | TileKind::Io
+                    );
+                if !keep && !self.harvest.contains(&c) {
+                    self.harvest.push(c);
+                }
+            }
+        }
     }
 
     /// Validate structural invariants.
@@ -556,6 +636,40 @@ impl SocConfig {
         ensure!(self.acc.max_burst_bytes <= self.acc.plm_bytes / 2, "PLM must fit 2 bursts");
         ensure!(self.mem.line_bytes.is_power_of_two(), "line size power of two");
         ensure!(self.acc.page_bytes.is_power_of_two(), "page size power of two");
+
+        // Harvest mask: in bounds, never a CPU/Mem/IO tile, and the
+        // surviving endpoints must still reach each other (a mask that
+        // cuts the mesh is a config error, caught here with a concrete
+        // example pair rather than a hung simulation).
+        for &c in &self.harvest {
+            ensure!(
+                c.0 < self.height && c.1 < self.width,
+                "harvested tile {c:?} outside the {}x{} mesh",
+                self.width,
+                self.height
+            );
+            let kind = self.tiles[self.index_of(c)];
+            ensure!(
+                !matches!(kind, TileKind::Cpu | TileKind::Mem | TileKind::Io),
+                "cannot harvest the {} tile at {c:?}",
+                kind.code()
+            );
+        }
+        if !self.harvest.is_empty() {
+            let table = RouteTable::build(self.width, self.height, &self.harvest, &[]);
+            let mut live: Vec<Coord> = vec![self.cpu_tile(), self.mem_tile()];
+            live.extend(self.acc_sockets().iter().map(|&(c, _)| c));
+            live.dedup();
+            for &a in &live {
+                for &b in &live {
+                    ensure!(
+                        table.reachable(a, b),
+                        "harvest mask disconnects the mesh: no live route from \
+                         {a:?} to {b:?} (disable fewer tiles or a different row)"
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -711,6 +825,54 @@ mod tests {
         let mut c = SocConfig::paper_3x4();
         c.tiles.pop();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn harvest_roundtrips_and_validates() {
+        let mut c = SocConfig::scaled_16x16();
+        c.harvest_rows(&[7]);
+        assert_eq!(c.harvest.len(), 15, "row 7 dies except the column-0 bridge");
+        c.validate().unwrap_or_else(|e| panic!("one harvested row must validate: {e}"));
+        assert!(c.is_harvested((7, 3)));
+        assert!(!c.is_harvested((7, 0)), "bridge tile survives");
+        assert!(!c.is_harvested((6, 3)));
+        let c2 = SocConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.harvest, c.harvest);
+        // Sockets on the dead row vanish from the stable socket order.
+        assert!(c.acc_sockets().iter().all(|&(t, _)| t.0 != 7));
+        assert!(c.acc_sockets().len() < SocConfig::scaled_16x16().acc_sockets().len());
+    }
+
+    #[test]
+    fn harvest_rejects_protected_and_disconnecting_masks() {
+        let mut c = SocConfig::paper_3x4();
+        c.harvest.push((0, 0)); // the CPU tile
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("cannot harvest"), "got: {err}");
+
+        let mut c = SocConfig::paper_3x4();
+        c.harvest.push((9, 9));
+        assert!(c.validate().unwrap_err().to_string().contains("outside"));
+
+        // Harvest every neighbour of the CPU corner: the mesh is cut and
+        // the diagnostic names a concrete unreachable pair.
+        let mut c = SocConfig::paper_3x4();
+        c.harvest.push((0, 1));
+        c.harvest.push((1, 0));
+        c.harvest.push((1, 1));
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("disconnects"), "got: {err}");
+    }
+
+    #[test]
+    fn retry_config_roundtrips() {
+        let mut c = SocConfig::paper_3x4();
+        assert_eq!(c.acc.retry_timeout, 0, "retry off by default");
+        c.acc.retry_timeout = 4096;
+        c.acc.max_retries = 5;
+        let c2 = SocConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.acc.retry_timeout, 4096);
+        assert_eq!(c2.acc.max_retries, 5);
     }
 
     #[test]

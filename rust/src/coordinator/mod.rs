@@ -10,5 +10,5 @@ pub mod workloads;
 
 pub use app::{App, FlagBarrier, Invocation, Phase, ProgramKind};
 pub use scenario::{builtin_scenarios, Outcome, Pattern, Platform, Scenario};
-pub use soc::Soc;
+pub use soc::{QuiesceError, QuiesceKind, Soc};
 pub use stats::Report;

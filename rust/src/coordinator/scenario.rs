@@ -28,6 +28,7 @@ use crate::coordinator::experiments::{fill_input, layout};
 use crate::coordinator::stats::Report;
 use crate::coordinator::workloads::{multi_pull_invocation, Dataflow, EdgePolicy, Shape};
 use crate::coordinator::{App, Invocation, ProgramKind, Soc};
+use crate::fault::FaultPlan;
 use crate::noc::{TickMode, NUM_PLANES};
 use crate::sched::SchedMode;
 use crate::util::Json;
@@ -172,7 +173,24 @@ pub struct Scenario {
     /// SoC tile scheduling (worklist or the full-scan reference; results
     /// are cycle-identical in both — `tests/prop_soc_sched.rs`).
     pub sched: SchedMode,
+    /// Degraded-mesh axis: rows harvested down to a bridge tile (see
+    /// [`SocConfig::harvest_rows`]).  Empty = pristine mesh.
+    pub harvest_rows: Vec<u8>,
+    /// Degraded-mesh axis: links killed mid-run by a deterministic
+    /// [`FaultPlan::link_storm`].  0 = no fault injection.
+    pub fault_links: u8,
+    /// Seed of the link storm (independent of the workload `seed` so the
+    /// same traffic can be replayed under different fault draws).
+    pub fault_seed: u64,
 }
+
+/// Cycle window fault events are drawn from: early enough to hit every
+/// scenario's live traffic, late enough that warm-up completes.
+const FAULT_WINDOW: u64 = 20_000;
+
+/// Socket retry timeout on fault-injected runs — generous against worst
+/// case contention so healthy-but-slow responses are not re-requested.
+const FAULT_RETRY_TIMEOUT: u32 = 8192;
 
 /// Measured result of one scenario run (both lowerings).
 #[derive(Debug, Clone)]
@@ -196,6 +214,10 @@ pub struct Outcome {
     /// Invocation spans `(acc, start, end)` of the optimized lowering —
     /// the scenario-level delivery trace the determinism suite pins.
     pub invocation_spans: Vec<(u16, u64, u64)>,
+    /// Flits dropped by fault injection (optimized lowering; 0 healthy).
+    pub dropped_flits: u64,
+    /// Socket sub-request retries (optimized lowering; 0 healthy).
+    pub socket_retries: u64,
 }
 
 impl Outcome {
@@ -240,7 +262,27 @@ impl Scenario {
             max_cycles: 200_000_000,
             tick_mode: TickMode::Auto,
             sched: SchedMode::default(),
+            harvest_rows: Vec::new(),
+            fault_links: 0,
+            fault_seed: 1,
         }
+    }
+
+    /// Degraded-mode copy: `rows` harvested, `links` killed mid-run.  The
+    /// name gains a `+harvestR`/`+faultsN` suffix so bench records from the
+    /// pristine and degraded sweeps never collide.
+    pub fn degraded(&self, rows: &[u8], links: u8, fault_seed: u64) -> Self {
+        let mut s = self.clone();
+        s.harvest_rows = rows.to_vec();
+        s.fault_links = links;
+        s.fault_seed = fault_seed;
+        for &r in rows {
+            s.name = format!("{}+harvest{r}", s.name);
+        }
+        if links > 0 {
+            s.name = format!("{}+faults{links}", s.name);
+        }
+        s
     }
 
     /// Structural validation (pattern arity, transfer shape, layout).
@@ -258,7 +300,11 @@ impl Scenario {
             "bytes ({}) exceeds the 1 MiB per-node region stride",
             self.bytes
         );
-        let acc = self.platform.config().acc;
+        let cfg = self.platform.config();
+        for &r in &self.harvest_rows {
+            ensure!(r < cfg.height, "harvest row {r} outside the {}-row mesh", cfg.height);
+        }
+        let acc = cfg.acc;
         ensure!(
             self.burst_bytes <= acc.max_burst_bytes,
             "burst_bytes ({}) exceeds the socket burst limit ({})",
@@ -298,15 +344,35 @@ impl Scenario {
         Ok(())
     }
 
-    /// Fresh SoC for one lowering.
+    /// Fresh SoC for one lowering.  Both lowerings get the identical
+    /// degraded mesh: the same harvest mask and the same fault plan, so
+    /// degraded speedups compare like against like.
     fn soc(&self) -> Result<Soc> {
         let mut cfg = self.platform.config();
         cfg.noc.tick_mode = self.tick_mode;
+        if !self.harvest_rows.is_empty() {
+            cfg.harvest_rows(&self.harvest_rows);
+        }
+        if self.fault_links > 0 {
+            // Fault-injected runs arm the bounded-retry path so a lost
+            // sub-request surfaces as a precise socket fault, not a hang.
+            cfg.acc.retry_timeout = FAULT_RETRY_TIMEOUT;
+        }
+        let (w, h) = (cfg.width, cfg.height);
         let mut soc = Soc::new(cfg)?;
         soc.set_sched_mode(self.sched);
+        if self.fault_links > 0 {
+            soc.set_fault_plan(FaultPlan::link_storm(
+                self.fault_seed,
+                self.fault_links as u32,
+                w,
+                h,
+                (1, FAULT_WINDOW),
+            ));
+        }
         ensure!(
             self.pattern.sockets() <= soc.acc_count(),
-            "pattern {} needs {} sockets, platform {} has {}",
+            "pattern {} needs {} sockets, platform {} has {} (after harvest)",
             self.pattern.code(),
             self.pattern.sockets(),
             self.platform.code(),
@@ -348,6 +414,8 @@ impl Scenario {
             p2p_bytes: report.p2p_bytes(),
             dma_bytes: report.dma_bytes(),
             invocation_spans: report.invocations.clone(),
+            dropped_flits: report.dropped_flits(),
+            socket_retries: report.socket_retries(),
         }
     }
 
@@ -543,6 +611,14 @@ impl Scenario {
         m.insert("max_cycles".to_string(), Json::from(self.max_cycles));
         m.insert("tick_mode".to_string(), Json::from(self.tick_mode.code()));
         m.insert("sched".to_string(), Json::from(self.sched.code()));
+        if !self.harvest_rows.is_empty() {
+            let rows = self.harvest_rows.iter().map(|&r| Json::from(r as u64)).collect();
+            m.insert("harvest_rows".to_string(), Json::Arr(rows));
+        }
+        if self.fault_links > 0 {
+            m.insert("fault_links".to_string(), Json::from(self.fault_links as u64));
+            m.insert("fault_seed".to_string(), Json::from(self.fault_seed));
+        }
         match self.pattern {
             Pattern::P2pChain { stages } | Pattern::CoherentPhases { stages } => {
                 m.insert("stages".to_string(), Json::from(stages as u64));
@@ -612,6 +688,21 @@ impl Scenario {
             let code = v.as_str()?;
             s.sched =
                 SchedMode::from_code(code).ok_or_else(|| anyhow!("unknown sched {code:?}"))?;
+        }
+        if let Some(v) = j.get("harvest_rows") {
+            for r in v.as_arr()? {
+                let n = r.as_u64()?;
+                ensure!(n < 256, "harvest row out of range: {n}");
+                s.harvest_rows.push(n as u8);
+            }
+        }
+        if let Some(v) = j.get("fault_links") {
+            let n = v.as_u64()?;
+            ensure!(n <= u8::MAX as u64, "fault_links out of range: {n}");
+            s.fault_links = n as u8;
+        }
+        if let Some(v) = j.get("fault_seed") {
+            s.fault_seed = v.as_u64()?;
         }
         s.validate()?;
         Ok(s)
@@ -689,6 +780,23 @@ mod tests {
             assert_eq!(s, s2, "{} roundtrip", s.name);
         }
         assert!(Scenario::from_json(&Json::parse("{\"name\":\"x\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn degraded_scenario_runs_on_a_harvested_mesh() {
+        let mut s = Scenario::new("t", Pattern::P2pChain { stages: 3 }, Platform::Paper3x4);
+        s.bytes = 8 << 10;
+        let d = s.degraded(&[1], 0, 7);
+        assert_eq!(d.name, "t+harvest1");
+        let o = d.run().unwrap();
+        assert!(o.cycles > 0 && o.baseline_cycles > 0);
+        assert_eq!(o.dropped_flits, 0, "harvest alone drops nothing mid-run");
+        // The degraded fields survive the JSON roundtrip.
+        let d2 = Scenario::from_json(&s.degraded(&[1], 3, 9).to_json()).unwrap();
+        assert_eq!(d2.harvest_rows, vec![1]);
+        assert_eq!(d2.fault_links, 3);
+        assert_eq!(d2.fault_seed, 9);
+        assert_eq!(d2.name, "t+harvest1+faults3");
     }
 
     #[test]

@@ -19,7 +19,8 @@ use anyhow::{anyhow, Result};
 
 use crate::accel::{AccCore, DpCall};
 use crate::config::{SocConfig, TileKind};
-use crate::noc::{Coord, MeshParams, Noc};
+use crate::fault::{FaultKind, FaultPlan};
+use crate::noc::{Coord, MeshParams, Noc, Plane};
 use crate::sched::{SchedMode, Wake};
 use crate::socket::Socket;
 use crate::tile::{AccTile, CpuTile, HostOp, IoTile, MemTile, Tile};
@@ -144,6 +145,45 @@ impl Sched {
     }
 }
 
+/// Why [`Soc::run`] failed to quiesce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuiesceKind {
+    /// The cycle budget ran out while work was still in flight (possibly
+    /// a livelock or a runaway workload — the SoC might still finish).
+    Budget,
+    /// Provable deadlock: nothing can ever run again, yet the SoC is not
+    /// idle (only the worklist scheduler can detect this early).
+    Deadlock,
+}
+
+/// Typed quiesce failure: the seed's one-line message plus a forensic
+/// dump.  Carried behind [`anyhow::Error`]; match on it with
+/// `err.downcast_ref::<QuiesceError>()`.
+#[derive(Debug)]
+pub struct QuiesceError {
+    /// Budget exhaustion vs provable deadlock.
+    pub kind: QuiesceKind,
+    /// The cycle budget that was exceeded.
+    pub max_cycles: u64,
+    /// Multi-line post-mortem: non-idle tiles, socket fault latches,
+    /// per-plane queue occupancy, the oldest stalled packet and its next
+    /// hop, and a suspected cause.
+    pub dump: String,
+}
+
+impl std::fmt::Display for QuiesceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // First line is the seed's exact wording — scripts grep for it.
+        write!(f, "SoC did not quiesce within {} cycles (deadlock or runaway)", self.max_cycles)?;
+        if !self.dump.is_empty() {
+            write!(f, "\n{}", self.dump)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for QuiesceError {}
+
 /// The simulated SoC: tiles + multi-plane NoC + the cycle loop.
 pub struct Soc {
     /// Configuration this SoC was built from.
@@ -163,6 +203,10 @@ pub struct Soc {
     sched_mode: SchedMode,
     /// Worklist scheduler state.
     sched: Sched,
+    /// Scheduled mid-run link/router kills (empty on healthy runs).
+    fault_plan: FaultPlan,
+    /// Next unapplied event in `fault_plan` (events are cycle-sorted).
+    fault_next: usize,
 }
 
 impl Soc {
@@ -176,11 +220,20 @@ impl Soc {
             queue_depth: cfg.noc.queue_depth,
         });
         noc.set_tick_mode(cfg.noc.tick_mode);
+        noc.set_harvest(&cfg.harvest);
         let mut tiles = Vec::with_capacity(cfg.tiles.len());
         let mut acc_index = Vec::new();
         let mut next_acc: u16 = 0;
         for (i, kind) in cfg.tiles.iter().enumerate() {
             let coord = cfg.coord_of(i);
+            if cfg.is_harvested(coord) {
+                // Harvested tiles are depopulated: never built, scheduled,
+                // or injected into (validate() keeps CPU/Mem/IO alive, and
+                // `cfg.acc_sockets()` already skips them, so accelerator
+                // numbering stays consistent).
+                tiles.push(Tile::Empty);
+                continue;
+            }
             tiles.push(match kind {
                 TileKind::Cpu => {
                     Tile::Cpu(CpuTile::new(coord, cfg.mem_tile(), cfg.host, cfg.mem.line_bytes))
@@ -208,7 +261,35 @@ impl Soc {
             busy_tile_hint: 0,
             sched_mode: SchedMode::default(),
             sched,
+            fault_plan: FaultPlan::none(),
+            fault_next: 0,
         })
+    }
+
+    /// Install a fault-injection plan.  Events fire at the start of their
+    /// cycle, before any tile ticks; already-past events fire on the next
+    /// cycle boundary.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = plan;
+        self.fault_next = 0;
+    }
+
+    /// Apply every fault event due at or before `now`.  Kills only ever
+    /// remove work (queued flits drop, routes rebuild), so applying them
+    /// after an idle-cycle fast-forward jump is equivalent to applying
+    /// them mid-gap: there was nothing in flight to kill.
+    #[cold]
+    fn apply_due_faults(&mut self) {
+        while let Some(ev) = self.fault_plan.events().get(self.fault_next) {
+            if ev.cycle > self.now {
+                break;
+            }
+            match ev.kind {
+                FaultKind::Link { at, dir } => self.noc.kill_link(at, dir),
+                FaultKind::Router { at } => self.noc.kill_router(at),
+            }
+            self.fault_next += 1;
+        }
     }
 
     /// Select how [`Soc::run`] schedules tile ticks (results are
@@ -300,6 +381,9 @@ impl Soc {
     /// keep using this; [`Soc::run`] re-seeds its worklist from scratch,
     /// so interleaving manual ticks, backdoor writes and `run` is safe.
     pub fn tick(&mut self) {
+        if self.fault_next < self.fault_plan.len() {
+            self.apply_due_faults();
+        }
         let now = self.now;
         for t in &mut self.tiles {
             t.tick(now, &mut self.noc);
@@ -314,6 +398,9 @@ impl Soc {
     /// deterministic order keeps runs reproducible), advance the NoC, and
     /// unpark every tile that received a delivery.
     fn tick_scheduled(&mut self) {
+        if self.fault_next < self.fault_plan.len() {
+            self.apply_due_faults();
+        }
         let now = self.now;
         debug_assert!(self.sched.scratch.is_empty());
         let mut cur = std::mem::take(&mut self.sched.run_list);
@@ -382,10 +469,93 @@ impl Soc {
         }
     }
 
-    /// The shared budget/deadlock error (tests substring-match on it, so
-    /// every exit path must agree on the wording).
-    fn stall_err(max_cycles: u64) -> anyhow::Error {
-        anyhow!("SoC did not quiesce within {max_cycles} cycles (deadlock or runaway)")
+    /// Build the typed quiesce failure with its forensic dump attached.
+    /// Every exit path agrees on the headline wording (the first
+    /// [`Display`](std::fmt::Display) line is unchanged from the seed).
+    #[cold]
+    fn quiesce_err(&self, kind: QuiesceKind, max_cycles: u64) -> anyhow::Error {
+        QuiesceError { kind, max_cycles, dump: self.forensic_dump(kind) }.into()
+    }
+
+    /// Post-mortem for a failed quiesce: which tiles were still alive,
+    /// where queued flits sit, the oldest in-flight packet and the hop it
+    /// is stalled at, plus a suspected cause.
+    fn forensic_dump(&self, kind: QuiesceKind) -> String {
+        use std::fmt::Write as _;
+        let mut d = String::new();
+        let _ = writeln!(d, "--- quiesce watchdog @ cycle {} ---", self.now);
+        // Non-idle tiles (capped: one stuck app can strand a whole mesh).
+        let busy: Vec<usize> =
+            (0..self.tiles.len()).filter(|&i| !self.tiles[i].idle()).collect();
+        let _ = writeln!(d, "non-idle tiles: {}", busy.len());
+        for &i in busy.iter().take(8) {
+            let t = &self.tiles[i];
+            let what = match t {
+                Tile::Cpu(_) => "cpu: host script unfinished",
+                Tile::Mem(_) => "mem: requests in flight",
+                Tile::Io(_) | Tile::Empty => "idle-by-definition (bug)",
+                Tile::Acc(_) => "acc: core running or socket not quiescent",
+            };
+            let _ = writeln!(d, "  {:?}: {what}", self.cfg.coord_of(i));
+        }
+        // Socket-level fault latches (retry exhaustion diagnoses).
+        for t in &self.tiles {
+            if let Tile::Acc(a) = t {
+                for s in &a.sockets {
+                    if let Some(cause) = s.fault() {
+                        let _ = writeln!(d, "socket fault: {cause}");
+                    }
+                }
+            }
+        }
+        // Per-plane router occupancy.
+        for plane in Plane::ALL {
+            let occ = self.noc.occupied_routers(plane);
+            if occ.is_empty() {
+                continue;
+            }
+            let total: u32 = occ.iter().map(|&(_, n)| n).sum();
+            let _ = write!(d, "plane {plane:?}: {total} queued flits at");
+            for &(c, n) in occ.iter().take(6) {
+                let _ = write!(d, " {c:?}x{n}");
+            }
+            let _ = writeln!(d);
+        }
+        // The oldest in-flight packet and where it is stuck.
+        let stall = self.noc.oldest_stall();
+        if let Some((plane, p)) = &stall {
+            let _ = writeln!(
+                d,
+                "oldest stall: plane {plane:?} packet {:?}->{:?}{} waiting at {:?} port \
+                 {:?}{} since cycle {} (next hop {:?}{})",
+                p.origin,
+                p.dest,
+                if p.ndests > 1 { " (multicast)" } else { "" },
+                p.at,
+                p.port,
+                if p.in_branch_buf { " [branch buffer]" } else { "" },
+                p.arrived,
+                p.next,
+                if p.next_dead { ", DEAD LINK" } else { "" },
+            );
+        }
+        // Suspected cause, most specific signal first.
+        let socket_fault = self.tiles.iter().any(|t| {
+            matches!(t, Tile::Acc(a) if a.sockets.iter().any(|s| s.fault().is_some()))
+        });
+        let cause = if socket_fault {
+            "dead-link blackhole (socket retries exhausted; see socket fault above)"
+        } else if matches!(&stall, Some((_, p)) if p.next_dead) {
+            "dead-link blackhole (oldest packet's next hop crosses a killed link)"
+        } else if self.noc.is_idle() {
+            "deadlock (tiles wait on deliveries with nothing in flight)"
+        } else if kind == QuiesceKind::Budget {
+            "livelock or runaway (traffic still moving when the budget expired)"
+        } else {
+            "deadlock (in-flight packets can no longer drain)"
+        };
+        let _ = write!(d, "suspected cause: {cause}");
+        d
     }
 
     /// The full-scan reference loop: every tile, every cycle.
@@ -393,7 +563,7 @@ impl Soc {
         let start = self.now;
         while !self.quiesced() {
             if self.now - start >= max_cycles {
-                return Err(Self::stall_err(max_cycles));
+                return Err(self.quiesce_err(QuiesceKind::Budget, max_cycles));
             }
             self.tick();
         }
@@ -417,18 +587,18 @@ impl Soc {
                     // Not quiescent, yet nothing can ever wake: the
                     // full-scan loop would burn the whole budget on this
                     // deadlock, so report it the same way.
-                    return Err(Self::stall_err(max_cycles));
+                    return Err(self.quiesce_err(QuiesceKind::Deadlock, max_cycles));
                 };
                 // Checked *before* jumping so a blown budget does not
                 // advance `now` past it.
                 if t - start >= max_cycles {
-                    return Err(Self::stall_err(max_cycles));
+                    return Err(self.quiesce_err(QuiesceKind::Budget, max_cycles));
                 }
                 self.now = t;
                 self.sched.wake_due(t);
             }
             if self.now - start >= max_cycles {
-                return Err(Self::stall_err(max_cycles));
+                return Err(self.quiesce_err(QuiesceKind::Budget, max_cycles));
             }
             self.tick_scheduled();
         }
@@ -522,13 +692,58 @@ mod tests {
         let mut soc = idle_soc(SchedMode::Worklist);
         // An IRQ wait nothing will ever satisfy.
         soc.push_host_script(vec![HostOp::WaitIrqs(vec![0])]);
-        let err = soc.run(1_000_000).unwrap_err().to_string();
-        assert!(err.contains("did not quiesce"), "{err}");
-        // The full-scan reference reports the same failure.
+        let err = soc.run(1_000_000).unwrap_err();
+        let qe = err.downcast_ref::<QuiesceError>().expect("typed quiesce error");
+        assert_eq!(qe.kind, QuiesceKind::Deadlock, "worklist proves the deadlock");
+        assert_eq!(qe.max_cycles, 1_000_000);
+        assert!(qe.dump.contains("suspected cause: deadlock"), "{}", qe.dump);
+        // Display keeps the seed's headline (scripts grep for it) and
+        // appends the dump.
+        let text = err.to_string();
+        assert!(text.starts_with("SoC did not quiesce within 1000000 cycles"), "{text}");
+        assert!(text.contains("quiesce watchdog"), "{text}");
+        // The full-scan reference reports the same failure, as a budget
+        // exhaustion (it cannot prove deadlock early).
         let mut soc = idle_soc(SchedMode::FullScan);
         soc.push_host_script(vec![HostOp::WaitIrqs(vec![0])]);
-        let err2 = soc.run(10_000).unwrap_err().to_string();
-        assert!(err2.contains("did not quiesce"), "{err2}");
+        let err2 = soc.run(10_000).unwrap_err();
+        let qe2 = err2.downcast_ref::<QuiesceError>().expect("typed quiesce error");
+        assert_eq!(qe2.kind, QuiesceKind::Budget);
+        assert!(err2.to_string().contains("did not quiesce"), "{err2}");
+    }
+
+    #[test]
+    fn harvested_tiles_are_depopulated() {
+        let mut cfg = SocConfig::paper_3x4();
+        let live_before = cfg.acc_sockets().len();
+        // Harvest one accelerator tile (validate() keeps the mesh routable).
+        let victim = cfg.acc_sockets()[live_before - 1].0;
+        cfg.harvest.push(victim);
+        let live_after = cfg.acc_sockets().len();
+        assert!(live_after < live_before);
+        let soc = Soc::new(cfg).unwrap();
+        assert!(matches!(soc.tiles[soc.cfg.index_of(victim)], Tile::Empty));
+        assert_eq!(soc.acc_count(), live_after);
+        assert!(soc.noc.route_table().router_dead(victim));
+    }
+
+    #[test]
+    fn fault_plan_fires_during_run_and_watchdog_dumps() {
+        use crate::fault::FaultEvent;
+        let mut soc = Soc::new(SocConfig::small_3x3()).unwrap();
+        soc.set_sched_mode(SchedMode::FullScan);
+        // Cut the mem tile's column links mid-run so DMA responses die.
+        let mem = soc.cfg.mem_tile();
+        soc.set_fault_plan(FaultPlan::new(vec![FaultEvent {
+            cycle: 1,
+            kind: FaultKind::Router { at: mem },
+        }]));
+        soc.push_host_script(vec![HostOp::WaitIrqs(vec![0])]);
+        let err = soc.run(500).unwrap_err();
+        let qe = err.downcast_ref::<QuiesceError>().expect("typed quiesce error");
+        assert!(qe.dump.contains("non-idle tiles"), "{}", qe.dump);
+        // The router kill happened: routes toward mem are dead.
+        assert!(soc.noc.route_table().router_dead(mem));
     }
 
     #[test]

@@ -39,6 +39,21 @@ impl Report {
         self.sockets.iter().map(|(_, s)| s.p2p_write_bytes).sum()
     }
 
+    /// Flits dropped by fault injection across planes (0 on healthy runs).
+    pub fn dropped_flits(&self) -> u64 {
+        self.planes.iter().map(|p| p.dropped_flits).sum()
+    }
+
+    /// Whole messages refused at injection (unreachable/dead destination).
+    pub fn dropped_msgs(&self) -> u64 {
+        self.planes.iter().map(|p| p.dropped_msgs).sum()
+    }
+
+    /// Socket sub-request retries across accelerators (degraded runs).
+    pub fn socket_retries(&self) -> u64 {
+        self.sockets.iter().map(|(_, s)| s.retries).sum()
+    }
+
     /// Latency of accelerator `acc`'s first invocation, if logged.
     pub fn invocation_latency(&self, acc: u16) -> Option<u64> {
         self.invocations.iter().find(|(a, _, _)| *a == acc).map(|(_, s, e)| e - s)
@@ -74,6 +89,16 @@ impl Report {
             "host: {} reg writes, {} irqs, done at {:?}",
             self.cpu.reg_writes, self.cpu.irqs, self.cpu.done_at
         );
+        // Fault-injection counters only appear on degraded runs.
+        if self.dropped_flits() + self.dropped_msgs() + self.socket_retries() > 0 {
+            let _ = writeln!(
+                s,
+                "faults: {} flits dropped, {} msgs refused, {} socket retries",
+                self.dropped_flits(),
+                self.dropped_msgs(),
+                self.socket_retries()
+            );
+        }
         for (acc, st) in &self.sockets {
             if st.bursts == 0 {
                 continue;

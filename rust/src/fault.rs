@@ -1,0 +1,170 @@
+//! Deterministic fault injection: seeded plans that kill links or whole
+//! routers at chosen cycles mid-simulation.
+//!
+//! A [`FaultPlan`] is data, not behaviour: the [`crate::coordinator::Soc`]
+//! run loop applies each due [`FaultEvent`] to the NoC (rebuilding the
+//! shared [`crate::noc::RouteTable`] and purging dead routers), and the
+//! mesh's fault-drain pass drops the in-flight flits a dead link strands
+//! (see DESIGN.md §fault model).  Everything is seeded through the crate's
+//! SplitMix64 PRNG, so the same plan + scenario seed reproduces the same
+//! degraded run byte-for-byte — `tests/prop_fault.rs` pins this.
+
+use crate::noc::{Coord, Dir};
+use crate::util::prng::Prng;
+
+/// What dies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The bidirectional link leaving router `at` in direction `dir`.
+    Link {
+        /// Router on one end of the link.
+        at: Coord,
+        /// Direction of the link from `at` (never `Local`).
+        dir: Dir,
+    },
+    /// The whole router at `at` (all four links plus its queues).
+    Router {
+        /// The router to kill.
+        at: Coord,
+    },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Cycle at which the fault strikes (applied before that cycle's tick).
+    pub cycle: u64,
+    /// What dies.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, sorted by cycle.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Plan from explicit events (sorted by cycle, stable order preserved
+    /// for same-cycle events).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.cycle);
+        Self { events }
+    }
+
+    /// The empty plan (cycle-exact with no plan at all; `prop_fault` pins
+    /// this).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Seeded link-kill storm: `links` random mesh links die at random
+    /// cycles in `[window.0, window.1)`.  Victims may repeat (killing a
+    /// dead link is a no-op), and any link of the `width x height` mesh is
+    /// fair game — including ones whose loss cuts the mesh, in which case
+    /// the run fails with a precise cause instead of completing degraded.
+    pub fn link_storm(seed: u64, links: u32, width: u8, height: u8, window: (u64, u64)) -> Self {
+        assert!(window.0 < window.1, "empty fault window");
+        let mut rng = Prng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut events = Vec::with_capacity(links as usize);
+        for _ in 0..links {
+            let cycle = rng.range(window.0, window.1 - 1);
+            // Pick an interior link: a router plus a direction that has a
+            // neighbour.  East/South only — every physical link is the
+            // East or South output of exactly one router, so this covers
+            // all links uniformly without double-counting.
+            let (at, dir) = loop {
+                let y = rng.below(height as u64) as u8;
+                let x = rng.below(width as u64) as u8;
+                let dir = if rng.chance(0.5) { Dir::East } else { Dir::South };
+                let ok = match dir {
+                    Dir::East => x + 1 < width,
+                    Dir::South => y + 1 < height,
+                    _ => unreachable!(),
+                };
+                if ok {
+                    break ((y, x), dir);
+                }
+            };
+            events.push(FaultEvent { cycle, kind: FaultKind::Link { at, dir } });
+        }
+        Self::new(events)
+    }
+
+    /// The scheduled events, sorted by cycle.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// No events scheduled?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// One-line human summary ("2 link kills @ cycles 1200, 4807").
+    pub fn describe(&self) -> String {
+        if self.events.is_empty() {
+            return "no faults".to_string();
+        }
+        let cycles: Vec<String> = self.events.iter().map(|e| e.cycle.to_string()).collect();
+        let links = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Link { .. }))
+            .count();
+        let routers = self.events.len() - links;
+        let mut what = Vec::new();
+        if links > 0 {
+            what.push(format!("{links} link kill{}", if links == 1 { "" } else { "s" }));
+        }
+        if routers > 0 {
+            what.push(format!("{routers} router kill{}", if routers == 1 { "" } else { "s" }));
+        }
+        format!("{} @ cycles {}", what.join(" + "), cycles.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_is_deterministic_and_in_window() {
+        let a = FaultPlan::link_storm(7, 4, 8, 8, (1000, 5000));
+        let b = FaultPlan::link_storm(7, 4, 8, 8, (1000, 5000));
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(a.len(), 4);
+        for e in a.events() {
+            assert!((1000..5000).contains(&e.cycle));
+            let FaultKind::Link { at, dir } = e.kind else { panic!("storm kills links only") };
+            match dir {
+                Dir::East => assert!(at.1 + 1 < 8),
+                Dir::South => assert!(at.0 + 1 < 8),
+                d => panic!("unexpected storm direction {d:?}"),
+            }
+        }
+        assert_ne!(a, FaultPlan::link_storm(8, 4, 8, 8, (1000, 5000)), "seeds differ");
+    }
+
+    #[test]
+    fn events_sort_by_cycle() {
+        let p = FaultPlan::new(vec![
+            FaultEvent { cycle: 90, kind: FaultKind::Router { at: (1, 1) } },
+            FaultEvent { cycle: 10, kind: FaultKind::Link { at: (0, 0), dir: Dir::East } },
+        ]);
+        assert_eq!(p.events()[0].cycle, 10);
+        assert_eq!(p.events()[1].cycle, 90);
+        assert!(p.describe().contains("1 link kill + 1 router kill"));
+    }
+
+    #[test]
+    fn empty_plan() {
+        assert!(FaultPlan::none().is_empty());
+        assert_eq!(FaultPlan::none().describe(), "no faults");
+    }
+}

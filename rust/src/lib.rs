@@ -34,6 +34,7 @@ pub mod area;
 pub mod coherence;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod noc;
 pub mod runtime;
 pub mod sched;
@@ -43,4 +44,5 @@ pub mod tile;
 pub mod util;
 
 pub use config::SocConfig;
-pub use coordinator::{App, Soc};
+pub use coordinator::{App, QuiesceError, QuiesceKind, Soc};
+pub use fault::{FaultEvent, FaultKind, FaultPlan};

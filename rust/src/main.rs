@@ -31,16 +31,22 @@ USAGE:
       The full Fig. 6 grid (consumers x data sizes); --mesh16 runs the
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
-                   [--sched MODE] [--list] [--json]
+                   [--sched MODE] [--harvest ROWS] [--faults N[:SEED]]
+                   [--list] [--json]
       Run the declarative scenario registry (P2P chains, multicast
       fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
       coherence-barrier pipelines) against the DMA-only baseline and
       record each point into BENCH_noc.json.  Default platform is the
       8x8 mesh; --mesh16 selects the 16x16 platform; --file runs
       scenarios from a JSON config instead of the builtin registry.
-      --sched picks the SoC tile scheduler ("worklist", the default, or
-      the "full_scan" reference) — simulated cycles are identical in
+      --sched picks the SoC tile scheduler (\"worklist\", the default, or
+      the \"full_scan\" reference) — simulated cycles are identical in
       both, so the CI perf gate cross-checks the two documents.
+      --harvest disables the listed mesh rows (comma-separated; each
+      keeps a bridge tile so the mesh stays routable) and --faults
+      kills N random links mid-run from a seeded deterministic plan.
+      Degraded sweeps record completion 0/1, drop and retry counts per
+      scenario instead of aborting on the first failure.
   espsim compare BASELINE FRESH [--tol-cycles F] [--tol-speedup F]
                  [--tol-throughput F] [--warn-only]
       Diff a fresh bench document against a committed baseline with
@@ -194,6 +200,37 @@ fn main() -> Result<()> {
                         .ok_or_else(|| anyhow!("unknown --sched {code:?} (worklist, full_scan)"))
                 })
                 .transpose()?;
+            let harvest_rows: Vec<u8> = match args.value("--harvest")? {
+                Some(v) => v
+                    .split(',')
+                    .map(|r| {
+                        r.trim().parse::<u8>().map_err(|_| {
+                            anyhow!("--harvest expects comma-separated row numbers, got {r:?}")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            };
+            let (fault_links, fault_seed): (u8, u64) = match args.value("--faults")? {
+                Some(v) => {
+                    let (n, seed) = match v.split_once(':') {
+                        Some((n, s)) => (
+                            n,
+                            s.parse::<u64>().map_err(|_| {
+                                anyhow!("--faults seed must be an integer, got {s:?}")
+                            })?,
+                        ),
+                        None => (v.as_str(), 0xDEAD),
+                    };
+                    let n: u8 = n
+                        .parse()
+                        .map_err(|_| anyhow!("--faults expects N or N:SEED, got {v:?}"))?;
+                    ensure!(n > 0, "--faults needs at least one link to kill");
+                    (n, seed)
+                }
+                None => (0, 1),
+            };
+            let degraded = !harvest_rows.is_empty() || fault_links > 0;
             args.finish()?;
             ensure!(
                 !(mesh16 && file.is_some()),
@@ -217,6 +254,11 @@ fn main() -> Result<()> {
                     s.sched = m;
                 }
             }
+            if degraded {
+                for s in &mut scenarios {
+                    *s = s.degraded(&harvest_rows, fault_links, fault_seed);
+                }
+            }
             ensure!(!scenarios.is_empty(), "no scenarios match");
             if list {
                 for s in &scenarios {
@@ -230,12 +272,19 @@ fn main() -> Result<()> {
                 }
                 return Ok(());
             }
-            let bench_name = match (&file, mesh16) {
+            let mut bench_name = match (&file, mesh16) {
                 (Some(_), _) => "scenarios_custom",
                 (None, false) => "scenarios_8x8",
                 (None, true) => "scenarios_16x16",
-            };
-            let mut sink = BenchJson::from_args(bench_name);
+            }
+            .to_string();
+            if !harvest_rows.is_empty() {
+                bench_name.push_str("_harvest");
+            }
+            if fault_links > 0 {
+                bench_name.push_str("_faults");
+            }
+            let mut sink = BenchJson::from_args(&bench_name);
             let t = Table::new(
                 &["scenario", "pattern", "optimized", "dma-only", "speedup", "p2p-KiB", "wall"],
                 &[20, 18, 12, 12, 8, 8, 9],
@@ -248,6 +297,33 @@ fn main() -> Result<()> {
                 let (outcome, wall) = time_once(|| s.run());
                 let o = match outcome {
                     Ok(o) => o,
+                    Err(e) if degraded => {
+                        // On a degraded mesh, a scenario that cannot finish
+                        // is itself a data point (completed=0 plus the
+                        // cause), not a reason to abort the sweep.
+                        let cause = format!("{e:#}");
+                        sink.record_with(
+                            &format!("{}_{}", s.name, s.platform.code()),
+                            0,
+                            wall,
+                            &[
+                                ("completed", Json::from(0u64)),
+                                ("failure", Json::from(cause.as_str())),
+                                ("pattern", Json::from(s.pattern.code())),
+                                ("platform", Json::from(s.platform.code())),
+                            ],
+                        );
+                        t.row(&[
+                            s.name.clone(),
+                            s.pattern.code().to_string(),
+                            "FAILED".to_string(),
+                            "-".to_string(),
+                            "-".to_string(),
+                            "-".to_string(),
+                            fmt_secs(wall),
+                        ]);
+                        continue;
+                    }
                     Err(e) => {
                         failure = Some(e);
                         break;
@@ -260,22 +336,24 @@ fn main() -> Result<()> {
                 // `sim_cycles_per_sec` is the same number under the name
                 // the scheduler-speedup gate reads.
                 let total_cps = (o.cycles + o.baseline_cycles) as f64 / wall.max(1e-12);
-                sink.record_with(
-                    &format!("{}_{}", s.name, s.platform.code()),
-                    o.cycles,
-                    wall,
-                    &[
-                        ("cycles_per_sec", Json::Num(total_cps)),
-                        ("sim_cycles_per_sec", Json::Num(total_cps)),
-                        ("baseline_cycles", Json::from(o.baseline_cycles)),
-                        ("speedup", Json::Num(o.speedup())),
-                        ("p2p_bytes", Json::from(o.p2p_bytes)),
-                        ("dma_bytes", Json::from(o.dma_bytes)),
-                        ("flit_hops", Json::from(o.total_flits())),
-                        ("pattern", Json::from(s.pattern.code())),
-                        ("platform", Json::from(s.platform.code())),
-                    ],
-                );
+                let mut extras = vec![
+                    ("cycles_per_sec", Json::Num(total_cps)),
+                    ("sim_cycles_per_sec", Json::Num(total_cps)),
+                    ("baseline_cycles", Json::from(o.baseline_cycles)),
+                    ("speedup", Json::Num(o.speedup())),
+                    ("p2p_bytes", Json::from(o.p2p_bytes)),
+                    ("dma_bytes", Json::from(o.dma_bytes)),
+                    ("flit_hops", Json::from(o.total_flits())),
+                    ("pattern", Json::from(s.pattern.code())),
+                    ("platform", Json::from(s.platform.code())),
+                ];
+                if degraded {
+                    extras.push(("completed", Json::from(1u64)));
+                    extras.push(("dropped_flits", Json::from(o.dropped_flits)));
+                    extras.push(("socket_retries", Json::from(o.socket_retries)));
+                }
+                let point = format!("{}_{}", s.name, s.platform.code());
+                sink.record_with(&point, o.cycles, wall, &extras);
                 t.row(&[
                     s.name.clone(),
                     s.pattern.code().to_string(),

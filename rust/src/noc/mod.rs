@@ -3,6 +3,8 @@
 //!
 //! - [`flit`]: messages, flits, destination lists, header-capacity math.
 //! - [`routing`]: dimension-ordered XY + lookahead, multicast partitioning.
+//! - [`route_table`]: precomputed next hops (XY-exact when healthy,
+//!   fault-avoiding on harvested/degraded meshes).
 //! - [`router`]/[`mesh`]: the wormhole router and one physical plane.
 //! - [`planes`]: the six-plane bundle (3 coherence, 2 DMA, 1 misc).
 //!
@@ -15,13 +17,15 @@
 pub mod flit;
 pub mod mesh;
 pub mod planes;
+pub mod route_table;
 pub mod router;
 pub mod routing;
 
 pub use flit::{bits_per_dest, coord_component_bits, header_dest_capacity,
                header_dest_capacity_for, header_meta_bits, CohOp, Coord, DestList, Dir, Flit,
                Message, MsgKind, PktId, MAX_DESTS};
-pub use mesh::{Mesh, MeshParams, MeshStats};
+pub use mesh::{Mesh, MeshParams, MeshStats, StallProbe};
 pub use planes::{Noc, Plane, TickMode, NUM_PLANES};
+pub use route_table::RouteTable;
 pub use router::MAX_QUEUE_DEPTH;
 pub use routing::{branch_mask, hop_count, on_xy_path, partition_dests, xy_dir};

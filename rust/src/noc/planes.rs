@@ -6,8 +6,11 @@
 //! the three coherence message classes) never share a network.  We keep
 //! ESP's six planes and assignment.
 
-use super::flit::{Coord, Message};
-use super::mesh::{Mesh, MeshParams, MeshStats};
+use std::sync::Arc;
+
+use super::flit::{Coord, Dir, Message};
+use super::mesh::{Mesh, MeshParams, MeshStats, StallProbe};
+use super::route_table::RouteTable;
 
 /// Plane indices (fixed, as in ESP).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,12 +99,97 @@ pub const PAR_MIN_PLANES: usize = 2;
 pub struct Noc {
     meshes: Vec<Mesh>,
     mode: TickMode,
+    /// Accumulated dead routers (harvest mask + router-kill faults).  The
+    /// route table shared by all six planes is rebuilt from these sets on
+    /// every change.
+    dead_routers: Vec<Coord>,
+    /// Accumulated dead links (link-kill faults).
+    dead_links: Vec<(Coord, Dir)>,
 }
 
 impl Noc {
     /// Build all planes with identical parameters ([`TickMode::Auto`]).
     pub fn new(p: MeshParams) -> Self {
-        Self { meshes: (0..NUM_PLANES).map(|_| Mesh::new(p)).collect(), mode: TickMode::Auto }
+        Self {
+            meshes: (0..NUM_PLANES).map(|_| Mesh::new(p)).collect(),
+            mode: TickMode::Auto,
+            dead_routers: Vec::new(),
+            dead_links: Vec::new(),
+        }
+    }
+
+    /// Rebuild the shared route table from the accumulated dead sets and
+    /// install it on every plane.
+    fn rebuild_table(&mut self) {
+        let p = *self.params();
+        let table =
+            Arc::new(RouteTable::build(p.width, p.height, &self.dead_routers, &self.dead_links));
+        for m in &mut self.meshes {
+            m.set_route_table(table.clone());
+        }
+    }
+
+    /// Disable a set of routers up front (harvest mask).  Applied before
+    /// any traffic: tiles on the mask are never scheduled, injected at, or
+    /// routed through.
+    pub fn set_harvest(&mut self, dead: &[Coord]) {
+        if dead.is_empty() {
+            return;
+        }
+        self.dead_routers.extend_from_slice(dead);
+        self.rebuild_table();
+    }
+
+    /// Kill the (bidirectional) link leaving `at` in direction `dir`:
+    /// routes detour from the next cycle on, and each plane's fault drain
+    /// drops whatever the cut strands.
+    pub fn kill_link(&mut self, at: Coord, dir: Dir) {
+        assert!(dir != Dir::Local, "Local ports cannot die");
+        self.dead_links.push((at, dir));
+        self.rebuild_table();
+    }
+
+    /// Kill the router at `at`: all four links die, and everything queued
+    /// inside it (on every plane) is purged.
+    pub fn kill_router(&mut self, at: Coord) {
+        self.dead_routers.push(at);
+        self.rebuild_table();
+        for m in &mut self.meshes {
+            m.kill_router(at);
+        }
+    }
+
+    /// The route table currently in force (identical across planes).
+    pub fn route_table(&self) -> &RouteTable {
+        self.meshes[0].route_table()
+    }
+
+    /// Flits + messages dropped by fault injection, summed across planes.
+    pub fn dropped_total(&self) -> u64 {
+        self.meshes.iter().map(|m| m.stats.dropped_flits + m.stats.dropped_msgs).sum()
+    }
+
+    /// The oldest stuck flit across all planes, with the plane it is on
+    /// (quiesce-watchdog forensics).
+    pub fn oldest_stall(&self) -> Option<(Plane, StallProbe)> {
+        let mut best: Option<(Plane, StallProbe)> = None;
+        for (i, m) in self.meshes.iter().enumerate() {
+            if let Some(p) = m.oldest_stall() {
+                let older = match &best {
+                    None => true,
+                    Some((_, b)) => p.arrived < b.arrived,
+                };
+                if older {
+                    best = Some((Plane::ALL[i], p));
+                }
+            }
+        }
+        best
+    }
+
+    /// Occupied routers per plane (quiesce-watchdog forensics).
+    pub fn occupied_routers(&self, plane: Plane) -> Vec<(Coord, u32)> {
+        self.meshes[plane.idx()].occupied_routers()
     }
 
     /// Select how [`Noc::tick`] schedules the planes.
@@ -200,6 +288,8 @@ impl Noc {
             t.delivered += m.stats.delivered;
             t.injected += m.stats.injected;
             t.busy_cycles += m.stats.busy_cycles;
+            t.dropped_flits += m.stats.dropped_flits;
+            t.dropped_msgs += m.stats.dropped_msgs;
         }
         t
     }

@@ -1,0 +1,420 @@
+//! Table-driven routing: a precomputed next-hop table per mesh that
+//! reproduces dimension-ordered XY bit-exactly on a healthy mesh and
+//! routes *around* harvested routers and dead links on a degraded one.
+//!
+//! The table has two regimes:
+//!
+//! - **Pristine** ([`RouteTable::xy`]): no table memory at all — every
+//!   query delegates to the closed-form [`super::routing`] primitives, so
+//!   the no-fault hot path is byte-for-byte the seed model (this is the
+//!   "zero-cost when healthy" invariant of DESIGN.md §fault model).
+//! - **Materialized** ([`RouteTable::build`]): an `n x n` next-hop array
+//!   computed by per-destination BFS over the live subgraph.  Ties between
+//!   equally short next hops prefer the XY direction, so a materialized
+//!   table with *nothing* dead is bit-identical to XY (property-tested in
+//!   `tests/prop_fault.rs`), and a degraded table deviates only where a
+//!   route must detour.
+//!
+//! Multicast re-partitioning falls out of determinism: the next hop
+//! depends only on `(current, destination)`, so each destination's path
+//! from the packet's origin is unique and the branch set at any router is
+//! recomputable from the interned `(origin, dests)` pair — exactly the
+//! contract [`super::routing::branch_mask`] established for XY.
+//! Destinations that are unreachable on the current table simply
+//! contribute no branch (the mesh counts them as dropped at injection).
+
+use super::flit::{Coord, DestList, Dir};
+use super::routing::{branch_mask as xy_branch_mask, neighbor, xy_dir};
+
+/// Next-hop sentinel: no live path from this router to that destination.
+const UNREACHABLE: u8 = 0xFF;
+
+/// Distance sentinel for the BFS.
+const INF: u32 = u32::MAX;
+
+/// Per-mesh routing table (shared read-only across the six planes).
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    width: u8,
+    height: u8,
+    /// `None` = pristine XY fast path; `Some` = materialized table.
+    deg: Option<Degraded>,
+}
+
+/// The materialized form: next hops plus the dead sets they were built
+/// from (the mesh consults these to drain flits into a dead link).
+#[derive(Debug, Clone)]
+struct Degraded {
+    /// `next[cur * n + dest]`: [`Dir`] index, or [`UNREACHABLE`].
+    next: Box<[u8]>,
+    /// Dead (harvested or killed) routers.
+    dead_router: Box<[bool]>,
+    /// Per-router bitmask of dead *output* links (dir-index bits 0..4).
+    dead_out: Box<[u8]>,
+    /// Any router or link actually dead?  (A materialized table over a
+    /// fully healthy mesh routes exactly like XY and has no faults.)
+    faulted: bool,
+}
+
+impl RouteTable {
+    /// Pristine XY table for a `width x height` mesh (no memory, no
+    /// faults; every query is the closed-form seed primitive).
+    pub fn xy(width: u8, height: u8) -> Self {
+        Self { width, height, deg: None }
+    }
+
+    /// Materialize the table for a mesh with the given dead routers and
+    /// dead links.  Links are physical (bidirectional): killing
+    /// `(c, East)` also kills the neighbour's West output.  A dead router
+    /// implies all four of its links are dead.
+    pub fn build(
+        width: u8,
+        height: u8,
+        dead_routers: &[Coord],
+        dead_links: &[(Coord, Dir)],
+    ) -> Self {
+        let n = width as usize * height as usize;
+        let at = |c: Coord| c.0 as usize * width as usize + c.1 as usize;
+        let mut dead_router = vec![false; n].into_boxed_slice();
+        for &c in dead_routers {
+            dead_router[at(c)] = true;
+        }
+        let mut dead_out = vec![0u8; n].into_boxed_slice();
+        let mut kill = |c: Coord, d: Dir| {
+            if let Some(nb) = neighbor(c, d, width, height) {
+                if d != Dir::Local {
+                    dead_out[at(c)] |= 1 << d.idx();
+                    dead_out[at(nb)] |= 1 << d.opposite().idx();
+                }
+            }
+        };
+        for &(c, d) in dead_links {
+            kill(c, d);
+        }
+        for y in 0..height {
+            for x in 0..width {
+                if dead_router[at((y, x))] {
+                    for d in [Dir::North, Dir::South, Dir::East, Dir::West] {
+                        kill((y, x), d);
+                    }
+                }
+            }
+        }
+        let faulted = !dead_routers.is_empty() || dead_out.iter().any(|&m| m != 0);
+
+        // Per-destination BFS over the live subgraph.  Links are
+        // symmetric, so the BFS tree from `dest` gives every router's
+        // distance to `dest`; the next hop is any neighbour one step
+        // closer, preferring the XY direction (bit-exact XY when healthy).
+        let mut next = vec![UNREACHABLE; n * n].into_boxed_slice();
+        let mut dist = vec![INF; n];
+        let mut queue = Vec::with_capacity(n);
+        for dy in 0..height {
+            for dx in 0..width {
+                let dest = (dy, dx);
+                let di = at(dest);
+                if dead_router[di] {
+                    continue;
+                }
+                dist.iter_mut().for_each(|d| *d = INF);
+                dist[di] = 0;
+                queue.clear();
+                queue.push(dest);
+                let mut head = 0;
+                while head < queue.len() {
+                    let c = queue[head];
+                    head += 1;
+                    for d in [Dir::North, Dir::South, Dir::East, Dir::West] {
+                        if dead_out[at(c)] & (1 << d.idx()) != 0 {
+                            continue;
+                        }
+                        let Some(nb) = neighbor(c, d, width, height) else { continue };
+                        if dead_router[at(nb)] || dist[at(nb)] != INF {
+                            continue;
+                        }
+                        dist[at(nb)] = dist[at(c)] + 1;
+                        queue.push(nb);
+                    }
+                }
+                for cy in 0..height {
+                    for cx in 0..width {
+                        let cur = (cy, cx);
+                        let ci = at(cur);
+                        if dead_router[ci] || dist[ci] == INF {
+                            continue;
+                        }
+                        if cur == dest {
+                            next[ci * n + di] = Dir::Local.idx() as u8;
+                            continue;
+                        }
+                        let step_down = |dir: Dir| {
+                            if dead_out[ci] & (1 << dir.idx()) != 0 {
+                                return false;
+                            }
+                            neighbor(cur, dir, width, height)
+                                .is_some_and(|nb| dist[at(nb)] == dist[ci] - 1)
+                        };
+                        let xy = xy_dir(cur, dest);
+                        let pick = if step_down(xy) {
+                            xy
+                        } else {
+                            *[Dir::North, Dir::South, Dir::East, Dir::West]
+                                .iter()
+                                .find(|&&d| step_down(d))
+                                .expect("BFS-reachable router must have a downhill neighbour")
+                        };
+                        next[ci * n + di] = pick.idx() as u8;
+                    }
+                }
+            }
+        }
+        Self { width, height, deg: Some(Degraded { next, dead_router, dead_out, faulted }) }
+    }
+
+    /// Mesh width.
+    pub fn width(&self) -> u8 {
+        self.width
+    }
+
+    /// Mesh height.
+    pub fn height(&self) -> u8 {
+        self.height
+    }
+
+    /// Any dead router or link in this table?
+    pub fn has_faults(&self) -> bool {
+        self.deg.as_ref().is_some_and(|d| d.faulted)
+    }
+
+    /// Is router `c` dead (harvested or killed)?
+    #[inline]
+    pub fn router_dead(&self, c: Coord) -> bool {
+        match &self.deg {
+            None => false,
+            Some(d) => d.dead_router[self.at(c)],
+        }
+    }
+
+    /// Is the output link of router `c` in direction `d` dead?  `Local`
+    /// ports never die (ejection is internal to the tile).
+    #[inline]
+    pub fn link_dead(&self, c: Coord, d: Dir) -> bool {
+        match &self.deg {
+            None => false,
+            Some(deg) => d != Dir::Local && deg.dead_out[self.at(c)] & (1 << d.idx()) != 0,
+        }
+    }
+
+    /// Next-hop direction from `cur` towards `dest` (`Local` when
+    /// `cur == dest`), or `None` when no live path exists.
+    #[inline]
+    pub fn dir(&self, cur: Coord, dest: Coord) -> Option<Dir> {
+        match &self.deg {
+            None => Some(xy_dir(cur, dest)),
+            Some(deg) => {
+                let n = self.width as usize * self.height as usize;
+                match deg.next[self.at(cur) * n + self.at(dest)] {
+                    UNREACHABLE => None,
+                    d => Some(Dir::ALL[d as usize]),
+                }
+            }
+        }
+    }
+
+    /// Can traffic injected at `src` reach `dest` on this table?
+    pub fn reachable(&self, src: Coord, dest: Coord) -> bool {
+        src == dest || self.dir(src, dest).is_some_and(|d| d != Dir::Local)
+    }
+
+    /// Output-port mask the header flit of packet `(origin, dests)` claims
+    /// at router `cur` — the table-driven counterpart of
+    /// [`super::routing::branch_mask`].  Destinations whose path does not
+    /// visit `cur` (or that are unreachable) contribute nothing.
+    pub fn branch_mask(&self, cur: Coord, origin: Coord, dests: &DestList) -> u8 {
+        if self.deg.is_none() {
+            return xy_branch_mask(cur, origin, dests);
+        }
+        let mut mask = 0u8;
+        let cap = self.width as u32 * self.height as u32;
+        for dest in dests.iter() {
+            // Walk origin's (unique) table path; if it visits `cur`, the
+            // branch for `dest` leaves through `cur`'s next hop.
+            let mut c = origin;
+            let mut hops = 0u32;
+            loop {
+                if c == cur {
+                    if let Some(d) = self.dir(cur, dest) {
+                        mask |= 1 << d.idx();
+                    }
+                    break;
+                }
+                if c == dest {
+                    break;
+                }
+                match self.dir(c, dest) {
+                    Some(d) if d != Dir::Local => {
+                        c = neighbor(c, d, self.width, self.height)
+                            .expect("route table never routes off the mesh edge");
+                    }
+                    _ => break,
+                }
+                hops += 1;
+                if hops > cap {
+                    break; // defensive: a (never expected) routing loop
+                }
+            }
+        }
+        mask
+    }
+
+    #[inline]
+    fn at(&self, c: Coord) -> usize {
+        c.0 as usize * self.width as usize + c.1 as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::routing::partition_dests;
+    use super::*;
+
+    #[test]
+    fn pristine_delegates_to_xy() {
+        let t = RouteTable::xy(4, 3);
+        assert!(!t.has_faults());
+        for cy in 0..3 {
+            for cx in 0..4 {
+                for dy in 0..3 {
+                    for dx in 0..4 {
+                        let (c, d) = ((cy, cx), (dy, dx));
+                        assert_eq!(t.dir(c, d), Some(xy_dir(c, d)));
+                        assert!(t.reachable(c, d));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_clean_table_is_bit_exact_xy() {
+        for (w, h) in [(2u8, 2u8), (4, 3), (5, 5), (8, 8)] {
+            let t = RouteTable::build(w, h, &[], &[]);
+            assert!(!t.has_faults(), "nothing dead");
+            for cy in 0..h {
+                for cx in 0..w {
+                    for dy in 0..h {
+                        for dx in 0..w {
+                            let (c, d) = ((cy, cx), (dy, dx));
+                            assert_eq!(t.dir(c, d), Some(xy_dir(c, d)), "{c:?}->{d:?}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_clean_branch_mask_matches_partition() {
+        let t = RouteTable::build(3, 3, &[], &[]);
+        let dests = DestList::from_slice(&[(0, 2), (2, 2), (1, 0), (1, 1), (2, 0), (0, 0)]);
+        for cy in 0..3 {
+            for cx in 0..3 {
+                let cur = (cy, cx);
+                assert_eq!(
+                    t.branch_mask(cur, (1, 1), &dests),
+                    xy_branch_mask(cur, (1, 1), &dests),
+                    "at {cur:?}"
+                );
+                // And against the materialized seed partitioner along the
+                // actual replication tree rooted at the origin.
+                if cur == (1, 1) {
+                    let (mask, _) = partition_dests(cur, &dests);
+                    assert_eq!(t.branch_mask(cur, cur, &dests), mask);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routes_detour_around_a_dead_router() {
+        // Kill the center of a 3x3: (0,0) -> (0,2) still goes straight,
+        // but (1,0) -> (1,2) must detour around (1,1).
+        let t = RouteTable::build(3, 3, &[(1, 1)], &[]);
+        assert!(t.has_faults());
+        assert!(t.router_dead((1, 1)));
+        assert_eq!(t.dir((0, 0), (0, 2)), Some(Dir::East));
+        let first = t.dir((1, 0), (1, 2)).unwrap();
+        assert_ne!(first, Dir::East, "East leads into the dead router");
+        // Walk the full path and assert it never touches the dead router.
+        let mut c = (1, 0);
+        let mut hops = 0;
+        while c != (1, 2) {
+            let d = t.dir(c, (1, 2)).unwrap();
+            c = neighbor(c, d, 3, 3).unwrap();
+            assert_ne!(c, (1, 1), "path crosses the dead router");
+            hops += 1;
+            assert!(hops <= 9, "path too long");
+        }
+        assert_eq!(hops, 4, "detour is the shortest live path");
+        // The dead router itself is unreachable, with a diagnostic `None`.
+        assert_eq!(t.dir((0, 0), (1, 1)), None);
+        assert!(!t.reachable((0, 0), (1, 1)));
+    }
+
+    #[test]
+    fn dead_link_is_symmetric_and_detoured() {
+        let t = RouteTable::build(3, 1, &[], &[((0, 0), Dir::East)]);
+        assert!(t.link_dead((0, 0), Dir::East));
+        assert!(t.link_dead((0, 1), Dir::West), "links die in both directions");
+        // A 1-row mesh has no detour: the far side becomes unreachable.
+        assert!(!t.reachable((0, 0), (0, 2)));
+        assert!(t.reachable((0, 1), (0, 2)));
+        // On a 2-row mesh the same cut detours through the second row.
+        let t2 = RouteTable::build(3, 2, &[], &[((0, 0), Dir::East)]);
+        assert!(t2.reachable((0, 0), (0, 2)));
+        let mut c = (0, 0);
+        let mut hops = 0;
+        while c != (0, 2) {
+            let d = t2.dir(c, (0, 2)).unwrap();
+            assert!(!t2.link_dead(c, d), "route crosses the dead link");
+            c = neighbor(c, d, 3, 2).unwrap();
+            hops += 1;
+            assert!(hops <= 6);
+        }
+        assert_eq!(hops, 4);
+    }
+
+    #[test]
+    fn harvested_row_keeps_the_rest_connected() {
+        // One dead row mid-mesh: everything above/below it detours...
+        // no — a full dead row *disconnects* top from bottom.  That is the
+        // diagnostic the config validator surfaces; check the table agrees.
+        let dead: Vec<Coord> = (0..4).map(|x| (1, x)).collect();
+        let t = RouteTable::build(4, 3, &dead, &[]);
+        assert!(!t.reachable((0, 0), (2, 0)), "full dead row cuts the mesh");
+        // A dead row with one survivor keeps it connected through the gap.
+        let mostly: Vec<Coord> = (1..4).map(|x| (1, x)).collect();
+        let t2 = RouteTable::build(4, 3, &mostly, &[]);
+        assert!(t2.reachable((0, 3), (2, 3)));
+        let mut c = (0, 3);
+        let mut hops = 0;
+        while c != (2, 3) {
+            let d = t2.dir(c, (2, 3)).unwrap();
+            c = neighbor(c, d, 4, 3).unwrap();
+            assert!(!t2.router_dead(c));
+            hops += 1;
+            assert!(hops <= 12);
+        }
+        assert_eq!(hops, 8, "down through the (1,0) gap and back");
+    }
+
+    #[test]
+    fn unreachable_dest_contributes_no_branch() {
+        let t = RouteTable::build(3, 1, &[], &[((0, 0), Dir::East)]);
+        // Multicast from (0,0) to both sides of the cut: only the live
+        // destination gets a branch.
+        let dests = DestList::from_slice(&[(0, 0), (0, 2)]);
+        let mask = t.branch_mask((0, 0), (0, 0), &dests);
+        assert_eq!(mask, 1 << Dir::Local.idx(), "only the local delivery survives");
+    }
+}

@@ -127,6 +127,10 @@ pub struct Router {
     pub in_branches: [u8; 5],
     /// True when input port `i` holds a *buffered* (forked) packet.
     pub in_buffered: [bool; 5],
+    /// True when input port `i` is draining a doomed packet: its head was
+    /// dropped by fault injection, so the remaining flits (through the
+    /// tail) are discarded as they arrive.  Never set on a healthy mesh.
+    pub in_dropping: [bool; 5],
     /// Replication buffer per output port (forked packets only).
     pub branch_q: [VecDeque<Slot>; 5],
     /// Flits currently queued here (inq + branch_q), kept incrementally so
@@ -145,6 +149,7 @@ impl Router {
             out_alloc: [None; 5],
             in_branches: [0; 5],
             in_buffered: [false; 5],
+            in_dropping: [false; 5],
             branch_q: Default::default(),
             occupancy: 0,
             flits_forwarded: 0,

@@ -82,6 +82,11 @@ pub struct SocketStats {
     pub p2p_write_bytes: u64,
     /// Read/write control beats accepted.
     pub bursts: u64,
+    /// Sub-requests re-sent after a response timeout (degraded mode only;
+    /// always 0 while `retry_timeout == 0`).
+    pub retries: u64,
+    /// Stale responses dropped: duplicate answers to retried requests.
+    pub stale_drops: u64,
 }
 
 /// An outstanding P2P pull on the consumer side.
@@ -91,6 +96,25 @@ struct P2pRead {
     plm_addr: u32,
     len: u32,
     received: u32,
+    /// Retry bookkeeping (meaningful only when `retry_timeout > 0`):
+    /// re-request deadline (`u64::MAX` = retry off or given up), number of
+    /// re-requests sent, and bytes seen at the last progress check — a
+    /// stream that keeps flowing never times out.
+    deadline: u64,
+    tries: u32,
+    last_seen: u32,
+}
+
+/// One in-flight DMA sub-request armed for bounded retry: the cloned
+/// message is re-sent when its response deadline passes, up to
+/// `max_retries` times, after which the socket latches a fault.
+#[derive(Debug)]
+struct RetryEntry {
+    wire: u32,
+    deadline: u64,
+    tries: u32,
+    plane: Plane,
+    msg: Message,
 }
 
 /// The accelerator socket for one `(tile, slot)`.
@@ -120,10 +144,19 @@ pub struct Socket {
     done: TagSet,
     /// Memory-read subrequests: wire tag -> (txn tag, plm offset, len).
     mem_rd_sub: HashMap<u32, (u32, u32, u32)>,
+    /// Memory-write subrequests: wire tag -> txn tag.
+    mem_wr_sub: HashMap<u32, u32>,
     /// Outstanding bytes per read txn.
     rd_remaining: HashMap<u32, u32>,
     /// Outstanding acks per write txn.
     wr_remaining: HashMap<u32, u32>,
+    /// Sub-requests armed for bounded retry (empty while
+    /// `retry_timeout == 0`: the healthy path never touches this).
+    retry_q: Vec<RetryEntry>,
+    /// Latched blackhole diagnosis: set when a request exhausts its
+    /// retries, after which the socket parks and the quiesce watchdog
+    /// quotes this string as the failure cause.
+    fault: Option<String>,
     /// Consumer-side P2P pulls, FIFO per (producer, slot).
     p2p_rd: HashMap<(Coord, u8), VecDeque<P2pRead>>,
     /// Outstanding consumer-side pulls (cheap quiescence check).
@@ -165,8 +198,11 @@ impl Socket {
             next_wire: 0,
             done: TagSet::default(),
             mem_rd_sub: HashMap::new(),
+            mem_wr_sub: HashMap::new(),
             rd_remaining: HashMap::new(),
             wr_remaining: HashMap::new(),
+            retry_q: Vec::new(),
+            fault: None,
             p2p_rd: HashMap::new(),
             p2p_rd_outstanding: 0,
             p2p: P2pUnit::default(),
@@ -243,6 +279,12 @@ impl Socket {
         self.p2p.reset();
         self.p2p_rd.clear();
         self.p2p_rd_outstanding = 0;
+        self.retry_q.clear();
+    }
+
+    /// The latched blackhole diagnosis, if a request exhausted its retries.
+    pub fn fault(&self) -> Option<&str> {
+        self.fault.as_deref()
     }
 
     /// Would a tick do anything right now?  (Fast path for idle sockets;
@@ -253,6 +295,9 @@ impl Socket {
             || self.p2p.pending_bursts() > 0
             || !self.delayed.is_empty()
             || !self.out.is_empty()
+            || (self.cfg.retry_timeout > 0
+                && self.fault.is_none()
+                && (!self.retry_q.is_empty() || self.p2p_rd_outstanding > 0))
     }
 
     /// Handle a NoC message addressed to this socket.  `plm` is the
@@ -260,9 +305,16 @@ impl Socket {
     pub fn handle_msg(&mut self, msg: &Message, plm: &mut [u8]) {
         match msg.kind {
             MsgKind::DmaReadRsp { tag, slot } if slot == self.slot => {
-                let (txn, plm_addr, len) =
-                    *self.mem_rd_sub.get(&tag).expect("unknown DMA read sub-tag");
+                let Some(&(txn, plm_addr, len)) = self.mem_rd_sub.get(&tag) else {
+                    // Duplicate answer to a retried read (the original and
+                    // the re-sent request both got through): drop it.  On a
+                    // healthy mesh an unknown sub-tag is a protocol bug.
+                    assert!(self.cfg.retry_timeout > 0, "unknown DMA read sub-tag");
+                    self.stats.stale_drops += 1;
+                    return;
+                };
                 self.mem_rd_sub.remove(&tag);
+                self.clear_retry(tag);
                 assert_eq!(msg.payload.len() as u32, len, "short DMA read");
                 plm[plm_addr as usize..(plm_addr + len) as usize]
                     .copy_from_slice(&msg.payload);
@@ -275,11 +327,18 @@ impl Socket {
                 }
             }
             MsgKind::DmaWriteAck { tag, slot } if slot == self.slot => {
-                let rem = self.wr_remaining.get_mut(&tag).expect("unknown write ack");
+                let Some(txn) = self.mem_wr_sub.remove(&tag) else {
+                    // Duplicate ack to a retried write sub-request: drop it.
+                    assert!(self.cfg.retry_timeout > 0, "unknown write ack");
+                    self.stats.stale_drops += 1;
+                    return;
+                };
+                self.clear_retry(tag);
+                let rem = self.wr_remaining.get_mut(&txn).expect("unknown write txn");
                 *rem -= 1;
                 if *rem == 0 {
-                    self.wr_remaining.remove(&tag);
-                    self.done.insert(tag);
+                    self.wr_remaining.remove(&txn);
+                    self.done.insert(txn);
                 }
             }
             MsgKind::P2pReq { len, prod_slot, cons_slot } if prod_slot == self.slot => {
@@ -294,6 +353,12 @@ impl Socket {
                 let mut off = 0usize;
                 while off < msg.payload.len() {
                     let Some(txn) = q.front_mut() else {
+                        if self.cfg.retry_timeout > 0 {
+                            // Over-delivery from a re-requested pull whose
+                            // original data also arrived: drop the excess.
+                            self.stats.stale_drops += (msg.payload.len() - off) as u64;
+                            break;
+                        }
                         panic!(
                             "P2P data beyond outstanding requests at {:?}.{} from {:?}",
                             self.coord, self.slot, key
@@ -337,6 +402,11 @@ impl Socket {
                     .regs
                     .lookup_src(rc.user)
                     .unwrap_or_else(|| panic!("source LUT entry {} not set", rc.user));
+                let deadline = if self.cfg.retry_timeout > 0 {
+                    now + self.cfg.retry_timeout as u64
+                } else {
+                    u64::MAX
+                };
                 self.p2p_rd
                     .entry((prod, prod_slot))
                     .or_default()
@@ -345,6 +415,9 @@ impl Socket {
                         plm_addr: rc.plm_addr,
                         len: rc.len,
                         received: 0,
+                        deadline,
+                        tries: 0,
+                        last_seen: 0,
                     });
                 self.p2p_rd_outstanding += 1;
                 let kind =
@@ -390,12 +463,141 @@ impl Socket {
                 }
             }
         }
+        // Bounded retry: re-send timed-out sub-requests (degraded meshes
+        // only — `retry_timeout == 0` skips all of this).
+        if self.cfg.retry_timeout > 0 && self.fault.is_none() {
+            self.tick_retries(now);
+        }
         if completed_tags || !self.rd_ctrl.is_empty() || !self.wr_ctrl.is_empty() {
             return Wake::Busy; // one control beat accepted per cycle
         }
-        match self.delayed.iter().map(|d| d.0).min() {
+        let mut next = self.delayed.iter().map(|d| d.0).min();
+        if self.cfg.retry_timeout > 0 && self.fault.is_none() {
+            let retry_next = self
+                .retry_q
+                .iter()
+                .map(|e| e.deadline)
+                .chain(self.p2p_rd.values().flatten().map(|t| t.deadline))
+                .filter(|&d| d != u64::MAX)
+                .min();
+            next = match (next, retry_next) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        match next {
             Some(ready) => Wake::at(now, ready),
             None => Wake::Parked,
+        }
+    }
+
+    /// Re-send sub-requests whose response deadline has passed; after
+    /// `max_retries` unanswered sends, latch a blackhole fault naming the
+    /// stuck transaction and stop retrying (the quiesce watchdog reports
+    /// it).  Only called when `retry_timeout > 0`.
+    #[cold]
+    fn tick_retries(&mut self, now: u64) {
+        let timeout = self.cfg.retry_timeout as u64;
+        // DMA read/write sub-requests: each wire either completes (its
+        // entry is removed on response) or times out and is re-sent.
+        let mut i = 0;
+        while i < self.retry_q.len() {
+            if self.retry_q[i].deadline > now {
+                i += 1;
+                continue;
+            }
+            if self.retry_q[i].tries >= self.cfg.max_retries {
+                let e = self.retry_q.swap_remove(i);
+                self.set_fault(format!(
+                    "{:?}.{}: DMA sub-request wire {} to {:?} unanswered after {} retries",
+                    self.coord,
+                    self.slot,
+                    e.wire,
+                    e.msg.dests.iter().next().unwrap_or(self.mem_tile),
+                    e.tries,
+                ));
+                continue;
+            }
+            let e = &mut self.retry_q[i];
+            e.tries += 1;
+            e.deadline = now + timeout;
+            self.stats.retries += 1;
+            self.out.push((e.plane, e.msg.clone()));
+            i += 1;
+        }
+        // P2P pulls: only the stream head is in flight; progress re-arms
+        // the deadline, so only a genuinely stalled stream re-requests the
+        // remainder (duplicate deliveries are dropped by `handle_msg`).
+        // Keys are sorted so re-request order is deterministic.
+        let mut keys: Vec<(Coord, u8)> = self.p2p_rd.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            let (prod, prod_slot) = key;
+            let Some(q) = self.p2p_rd.get_mut(&key) else { continue };
+            let Some(t) = q.front_mut() else { continue };
+            if t.received > t.last_seen {
+                t.last_seen = t.received;
+                t.deadline = now + timeout;
+                continue;
+            }
+            if t.deadline > now {
+                continue;
+            }
+            if t.tries >= self.cfg.max_retries {
+                t.deadline = u64::MAX;
+                let fault = format!(
+                    "{:?}.{}: P2P pull of {} bytes from {:?}.{} stalled at {}/{} after {} \
+                     re-requests",
+                    self.coord, self.slot, t.len, prod, prod_slot, t.received, t.len, t.tries,
+                );
+                self.set_fault(fault);
+                continue;
+            }
+            t.tries += 1;
+            t.deadline = now + timeout;
+            let kind = MsgKind::P2pReq {
+                len: t.len - t.received,
+                prod_slot,
+                cons_slot: self.slot,
+            };
+            self.stats.retries += 1;
+            self.out.push((Plane::DmaReq, Message::ctrl(self.coord, prod, kind)));
+        }
+    }
+
+    /// Latch the first fault diagnosis (later ones add no information).
+    fn set_fault(&mut self, cause: String) {
+        if self.fault.is_none() {
+            self.fault = Some(cause);
+        }
+    }
+
+    /// Drop the retry entry for a completed wire, if retry is armed.
+    fn clear_retry(&mut self, wire: u32) {
+        if self.cfg.retry_timeout == 0 {
+            return;
+        }
+        if let Some(i) = self.retry_q.iter().position(|e| e.wire == wire) {
+            self.retry_q.swap_remove(i);
+        }
+    }
+
+    /// Queue a DMA sub-request for sending (after `penalty` cycles when a
+    /// TLB walk delayed it) and arm its retry timer when retry is enabled.
+    fn push_req(&mut self, now: u64, penalty: u32, msg: Message, wire: u32) {
+        if self.cfg.retry_timeout > 0 {
+            self.retry_q.push(RetryEntry {
+                wire,
+                deadline: now + penalty as u64 + self.cfg.retry_timeout as u64,
+                tries: 0,
+                plane: Plane::DmaReq,
+                msg: msg.clone(),
+            });
+        }
+        if penalty == 0 {
+            self.out.push((Plane::DmaReq, msg));
+        } else {
+            self.delayed.push((now + penalty as u64, Plane::DmaReq, msg));
         }
     }
 
@@ -413,11 +615,7 @@ impl Socket {
             self.mem_rd_sub.insert(wire, (rc.tag, plm_addr, chunk));
             let kind = MsgKind::DmaReadReq { addr: phys, len: chunk, tag: wire, slot: self.slot };
             let msg = Message::ctrl(self.coord, self.mem_tile, kind);
-            if penalty == 0 {
-                self.out.push((Plane::DmaReq, msg));
-            } else {
-                self.delayed.push((now + penalty as u64, Plane::DmaReq, msg));
-            }
+            self.push_req(now, penalty, msg, wire);
             vaddr += chunk as u64;
             plm_addr += chunk;
             left -= chunk;
@@ -435,14 +633,14 @@ impl Socket {
             let (phys, miss) = self.tlb.translate(vaddr).expect("unmapped accelerator vaddr");
             penalty += miss;
             let payload = Arc::new(data[off as usize..(off + chunk) as usize].to_vec());
+            // Each sub-request carries its own wire tag (not the txn tag)
+            // so acks — and retried acks — match one sub exactly.
+            let wire = self.alloc_wire();
+            self.mem_wr_sub.insert(wire, wc.tag);
             let kind =
-                MsgKind::DmaWriteReq { addr: phys, len: chunk, tag: wc.tag, slot: self.slot };
+                MsgKind::DmaWriteReq { addr: phys, len: chunk, tag: wire, slot: self.slot };
             let msg = Message::data(self.coord, self.mem_tile, kind, payload);
-            if penalty == 0 {
-                self.out.push((Plane::DmaReq, msg));
-            } else {
-                self.delayed.push((now + penalty as u64, Plane::DmaReq, msg));
-            }
+            self.push_req(now, penalty, msg, wire);
             self.stats.dma_write_bytes += chunk as u64;
             vaddr += chunk as u64;
             off += chunk;
@@ -512,11 +710,12 @@ mod tests {
         s.tick(0, &mut plm);
         let out = s.drain_out();
         assert_eq!(out.len(), 1);
-        let MsgKind::DmaWriteReq { addr, len, .. } = out[0].1.kind else { panic!() };
+        let MsgKind::DmaWriteReq { addr, len, tag: wire, .. } = out[0].1.kind else { panic!() };
         assert_eq!((addr, len), (0x10000 + 4096, 512));
         assert_eq!(out[0].1.payload.len(), 512);
         assert!(!s.is_done(tag));
-        let ack = Message::ctrl((0, 3), (1, 1), MsgKind::DmaWriteAck { tag, slot: 0 });
+        // The ack echoes the request's wire tag, not the txn tag.
+        let ack = Message::ctrl((0, 3), (1, 1), MsgKind::DmaWriteAck { tag: wire, slot: 0 });
         s.handle_msg(&ack, &mut plm);
         assert!(s.is_done(tag));
     }
@@ -618,6 +817,93 @@ mod tests {
     fn tag_none_always_done() {
         let s = socket();
         assert!(s.is_done(TAG_NONE));
+    }
+
+    fn retry_socket(timeout: u32, max_retries: u32) -> Socket {
+        let cfg = AccConfig { retry_timeout: timeout, max_retries, ..AccConfig::default() };
+        let mut s = Socket::new((1, 1), 0, 3, cfg, (0, 3), (0, 0), 16);
+        s.tlb.map_linear(0x10000, 1 << 20);
+        s
+    }
+
+    #[test]
+    fn lost_read_is_resent_and_completes() {
+        let mut s = retry_socket(10, 3);
+        let mut plm = vec![0u8; 64 << 10];
+        let tag = s.submit_read(0, 64, 0, 0).unwrap();
+        s.tick(0, &mut plm);
+        let first = s.drain_out();
+        assert_eq!(first.len(), 1);
+        // Pretend the request vanished on a dead link.  At the deadline the
+        // socket re-sends the identical message.
+        let w = s.tick(10, &mut plm);
+        let resent = s.drain_out();
+        assert_eq!(resent.len(), 1, "timed-out sub-request re-sent");
+        assert_eq!(s.stats.retries, 1);
+        assert!(!matches!(w, crate::sched::Wake::Parked), "armed retry keeps a deadline");
+        let MsgKind::DmaReadReq { tag: wire, len, .. } = resent[0].1.kind else { panic!() };
+        assert_eq!(resent[0].1.kind, first[0].1.kind, "retry is byte-identical");
+        let rsp = Message::data(
+            (0, 3),
+            (1, 1),
+            MsgKind::DmaReadRsp { tag: wire, slot: 0 },
+            Arc::new(vec![5; len as usize]),
+        );
+        s.handle_msg(&rsp, &mut plm);
+        assert!(s.is_done(tag) && s.quiescent() && s.fault().is_none());
+        // A straggling duplicate of the original response is dropped.
+        s.handle_msg(&rsp, &mut plm);
+        assert_eq!(s.stats.stale_drops, 1);
+    }
+
+    #[test]
+    fn exhausted_retries_latch_a_fault() {
+        let mut s = retry_socket(5, 2);
+        let mut plm = vec![0u8; 64 << 10];
+        s.submit_write(0, 64, 0, 0).unwrap();
+        s.tick(0, &mut plm);
+        s.drain_out();
+        let mut now = 0;
+        while s.fault().is_none() && now < 100 {
+            now += 5;
+            s.tick(now, &mut plm);
+            s.drain_out();
+        }
+        let cause = s.fault().expect("fault latched after retries exhausted");
+        assert!(cause.contains("unanswered after 2 retries"), "got: {cause}");
+        assert_eq!(s.stats.retries, 2);
+        assert!(!s.quiescent(), "a blackholed txn never completes");
+        assert!(matches!(s.tick(now + 5, &mut plm), crate::sched::Wake::Parked));
+    }
+
+    #[test]
+    fn stalled_p2p_pull_rerequests_remainder() {
+        let mut s = retry_socket(8, 3);
+        let mut plm = vec![0u8; 64 << 10];
+        s.regs.write(regs::regno::SRC_LUT + 2, pack_src((2, 2), 1));
+        s.submit_read(0, 1024, 2, 0).unwrap();
+        s.tick(0, &mut plm);
+        let out = s.drain_out();
+        assert!(matches!(out[0].1.kind, MsgKind::P2pReq { len: 1024, .. }));
+        // Half the stream arrives, then the link dies.
+        let mut m = Message::data(
+            (2, 2),
+            (1, 1),
+            MsgKind::P2pData { seq: 0, prod_slot: 1 },
+            Arc::new(vec![3u8; 512]),
+        );
+        m.cons_slots = p2p::encode_cons_slots(&[(1, 1)], &[((1, 1), 0)]);
+        s.handle_msg(&m, &mut plm);
+        // First post-progress tick re-arms the deadline instead of retrying.
+        s.tick(9, &mut plm);
+        assert!(s.drain_out().is_empty(), "progress re-arms the timer");
+        // No further progress: the socket re-requests only the remainder.
+        s.tick(17, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        let MsgKind::P2pReq { len, .. } = out[0].1.kind else { panic!() };
+        assert_eq!(len, 512, "re-request asks for the missing bytes only");
+        assert_eq!(s.stats.retries, 1);
     }
 
     #[test]

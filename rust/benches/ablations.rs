@@ -5,7 +5,8 @@
 //! 3. NoC bitwidth on a fixed multicast workload (64/128/256);
 //! 4. sequential vs concurrent baseline host model;
 //! 5. multicast fork vs serial unicast NoC cost (flit-hops);
-//! 6. coherence-flag sync vs IRQ round trip latency.
+//! 6. coherence-flag sync vs IRQ round trip latency;
+//! 9. serial vs thread-pooled simulation farm (sims/sec scaling).
 //!
 //! ```text
 //! cargo bench --bench ablations
@@ -15,7 +16,8 @@
 
 use espsim::config::SocConfig;
 use espsim::coordinator::experiments::{run_fig6_point, run_multicast, Fig6Options};
-use espsim::coordinator::scenario::{Pattern, Platform, Scenario};
+use espsim::coordinator::farm::{expand_seeds, run_farm};
+use espsim::coordinator::scenario::{builtin_scenarios, Pattern, Platform, Scenario};
 use espsim::coordinator::Soc;
 use espsim::noc::{DestList, Mesh, MeshParams, Message, MsgKind};
 use espsim::sched::SchedMode;
@@ -284,6 +286,56 @@ fn sched_scan_vs_worklist(sink: &mut BenchJson) {
     }
 }
 
+fn farm_scaling(sink: &mut BenchJson) {
+    println!("\n== ablation 9: simulation farm, serial vs thread pool ==");
+    println!("   (8x8 registry x 4 seeds; outcomes must be byte-identical)");
+    let mut registry = builtin_scenarios(Platform::Mesh8x8);
+    for s in &mut registry {
+        s.bytes = 8 << 10;
+    }
+    let batch = expand_seeds(&registry, 4);
+    let serial = run_farm(&batch, 1);
+    let farmed = run_farm(&batch, 0); // one worker per core
+    for (i, (a, b)) in serial.results.iter().zip(&farmed.results).enumerate() {
+        let (a, b) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "farm diverged from serial on slot {i} ({})",
+            batch[i].name
+        );
+    }
+    let t = Table::new(&["jobs", "sims", "wall", "sims/sec", "scaling"], &[6, 6, 9, 10, 8]);
+    for run in [&serial, &farmed] {
+        t.row(&[
+            format!("{}", run.jobs),
+            format!("{}", run.completed()),
+            fmt_secs(run.wall_s),
+            format!("{:.2}", run.sims_per_sec()),
+            format!("{:.2}x", run.sims_per_sec() / serial.sims_per_sec().max(1e-12)),
+        ]);
+    }
+    // Same batch either way, so the recorded sim-cycle total is identical
+    // and only the wall-clock family (sims_per_sec) distinguishes them.
+    let sim_cycles: u64 = serial
+        .results
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok())
+        .map(|o| o.cycles + o.baseline_cycles)
+        .sum();
+    for (label, run) in [("serial", &serial), ("farm", &farmed)] {
+        sink.record_with(
+            &format!("ablation9_farm_{label}_8x8x4seeds"),
+            sim_cycles,
+            run.wall_s,
+            &[
+                ("sims_per_sec", Json::Num(run.sims_per_sec())),
+                ("jobs", Json::from(run.jobs as u64)),
+            ],
+        );
+    }
+}
+
 fn main() {
     let mut sink = BenchJson::from_args("ablations");
     buffering(&mut sink);
@@ -294,5 +346,6 @@ fn main() {
     sync_latency();
     workload_shapes();
     sched_scan_vs_worklist(&mut sink);
+    farm_scaling(&mut sink);
     sink.finish();
 }

@@ -1,0 +1,256 @@
+//! The batch simulation farm: thread-pooled scenario/seed sweeps.
+//!
+//! One [`Scenario::run`] is a single-threaded, self-contained simulation:
+//! it builds its own [`Soc`]s (NoC, tiles, sockets, route tables, fault
+//! plans — all owned data, no shared mutable state), runs both lowerings,
+//! and returns an [`Outcome`].  That self-containment is what makes the
+//! farm trivial to make correct: independent (scenario, seed, sched-mode,
+//! tick-mode, harvest/fault) points are embarrassingly parallel, so
+//! [`run_farm`] fans a batch out across a scoped thread pool and a
+//! Monte-Carlo sweep of hundreds of seeded replicas ([`expand_seeds`])
+//! costs one serial sim's wall-clock per `sims / jobs`.
+//!
+//! Determinism contract: the result vector is **collected by input index,
+//! not by completion order** — `results[i]` is always `scenarios[i]`'s
+//! outcome, whatever the worker interleaving was — and each sim is
+//! per-run deterministic (`tests/scenario_determinism.rs`), so a farmed
+//! batch is byte-identical to a serial one in every [`Outcome`] field.
+//! Only wall-clock-derived numbers (`FarmResult::wall_s`, the batch
+//! [`FarmRun::sims_per_sec`], and the `cycles_per_sec` family computed
+//! from them) may differ between `jobs = 1` and `jobs = N`;
+//! `tests/farm_equivalence.rs` pins exactly this split.
+//!
+//! The `Send` boundary is structural: [`Soc`] and everything it owns are
+//! plain owned data (no `Rc`, no `RefCell`, no raw pointers), so `Send`
+//! is automatic and the compile-time assertion below turns any future
+//! regression (a cached `Rc`, a thread-local handle) into a build error
+//! at the declaration site instead of a cryptic one at the spawn.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::scenario::{Outcome, Scenario};
+use crate::coordinator::Soc;
+use crate::util::bench::time_once;
+
+// Compile-time pin of the farm's `Send`/`Sync` boundary.  The scoped
+// spawn in `run_farm` enforces the same bounds, but this names the exact
+// types the contract covers — break one and the error lands here.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    const fn assert_sync<T: Sync>() {}
+    assert_send::<Soc>();
+    assert_send::<Scenario>();
+    assert_sync::<Scenario>();
+    assert_send::<Outcome>();
+};
+
+/// One slot of a farmed batch: `results[i]` of [`FarmRun`] belongs to
+/// `scenarios[i]` of the input, whatever order the workers finished in.
+pub struct FarmResult {
+    /// The sim's outcome (or its structured failure, kept in-slot so one
+    /// bad point cannot poison its neighbors).
+    pub outcome: Result<Outcome>,
+    /// Wall-clock seconds this one sim took on its worker (both
+    /// lowerings) — scheduler-dependent, excluded from equivalence.
+    pub wall_s: f64,
+}
+
+/// A completed farm batch.
+pub struct FarmRun {
+    /// Per-sim results, in input order (collected by index).
+    pub results: Vec<FarmResult>,
+    /// Wall-clock seconds for the whole batch.
+    pub wall_s: f64,
+    /// Worker threads actually used.
+    pub jobs: usize,
+}
+
+impl FarmRun {
+    /// Sims that ran to completion.
+    pub fn completed(&self) -> usize {
+        self.results.iter().filter(|r| r.outcome.is_ok()).count()
+    }
+
+    /// Farm throughput: completed simulations per wall-second.  This is
+    /// the batch-level metric recorded as `sims_per_sec` alongside each
+    /// point's `sim_cycles_per_sec` in `BENCH_noc.json`.
+    pub fn sims_per_sec(&self) -> f64 {
+        self.completed() as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Resolve a `--jobs` request: `0` means one worker per available core,
+/// and a batch never gets more workers than sims.
+pub fn effective_jobs(requested: usize, sims: usize) -> usize {
+    let jobs = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    jobs.clamp(1, sims.max(1))
+}
+
+/// Run every scenario of a batch, `jobs` at a time, and collect the
+/// results **by input index**.
+///
+/// `jobs == 0` selects one worker per available core; `jobs == 1` runs
+/// in input order on the calling thread (the serial reference the
+/// equivalence property compares against).  Workers pull the next
+/// unclaimed index from a shared cursor — dynamic load balancing, since
+/// a 16x16 coherent pipeline and a 3x4 chain differ by orders of
+/// magnitude — and a failing sim occupies its slot as an `Err` without
+/// aborting the rest of the batch.
+pub fn run_farm(scenarios: &[Scenario], jobs: usize) -> FarmRun {
+    let t0 = Instant::now();
+    let jobs = effective_jobs(jobs, scenarios.len());
+    if jobs <= 1 {
+        let results = scenarios
+            .iter()
+            .map(|s| {
+                let (outcome, wall_s) = time_once(|| s.run());
+                FarmResult { outcome, wall_s }
+            })
+            .collect();
+        return FarmRun { results, wall_s: t0.elapsed().as_secs_f64(), jobs: 1 };
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<(usize, FarmResult)> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..jobs)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(s) = scenarios.get(i) else { break };
+                        let (outcome, wall_s) = time_once(|| s.run());
+                        mine.push((i, FarmResult { outcome, wall_s }));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        workers.into_iter().flat_map(|w| w.join().expect("farm worker panicked")).collect()
+    });
+    // Every index is claimed exactly once (fetch_add), so sorting the
+    // worker-local runs by index reconstructs the input order exactly.
+    slots.sort_unstable_by_key(|&(i, _)| i);
+    debug_assert!(slots.iter().enumerate().all(|(k, &(i, _))| k == i));
+    let results = slots.into_iter().map(|(_, r)| r).collect();
+    FarmRun { results, wall_s: t0.elapsed().as_secs_f64(), jobs }
+}
+
+/// Expand each scenario into `seeds` seeded replicas for a Monte-Carlo
+/// sweep: replica `r` gets workload seed `base + r` (and, on
+/// fault-injected scenarios, fault seed `base_fault + r`, so the storm
+/// draw varies with the replica too) and a `+seed{N}` name suffix that
+/// keeps every bench point distinct.  `seeds <= 1` is the identity — the
+/// plain registry keeps its names, so existing baselines stay comparable.
+pub fn expand_seeds(scenarios: &[Scenario], seeds: u64) -> Vec<Scenario> {
+    if seeds <= 1 {
+        return scenarios.to_vec();
+    }
+    let mut out = Vec::with_capacity(scenarios.len().saturating_mul(seeds as usize));
+    for s in scenarios {
+        for r in 0..seeds {
+            let mut replica = s.clone();
+            replica.seed = s.seed.wrapping_add(r);
+            if s.fault_links > 0 {
+                replica.fault_seed = s.fault_seed.wrapping_add(r);
+            }
+            replica.name = format!("{}+seed{}", s.name, replica.seed);
+            out.push(replica);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scenario::{builtin_scenarios, Pattern, Platform};
+
+    fn small_registry() -> Vec<Scenario> {
+        let mut v = builtin_scenarios(Platform::Paper3x4);
+        v.truncate(3);
+        for s in &mut v {
+            s.bytes = 8 << 10;
+        }
+        v
+    }
+
+    #[test]
+    fn effective_jobs_resolves_auto_and_caps_at_batch_size() {
+        assert_eq!(effective_jobs(1, 100), 1);
+        assert_eq!(effective_jobs(7, 3), 3, "never more workers than sims");
+        assert_eq!(effective_jobs(4, 0), 1, "empty batch still needs a well-formed count");
+        assert!(effective_jobs(0, 100) >= 1, "0 = one worker per core");
+    }
+
+    #[test]
+    fn expand_seeds_is_identity_at_one_and_distinct_past_it() {
+        let base = small_registry();
+        assert_eq!(expand_seeds(&base, 1), base);
+        assert_eq!(expand_seeds(&base, 0), base);
+        let expanded = expand_seeds(&base, 3);
+        assert_eq!(expanded.len(), base.len() * 3);
+        // Replicas of one scenario differ only in seed (+name); names
+        // stay globally unique so bench points never collide.
+        let mut names: Vec<&str> = expanded.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), expanded.len(), "replica names must be unique");
+        assert_eq!(expanded[0].seed, base[0].seed);
+        assert_eq!(expanded[1].seed, base[0].seed + 1);
+        assert_eq!(expanded[1].pattern, base[0].pattern);
+        assert!(expanded[1].name.contains("+seed"));
+    }
+
+    #[test]
+    fn expand_seeds_varies_the_fault_draw_on_degraded_scenarios() {
+        let mut s = Scenario::new("t", Pattern::P2pChain { stages: 2 }, Platform::Paper3x4);
+        s.fault_links = 2;
+        s.fault_seed = 100;
+        let replicas = expand_seeds(&[s], 3);
+        assert_eq!(replicas[2].fault_seed, 102);
+        assert_eq!(replicas[0].fault_seed, 100);
+    }
+
+    #[test]
+    fn farm_results_arrive_in_input_order_with_surplus_workers() {
+        let batch = small_registry();
+        let serial = run_farm(&batch, 1);
+        let farmed = run_farm(&batch, 16); // more workers than sims
+        assert_eq!(serial.jobs, 1);
+        assert_eq!(farmed.jobs, batch.len());
+        assert_eq!(serial.results.len(), farmed.results.len());
+        for (i, (a, b)) in serial.results.iter().zip(&farmed.results).enumerate() {
+            let (a, b) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "slot {i} diverged");
+            assert_eq!(a.name, batch[i].name, "slot {i} out of order");
+        }
+        assert!(serial.sims_per_sec() > 0.0 && farmed.sims_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn a_failing_sim_keeps_its_slot_without_poisoning_neighbors() {
+        let mut batch = small_registry();
+        batch[1].bytes = 6000; // not a burst multiple: validate() fails
+        let run = run_farm(&batch, 3);
+        assert_eq!(run.completed(), 2);
+        assert!(run.results[0].outcome.is_ok());
+        assert!(run.results[2].outcome.is_ok());
+        let err = run.results[1].outcome.as_ref().unwrap_err();
+        assert!(format!("{err:#}").contains("burst"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_batch_is_well_formed() {
+        let run = run_farm(&[], 4);
+        assert!(run.results.is_empty());
+        assert_eq!(run.completed(), 0);
+        assert_eq!(run.sims_per_sec(), 0.0);
+    }
+}

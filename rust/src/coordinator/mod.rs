@@ -3,12 +3,14 @@
 
 pub mod app;
 pub mod experiments;
+pub mod farm;
 pub mod scenario;
 pub mod soc;
 pub mod stats;
 pub mod workloads;
 
 pub use app::{App, FlagBarrier, Invocation, Phase, ProgramKind};
+pub use farm::{expand_seeds, run_farm, FarmResult, FarmRun};
 pub use scenario::{builtin_scenarios, Outcome, Pattern, Platform, Scenario};
 pub use soc::{QuiesceError, QuiesceKind, Soc};
 pub use stats::Report;

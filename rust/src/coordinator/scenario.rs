@@ -426,6 +426,11 @@ impl Scenario {
         let mut soc = self.soc()?;
         let cycles = g.run_budget(&mut soc, EdgePolicy::P2p, self.max_cycles)?;
         let report = soc.report();
+        // Free the optimized SoC (on the 16x16 platform its DRAM alone is
+        // 256 MiB) before building the baseline one: farmed batches hold
+        // `jobs` sims in flight, so per-sim peak memory is wall-clock for
+        // the whole pool.
+        drop(soc);
         let mut base = self.soc()?;
         let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
         Ok(self.outcome(cycles, baseline, &report))
@@ -498,6 +503,7 @@ impl Scenario {
         App::new().phase(phase_a).phase(phase_b).launch(&mut soc)?;
         let cycles = soc.run(self.max_cycles)?;
         let report = soc.report();
+        drop(soc); // one SoC at a time: farmed batches run `jobs` sims at once
 
         // --- baseline: the same exchange staged through DRAM.
         let mut base = self.soc()?;
@@ -590,6 +596,7 @@ impl Scenario {
         let got = soc.read_mem(stage(stages - 1), bytes as usize);
         ensure!(got == data, "coherent pipeline corrupted its stream");
         let report = soc.report();
+        drop(soc); // one SoC at a time: farmed batches run `jobs` sims at once
 
         // Baseline: the same 2*stages accelerators as a DMA-only chain.
         let g = Dataflow::generate(Shape::Chain(2 * stages as u8), bytes, burst, self.seed);

@@ -4,6 +4,8 @@
 //! espsim area                          # Fig. 4 router-area sweep
 //! espsim run --consumers 8 --kb 64     # one Fig. 6 point (both variants)
 //! espsim sweep [--config soc.json]     # the full Fig. 6 grid
+//! espsim scenarios --jobs 8            # scenario registry on the farm
+//! espsim sweep-farm --seeds 100        # Monte-Carlo scenario/seed sweep
 //! espsim config                        # print the default SoC config JSON
 //! ```
 
@@ -14,9 +16,11 @@ use espsim::coordinator::experiments::{
     extended_consumer_counts, extended_data_sizes, paper_consumer_counts, paper_data_sizes,
     run_fig6_point, Fig6Options,
 };
+use espsim::coordinator::farm::{expand_seeds, run_farm, FarmRun};
 use espsim::coordinator::scenario::{builtin_scenarios, Platform, Scenario};
+use espsim::noc::TickMode;
 use espsim::sched::SchedMode;
-use espsim::util::bench::{fmt_secs, time_once, BenchJson, CompareOpts, Table};
+use espsim::util::bench::{fmt_secs, BenchJson, CompareOpts, Table};
 use espsim::util::Json;
 
 const USAGE: &str = "\
@@ -32,7 +36,7 @@ USAGE:
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
                    [--sched MODE] [--harvest ROWS] [--faults N[:SEED]]
-                   [--list] [--json]
+                   [--jobs N] [--seeds K] [--list] [--json]
       Run the declarative scenario registry (P2P chains, multicast
       fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
       coherence-barrier pipelines) against the DMA-only baseline and
@@ -47,12 +51,34 @@ USAGE:
       kills N random links mid-run from a seeded deterministic plan.
       Degraded sweeps record completion 0/1, drop and retry counts per
       scenario instead of aborting on the first failure.
+      --jobs runs the batch on the simulation farm (N worker threads;
+      0 = one per core; default 1 = serial) and --seeds fans each
+      scenario out to K seeded replicas.  Results are collected by
+      input index, so cycles/speedup records are byte-identical to a
+      serial run; every record additionally carries the batch's
+      sims_per_sec farm throughput.
+  espsim sweep-farm [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
+                    [--sched MODE|all] [--ticks MODE|all]
+                    [--harvest ROWS] [--faults N[:SEED]]
+                    [--jobs N] [--seeds K] [--list] [--json]
+      Monte-Carlo sweep on the simulation farm: cross the scenario
+      registry with the sched-mode axis (--sched all), the NoC
+      tick-mode axis (--ticks all), the degraded-mesh axes, and K
+      seeded replicas per point (default 8), then run the whole batch
+      across the thread pool (--jobs, default 0 = one per core).
+      Records land in the sweep_farm_* bench sections with a +seedN
+      (and +sched/+tick) suffix per point.
   espsim compare BASELINE FRESH [--tol-cycles F] [--tol-speedup F]
-                 [--tol-throughput F] [--warn-only]
+                 [--tol-throughput F] [--strict] [--warn-only]
       Diff a fresh bench document against a committed baseline with
       per-metric tolerances; exits nonzero on regression (the CI perf
       gate).  Tolerances are fractions (default 0.02 cycles, 0.05
-      speedup; throughput ungated unless requested).
+      speedup; throughput ungated unless requested).  --strict
+      additionally fails when the baseline has bench sections the
+      fresh run never executed (CI mode — a renamed bench cannot
+      quietly evade the gate); completion-0 records from degraded
+      sweeps are compared on completion, never on their placeholder
+      perf metrics.
   espsim config
       Print the default SoC configuration as JSON.
 ";
@@ -115,6 +141,278 @@ fn load_opts(config: Option<String>) -> Result<Fig6Options> {
         opts.soc = SocConfig::load(path)?;
     }
     Ok(opts)
+}
+
+/// Flags shared by `scenarios` and `sweep-farm`: scenario source,
+/// platform, transfer shape, degraded-mesh axes, and farm sizing.
+struct ScenarioOpts {
+    list: bool,
+    mesh16: bool,
+    filter: Option<String>,
+    file: Option<String>,
+    bytes: Option<u32>,
+    harvest_rows: Vec<u8>,
+    fault_links: u8,
+    fault_seed: u64,
+    jobs: usize,
+    seeds: u64,
+}
+
+impl ScenarioOpts {
+    /// Parse the shared flags; the two subcommands differ only in their
+    /// farm defaults (`scenarios` stays serial/one-seed unless asked).
+    fn parse(args: &mut Args, default_jobs: usize, default_seeds: u64) -> Result<Self> {
+        let list = args.flag("--list");
+        let mesh16 = args.flag("--mesh16");
+        let _json = args.flag("--json"); // re-detected by BenchJson
+        let filter = args.value("--filter")?;
+        let file = args.value("--file")?;
+        let bytes: Option<u32> = args.value("--bytes")?.map(|v| v.parse()).transpose()?;
+        let jobs: usize =
+            args.value("--jobs")?.map(|v| v.parse()).transpose()?.unwrap_or(default_jobs);
+        let seeds: u64 =
+            args.value("--seeds")?.map(|v| v.parse()).transpose()?.unwrap_or(default_seeds);
+        ensure!(seeds >= 1, "--seeds needs at least one replica per scenario");
+        let harvest_rows: Vec<u8> = match args.value("--harvest")? {
+            Some(v) => v
+                .split(',')
+                .map(|r| {
+                    r.trim().parse::<u8>().map_err(|_| {
+                        anyhow!("--harvest expects comma-separated row numbers, got {r:?}")
+                    })
+                })
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
+        let (fault_links, fault_seed): (u8, u64) = match args.value("--faults")? {
+            Some(v) => {
+                let (n, seed) = match v.split_once(':') {
+                    Some((n, s)) => (
+                        n,
+                        s.parse::<u64>().map_err(|_| {
+                            anyhow!("--faults seed must be an integer, got {s:?}")
+                        })?,
+                    ),
+                    None => (v.as_str(), 0xDEAD),
+                };
+                let n: u8 =
+                    n.parse().map_err(|_| anyhow!("--faults expects N or N:SEED, got {v:?}"))?;
+                ensure!(n > 0, "--faults needs at least one link to kill");
+                (n, seed)
+            }
+            None => (0, 1),
+        };
+        ensure!(
+            !(mesh16 && file.is_some()),
+            "--mesh16 selects the builtin registry's platform; scenario files carry their own"
+        );
+        Ok(Self {
+            list,
+            mesh16,
+            filter,
+            file,
+            bytes,
+            harvest_rows,
+            fault_links,
+            fault_seed,
+            jobs,
+            seeds,
+        })
+    }
+
+    fn degraded(&self) -> bool {
+        !self.harvest_rows.is_empty() || self.fault_links > 0
+    }
+
+    /// The base scenario list: registry or file, filtered, resized, and
+    /// lowered onto the degraded mesh when a degraded axis is set.
+    fn scenarios(&self) -> Result<Vec<Scenario>> {
+        let platform = if self.mesh16 { Platform::Mesh16x16 } else { Platform::Mesh8x8 };
+        let mut scenarios = match &self.file {
+            Some(path) => Scenario::load_file(path)?,
+            None => builtin_scenarios(platform),
+        };
+        if let Some(f) = &self.filter {
+            scenarios.retain(|s| s.name.contains(f.as_str()));
+        }
+        if let Some(b) = self.bytes {
+            for s in &mut scenarios {
+                s.bytes = b;
+            }
+        }
+        if self.degraded() {
+            for s in &mut scenarios {
+                *s = s.degraded(&self.harvest_rows, self.fault_links, self.fault_seed);
+            }
+        }
+        ensure!(!scenarios.is_empty(), "no scenarios match");
+        Ok(scenarios)
+    }
+
+    /// Bench section name: `{prefix}_{platform}[_harvest][_faults]`.
+    fn bench_name(&self, prefix: &str) -> String {
+        let mut name = match (&self.file, self.mesh16) {
+            (Some(_), _) => format!("{prefix}_custom"),
+            (None, false) => format!("{prefix}_8x8"),
+            (None, true) => format!("{prefix}_16x16"),
+        };
+        if !self.harvest_rows.is_empty() {
+            name.push_str("_harvest");
+        }
+        if self.fault_links > 0 {
+            name.push_str("_faults");
+        }
+        name
+    }
+}
+
+/// `--sched` axis: a single mode (the default is the worklist scheduler)
+/// or, for `sweep-farm`, `all` to cross both.
+fn sched_axis(args: &mut Args) -> Result<Vec<SchedMode>> {
+    Ok(match args.value("--sched")? {
+        None => vec![SchedMode::default()],
+        Some(c) if c == "all" => vec![SchedMode::Worklist, SchedMode::FullScan],
+        Some(c) => vec![SchedMode::from_code(&c)
+            .ok_or_else(|| anyhow!("unknown --sched {c:?} (worklist, full_scan, all)"))?],
+    })
+}
+
+/// `--ticks` axis: a single NoC plane-tick mode or `all` to cross the
+/// three (results are identical in every mode; the axis exists to farm
+/// the equivalence surface itself).
+fn tick_axis(args: &mut Args) -> Result<Vec<TickMode>> {
+    Ok(match args.value("--ticks")? {
+        None => vec![TickMode::Auto],
+        Some(c) if c == "all" => vec![TickMode::Sequential, TickMode::Parallel, TickMode::Auto],
+        Some(c) => vec![TickMode::from_code(&c)
+            .ok_or_else(|| anyhow!("unknown --ticks {c:?} (sequential, parallel, auto, all)"))?],
+    })
+}
+
+fn list_scenarios(scenarios: &[Scenario]) {
+    for s in scenarios {
+        println!("{:32} {:20} {:10} {:>8} B", s.name, s.pattern.code(), s.platform.code(), s.bytes);
+    }
+}
+
+/// Run a batch on the simulation farm and record/print the results in
+/// input order (the farm already collected them by index).  On a
+/// degraded mesh a failing scenario becomes a completion-0 record with
+/// its cause; on a pristine mesh the first failure *by input order* is
+/// returned — but only after the whole batch was measured and the sink
+/// finished, so the CI artifact keeps the partial record set.
+fn run_batch(scenarios: &[Scenario], jobs: usize, bench_name: &str, degraded: bool) -> Result<()> {
+    let farm = run_farm(scenarios, jobs);
+    let completed = farm.completed();
+    let sims_per_sec = farm.sims_per_sec();
+    let FarmRun { results, wall_s: farm_wall, jobs } = farm;
+    let sims = results.len();
+    let mut sink = BenchJson::from_args(bench_name);
+    let t = Table::new(
+        &["scenario", "pattern", "optimized", "dma-only", "speedup", "p2p-KiB", "wall"],
+        &[28, 18, 12, 12, 8, 8, 9],
+    );
+    let mut failure: Option<anyhow::Error> = None;
+    for (s, res) in scenarios.iter().zip(results) {
+        let wall = res.wall_s;
+        let o = match res.outcome {
+            Ok(o) => o,
+            Err(e) if degraded => {
+                // On a degraded mesh, a scenario that cannot finish is
+                // itself a data point (completed=0 plus the cause), not a
+                // reason to abort the sweep.  The `completed` tag is what
+                // tells `util::bench::compare` to skip the placeholder
+                // perf metrics below instead of gating on them.
+                let cause = format!("{e:#}");
+                sink.record_with(
+                    &format!("{}_{}", s.name, s.platform.code()),
+                    0,
+                    wall,
+                    &[
+                        ("completed", Json::from(0u64)),
+                        ("failure", Json::from(cause.as_str())),
+                        ("pattern", Json::from(s.pattern.code())),
+                        ("platform", Json::from(s.platform.code())),
+                        ("sims_per_sec", Json::Num(sims_per_sec)),
+                    ],
+                );
+                t.row(&[
+                    s.name.clone(),
+                    s.pattern.code().to_string(),
+                    "FAILED".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    fmt_secs(wall),
+                ]);
+                continue;
+            }
+            Err(e) => {
+                // Pristine-mesh failures are bugs: no record, but the rest
+                // of the batch already ran, so keep reporting it and
+                // propagate the first error (by input order) at the end.
+                if failure.is_none() {
+                    failure = Some(e);
+                }
+                t.row(&[
+                    s.name.clone(),
+                    s.pattern.code().to_string(),
+                    "FAILED".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    fmt_secs(wall),
+                ]);
+                continue;
+            }
+        };
+        // `wall` covers BOTH lowerings, so the simulator-throughput
+        // metric must too (the default cycles/wall would understate it);
+        // the extras override replaces it with total simulated cycles per
+        // wall-second, the fig6 bench convention.  `sim_cycles_per_sec`
+        // is the same number under the name the scheduler-speedup gate
+        // reads, and `sims_per_sec` is the farm's batch throughput — the
+        // only record fields allowed to differ between `--jobs 1` and
+        // `--jobs N` are this wall-clock family.
+        let total_cps = (o.cycles + o.baseline_cycles) as f64 / wall.max(1e-12);
+        let mut extras = vec![
+            ("cycles_per_sec", Json::Num(total_cps)),
+            ("sim_cycles_per_sec", Json::Num(total_cps)),
+            ("sims_per_sec", Json::Num(sims_per_sec)),
+            ("baseline_cycles", Json::from(o.baseline_cycles)),
+            ("speedup", Json::Num(o.speedup())),
+            ("p2p_bytes", Json::from(o.p2p_bytes)),
+            ("dma_bytes", Json::from(o.dma_bytes)),
+            ("flit_hops", Json::from(o.total_flits())),
+            ("pattern", Json::from(s.pattern.code())),
+            ("platform", Json::from(s.platform.code())),
+        ];
+        if degraded {
+            extras.push(("completed", Json::from(1u64)));
+            extras.push(("dropped_flits", Json::from(o.dropped_flits)));
+            extras.push(("socket_retries", Json::from(o.socket_retries)));
+        }
+        let point = format!("{}_{}", s.name, s.platform.code());
+        sink.record_with(&point, o.cycles, wall, &extras);
+        t.row(&[
+            s.name.clone(),
+            s.pattern.code().to_string(),
+            format!("{}", o.cycles),
+            format!("{}", o.baseline_cycles),
+            format!("{:.2}x", o.speedup()),
+            format!("{}", o.p2p_bytes >> 10),
+            fmt_secs(wall),
+        ]);
+    }
+    sink.finish();
+    println!(
+        "farm: {completed}/{sims} sims in {} ({jobs} jobs, {sims_per_sec:.2} sims/sec)",
+        fmt_secs(farm_wall)
+    );
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
 fn main() -> Result<()> {
@@ -187,12 +485,6 @@ fn main() -> Result<()> {
             }
         }
         "scenarios" => {
-            let list = args.flag("--list");
-            let mesh16 = args.flag("--mesh16");
-            let _json = args.flag("--json"); // re-detected by BenchJson
-            let filter = args.value("--filter")?;
-            let file = args.value("--file")?;
-            let bytes: Option<u32> = args.value("--bytes")?.map(|v| v.parse()).transpose()?;
             let sched = args
                 .value("--sched")?
                 .map(|code| {
@@ -200,178 +492,58 @@ fn main() -> Result<()> {
                         .ok_or_else(|| anyhow!("unknown --sched {code:?} (worklist, full_scan)"))
                 })
                 .transpose()?;
-            let harvest_rows: Vec<u8> = match args.value("--harvest")? {
-                Some(v) => v
-                    .split(',')
-                    .map(|r| {
-                        r.trim().parse::<u8>().map_err(|_| {
-                            anyhow!("--harvest expects comma-separated row numbers, got {r:?}")
-                        })
-                    })
-                    .collect::<Result<_>>()?,
-                None => Vec::new(),
-            };
-            let (fault_links, fault_seed): (u8, u64) = match args.value("--faults")? {
-                Some(v) => {
-                    let (n, seed) = match v.split_once(':') {
-                        Some((n, s)) => (
-                            n,
-                            s.parse::<u64>().map_err(|_| {
-                                anyhow!("--faults seed must be an integer, got {s:?}")
-                            })?,
-                        ),
-                        None => (v.as_str(), 0xDEAD),
-                    };
-                    let n: u8 = n
-                        .parse()
-                        .map_err(|_| anyhow!("--faults expects N or N:SEED, got {v:?}"))?;
-                    ensure!(n > 0, "--faults needs at least one link to kill");
-                    (n, seed)
-                }
-                None => (0, 1),
-            };
-            let degraded = !harvest_rows.is_empty() || fault_links > 0;
+            // Serial, single-seed defaults: without --jobs/--seeds the
+            // command behaves (and records) exactly as before the farm.
+            let o = ScenarioOpts::parse(&mut args, 1, 1)?;
             args.finish()?;
-            ensure!(
-                !(mesh16 && file.is_some()),
-                "--mesh16 selects the builtin registry's platform; scenario files carry their own"
-            );
-            let platform = if mesh16 { Platform::Mesh16x16 } else { Platform::Mesh8x8 };
-            let mut scenarios = match &file {
-                Some(path) => Scenario::load_file(path)?,
-                None => builtin_scenarios(platform),
-            };
-            if let Some(f) = &filter {
-                scenarios.retain(|s| s.name.contains(f.as_str()));
-            }
-            if let Some(b) = bytes {
-                for s in &mut scenarios {
-                    s.bytes = b;
-                }
-            }
+            let mut scenarios = o.scenarios()?;
             if let Some(m) = sched {
                 for s in &mut scenarios {
                     s.sched = m;
                 }
             }
-            if degraded {
-                for s in &mut scenarios {
-                    *s = s.degraded(&harvest_rows, fault_links, fault_seed);
-                }
-            }
-            ensure!(!scenarios.is_empty(), "no scenarios match");
-            if list {
-                for s in &scenarios {
-                    println!(
-                        "{:24} {:20} {:10} {:>8} B",
-                        s.name,
-                        s.pattern.code(),
-                        s.platform.code(),
-                        s.bytes
-                    );
-                }
+            let scenarios = expand_seeds(&scenarios, o.seeds);
+            if o.list {
+                list_scenarios(&scenarios);
                 return Ok(());
             }
-            let mut bench_name = match (&file, mesh16) {
-                (Some(_), _) => "scenarios_custom",
-                (None, false) => "scenarios_8x8",
-                (None, true) => "scenarios_16x16",
-            }
-            .to_string();
-            if !harvest_rows.is_empty() {
-                bench_name.push_str("_harvest");
-            }
-            if fault_links > 0 {
-                bench_name.push_str("_faults");
-            }
-            let mut sink = BenchJson::from_args(&bench_name);
-            let t = Table::new(
-                &["scenario", "pattern", "optimized", "dma-only", "speedup", "p2p-KiB", "wall"],
-                &[20, 18, 12, 12, 8, 8, 9],
-            );
-            // A failing scenario must not discard the points already
-            // measured: finish the sink before propagating the error so
-            // the CI artifact keeps the partial record set.
-            let mut failure: Option<anyhow::Error> = None;
-            for s in &scenarios {
-                let (outcome, wall) = time_once(|| s.run());
-                let o = match outcome {
-                    Ok(o) => o,
-                    Err(e) if degraded => {
-                        // On a degraded mesh, a scenario that cannot finish
-                        // is itself a data point (completed=0 plus the
-                        // cause), not a reason to abort the sweep.
-                        let cause = format!("{e:#}");
-                        sink.record_with(
-                            &format!("{}_{}", s.name, s.platform.code()),
-                            0,
-                            wall,
-                            &[
-                                ("completed", Json::from(0u64)),
-                                ("failure", Json::from(cause.as_str())),
-                                ("pattern", Json::from(s.pattern.code())),
-                                ("platform", Json::from(s.platform.code())),
-                            ],
-                        );
-                        t.row(&[
-                            s.name.clone(),
-                            s.pattern.code().to_string(),
-                            "FAILED".to_string(),
-                            "-".to_string(),
-                            "-".to_string(),
-                            "-".to_string(),
-                            fmt_secs(wall),
-                        ]);
-                        continue;
+            run_batch(&scenarios, o.jobs, &o.bench_name("scenarios"), o.degraded())?;
+        }
+        "sweep-farm" => {
+            let scheds = sched_axis(&mut args)?;
+            let ticks = tick_axis(&mut args)?;
+            // Farm defaults: one worker per core, 8 seeded replicas.
+            let o = ScenarioOpts::parse(&mut args, 0, 8)?;
+            args.finish()?;
+            let mut crossed = Vec::new();
+            for s in &o.scenarios()? {
+                for &sched in &scheds {
+                    for &tick in &ticks {
+                        let mut c = s.clone();
+                        c.sched = sched;
+                        c.tick_mode = tick;
+                        // Suffix a swept axis so bench points stay unique.
+                        if scheds.len() > 1 {
+                            c.name = format!("{}+{}", c.name, sched.code());
+                        }
+                        if ticks.len() > 1 {
+                            c.name = format!("{}+{}", c.name, tick.code());
+                        }
+                        crossed.push(c);
                     }
-                    Err(e) => {
-                        failure = Some(e);
-                        break;
-                    }
-                };
-                // `wall` covers BOTH lowerings, so the simulator-throughput
-                // metric must too (the default cycles/wall would understate
-                // it); the extras override replaces it with total simulated
-                // cycles per wall-second, the fig6 bench convention.
-                // `sim_cycles_per_sec` is the same number under the name
-                // the scheduler-speedup gate reads.
-                let total_cps = (o.cycles + o.baseline_cycles) as f64 / wall.max(1e-12);
-                let mut extras = vec![
-                    ("cycles_per_sec", Json::Num(total_cps)),
-                    ("sim_cycles_per_sec", Json::Num(total_cps)),
-                    ("baseline_cycles", Json::from(o.baseline_cycles)),
-                    ("speedup", Json::Num(o.speedup())),
-                    ("p2p_bytes", Json::from(o.p2p_bytes)),
-                    ("dma_bytes", Json::from(o.dma_bytes)),
-                    ("flit_hops", Json::from(o.total_flits())),
-                    ("pattern", Json::from(s.pattern.code())),
-                    ("platform", Json::from(s.platform.code())),
-                ];
-                if degraded {
-                    extras.push(("completed", Json::from(1u64)));
-                    extras.push(("dropped_flits", Json::from(o.dropped_flits)));
-                    extras.push(("socket_retries", Json::from(o.socket_retries)));
                 }
-                let point = format!("{}_{}", s.name, s.platform.code());
-                sink.record_with(&point, o.cycles, wall, &extras);
-                t.row(&[
-                    s.name.clone(),
-                    s.pattern.code().to_string(),
-                    format!("{}", o.cycles),
-                    format!("{}", o.baseline_cycles),
-                    format!("{:.2}x", o.speedup()),
-                    format!("{}", o.p2p_bytes >> 10),
-                    fmt_secs(wall),
-                ]);
             }
-            sink.finish();
-            if let Some(e) = failure {
-                return Err(e);
+            let scenarios = expand_seeds(&crossed, o.seeds);
+            if o.list {
+                list_scenarios(&scenarios);
+                return Ok(());
             }
+            run_batch(&scenarios, o.jobs, &o.bench_name("sweep_farm"), o.degraded())?;
         }
         "compare" => {
             let warn_only = args.flag("--warn-only");
-            let mut opts = CompareOpts::default();
+            let mut opts =
+                CompareOpts { strict: args.flag("--strict"), ..CompareOpts::default() };
             if let Some(v) = args.value("--tol-cycles")? {
                 opts.tol_cycles = v.parse()?;
             }

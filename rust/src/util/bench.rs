@@ -157,11 +157,17 @@ pub struct CompareOpts {
     /// fractional drop.  `None` (the default) skips the metric, since CI
     /// runners vary too much for wall-clock to gate merges.
     pub tol_throughput: Option<f64>,
+    /// Fail when the baseline holds bench sections the fresh run never
+    /// executed.  Off by default (a partial local rerun should compare
+    /// cleanly against a full baseline); the CI perf gate turns it on so
+    /// a renamed or dropped bench cannot quietly evade the gate by
+    /// landing in `skipped_benches`.
+    pub strict: bool,
 }
 
 impl Default for CompareOpts {
     fn default() -> Self {
-        Self { tol_cycles: 0.02, tol_speedup: 0.05, tol_throughput: None }
+        Self { tol_cycles: 0.02, tol_speedup: 0.05, tol_throughput: None, strict: false }
     }
 }
 
@@ -209,14 +215,19 @@ pub struct CompareReport {
     pub new_points: usize,
     /// Baseline bench sections the fresh run did not execute at all;
     /// skipped rather than failed so a partial run (e.g. the scenario
-    /// gate) can be compared against a full baseline.
+    /// gate) can be compared against a full baseline — unless
+    /// [`CompareOpts::strict`] turned skipping into failure.
     pub skipped_benches: Vec<String>,
+    /// Was this comparison run in strict mode (skipped benches fail)?
+    pub strict: bool,
 }
 
 impl CompareReport {
     /// Did the fresh run hold the baseline?
     pub fn passed(&self) -> bool {
-        self.regressions.is_empty() && self.missing_points.is_empty()
+        self.regressions.is_empty()
+            && self.missing_points.is_empty()
+            && !(self.strict && !self.skipped_benches.is_empty())
     }
 
     /// Human-readable summary (one line per finding).
@@ -246,9 +257,14 @@ impl CompareReport {
         for m in &self.missing_points {
             let _ = writeln!(s, "  MISSING {m} (in baseline, absent from fresh run)");
         }
-        if !self.skipped_benches.is_empty() {
-            let skipped = self.skipped_benches.join(", ");
-            let _ = writeln!(s, "  skipped benches not in fresh run: {skipped}");
+        // Skipped sections are always reported, pass or fail: a renamed
+        // bench must be visible in the gate's output either way.
+        for b in &self.skipped_benches {
+            if self.strict {
+                let _ = writeln!(s, "  SKIPPED {b}: baseline section never ran fresh (strict)");
+            } else {
+                let _ = writeln!(s, "  skipped bench {b}: absent from fresh run (not gated)");
+            }
         }
         if self.points_checked == 0 && self.passed() {
             let _ = writeln!(
@@ -287,9 +303,16 @@ pub fn compare(baseline: &Json, fresh: &Json, opts: &CompareOpts) -> CompareRepo
     let fresh_idx = index_records(fresh);
     let fresh_benches: std::collections::BTreeSet<&str> =
         fresh_idx.iter().map(|((b, _), _)| b.as_str()).collect();
-    let mut report = CompareReport::default();
+    let mut report = CompareReport { strict: opts.strict, ..CompareReport::default() };
 
     let metric = |r: &Json, key: &str| r.get(key).and_then(|v| v.as_f64().ok());
+    // Degraded sweeps tag records with `completed` (1 = ran to the end,
+    // 0 = structured failure whose `cycles`/`speedup` are placeholders,
+    // not measurements).  Untagged records are healthy by definition.
+    let completed = |r: &Json| match metric(r, "completed") {
+        Some(c) => c != 0.0,
+        None => true,
+    };
     for ((bench, point), brec) in &base {
         if !fresh_benches.contains(bench.as_str()) {
             if !report.skipped_benches.contains(bench) {
@@ -303,6 +326,26 @@ pub fn compare(baseline: &Json, fresh: &Json, opts: &CompareOpts) -> CompareRepo
             continue;
         };
         report.points_checked += 1;
+        let (b_done, f_done) = (completed(brec), completed(frec));
+        if b_done && !f_done {
+            // A point that used to complete and now fails is a
+            // regression in its own right (gated at zero tolerance).
+            report.regressions.push(Regression {
+                bench: bench.clone(),
+                point: point.clone(),
+                metric: "completed",
+                baseline: 1.0,
+                fresh: 0.0,
+            });
+        }
+        if !b_done || !f_done {
+            // A completion-0 record's perf metrics are placeholders:
+            // comparing a healthy run's cycles against a baseline 0 (or
+            // vice versa) would report a huge spurious regression — or
+            // mask a real one — so the perf checks skip such points
+            // entirely on either side.
+            continue;
+        }
         let mut check = |name: &'static str, tol: f64, higher_is_worse: bool| {
             match (metric(brec, name), metric(frec, name)) {
                 (Some(b), Some(f)) => {
@@ -495,6 +538,70 @@ mod tests {
         assert_eq!(r.skipped_benches, vec!["fig6".to_string()]);
         assert_eq!(r.new_points, 1);
         assert_eq!(r.points_checked, 1);
+    }
+
+    /// A degraded-sweep failure record: completion 0, placeholder cycles.
+    fn failed_rec(bench: &str, point: &str) -> String {
+        format!(
+            "{{\"bench\":\"{bench}\",\"point\":\"{point}\",\"cycles\":0,\"wall_s\":0.1,\
+             \"cycles_per_sec\":0,\"completed\":0,\"failure\":\"did not quiesce\"}}"
+        )
+    }
+
+    /// A degraded-sweep success record: completion 1 plus real metrics.
+    fn done_rec(bench: &str, point: &str, cycles: u64, speedup: f64) -> String {
+        let r = rec(bench, point, cycles, speedup);
+        format!("{},\"completed\":1}}", &r[..r.len() - 1])
+    }
+
+    #[test]
+    fn compare_skips_perf_metrics_of_completion0_baseline_records() {
+        // A doctored baseline where a degraded point failed (cycles=0):
+        // a now-healthy fresh run must NOT read as a +inf cycle
+        // regression, and the completion recovery is not a failure.
+        let base = doc(&failed_rec("s", "p1"));
+        let fresh = doc(&done_rec("s", "p1", 120_000, 2.0));
+        let r = compare(&base, &fresh, &CompareOpts::default());
+        assert!(r.passed(), "{}", r.render());
+        assert_eq!(r.points_checked, 1);
+        assert!(r.regressions.is_empty(), "placeholder cycles must not be gated");
+    }
+
+    #[test]
+    fn compare_flags_a_fresh_completion0_record_as_a_regression() {
+        // The other direction: a point that completed in the baseline and
+        // fails fresh is a regression on `completed` — and its
+        // placeholder cycles (0 < baseline) must not mask it as a pass.
+        for baseline in [doc(&done_rec("s", "p1", 1000, 2.0)), doc(&rec("s", "p1", 1000, 2.0))] {
+            let fresh = doc(&failed_rec("s", "p1"));
+            let r = compare(&baseline, &fresh, &CompareOpts::default());
+            assert!(!r.passed());
+            assert_eq!(r.regressions.len(), 1, "{}", r.render());
+            assert_eq!(r.regressions[0].metric, "completed");
+            assert!(r.regressions[0].worsening() > 0.99, "completed 1->0 is 100% worse");
+            // No spurious cycles/speedup findings from the placeholders.
+            assert!(r.missing_points.is_empty(), "{}", r.render());
+        }
+        // Still-failing points are stable, not a new regression.
+        let both = doc(&failed_rec("s", "p1"));
+        assert!(compare(&both, &both, &CompareOpts::default()).passed());
+    }
+
+    #[test]
+    fn compare_strict_fails_on_skipped_benches() {
+        let base = doc(&format!("{},{}", rec("fig6", "a", 900, 1.7), rec("s", "p1", 1000, 2.0)));
+        let fresh = doc(&rec("s", "p1", 1000, 2.0));
+        let lax = compare(&base, &fresh, &CompareOpts::default());
+        assert!(lax.passed(), "default mode keeps skipping");
+        assert!(lax.render().contains("skipped bench fig6"), "{}", lax.render());
+        let strict = CompareOpts { strict: true, ..CompareOpts::default() };
+        let r = compare(&base, &fresh, &strict);
+        assert!(!r.passed(), "strict mode must fail on a skipped section");
+        assert_eq!(r.skipped_benches, vec!["fig6".to_string()]);
+        assert!(r.render().contains("SKIPPED fig6"), "{}", r.render());
+        // With every section rerun, strict passes.
+        let full = doc(&format!("{},{}", rec("fig6", "a", 900, 1.7), rec("s", "p1", 1000, 2.0)));
+        assert!(compare(&base, &full, &strict).passed());
     }
 
     #[test]

@@ -1,0 +1,77 @@
+//! Farm equivalence property: a batch run on the thread-pooled simulation
+//! farm (`--jobs N`) must produce a byte-identical record set to a serial
+//! run (`--jobs 1`) — same cycles, speedup, byte counters, and invocation
+//! spans in the same input order.  Only the wall-clock family (`wall_s`,
+//! `cycles_per_sec`/`sim_cycles_per_sec`, `sims_per_sec`) may differ, and
+//! none of it appears in an `Outcome`, so the Outcome Debug string is the
+//! byte-identity fingerprint (same trick as `scenario_determinism.rs`).
+//!
+//! The property is exercised across the two SoC scheduler modes and the
+//! plane-tick modes, plus a seeded Monte-Carlo expansion, because those
+//! are exactly the axes `sweep-farm` crosses in CI.
+
+use espsim::coordinator::farm::{expand_seeds, run_farm};
+use espsim::coordinator::scenario::{builtin_scenarios, Platform, Scenario};
+use espsim::noc::TickMode;
+use espsim::sched::SchedMode;
+
+/// Builtin registry on the paper platform, shrunk so the full axis cross
+/// stays fast in CI.
+fn batch(sched: SchedMode, tick: TickMode) -> Vec<Scenario> {
+    let mut v = builtin_scenarios(Platform::Paper3x4);
+    for s in &mut v {
+        s.bytes = 8 << 10;
+        s.sched = sched;
+        s.tick_mode = tick;
+    }
+    v
+}
+
+/// Serial reference vs farmed run: every slot's Outcome must match
+/// byte-for-byte, in input order.
+fn assert_farm_matches_serial(scenarios: &[Scenario], jobs: usize, what: &str) {
+    let serial = run_farm(scenarios, 1);
+    let farmed = run_farm(scenarios, jobs);
+    assert_eq!(serial.results.len(), scenarios.len(), "{what}: serial lost slots");
+    assert_eq!(farmed.results.len(), scenarios.len(), "{what}: farm lost slots");
+    for (i, (a, b)) in serial.results.iter().zip(&farmed.results).enumerate() {
+        let a = a.outcome.as_ref().unwrap_or_else(|e| panic!("{what}: serial slot {i}: {e:#}"));
+        let b = b.outcome.as_ref().unwrap_or_else(|e| panic!("{what}: farmed slot {i}: {e:#}"));
+        assert_eq!(a.name, scenarios[i].name, "{what}: slot {i} out of input order");
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "{what}: slot {i} ({}) diverged between jobs=1 and jobs={jobs}",
+            scenarios[i].name
+        );
+    }
+}
+
+#[test]
+fn farmed_outcomes_match_serial_across_sched_and_tick_modes() {
+    for (sched, tick) in [
+        (SchedMode::Worklist, TickMode::Auto),
+        (SchedMode::FullScan, TickMode::Sequential),
+        (SchedMode::Worklist, TickMode::Sequential),
+    ] {
+        let scenarios = batch(sched, tick);
+        assert_farm_matches_serial(&scenarios, 4, &format!("{sched:?}/{tick:?}"));
+    }
+}
+
+#[test]
+fn farmed_outcomes_match_serial_on_a_seeded_expansion() {
+    // The sweep-farm shape: seed replicas multiply the batch, and the
+    // per-replica seeds must land in the same slots either way.
+    let scenarios = expand_seeds(&batch(SchedMode::Worklist, TickMode::Auto), 2);
+    assert_eq!(scenarios.len(), builtin_scenarios(Platform::Paper3x4).len() * 2);
+    assert_farm_matches_serial(&scenarios, 4, "seeds=2");
+}
+
+#[test]
+fn farmed_outcomes_match_serial_with_more_jobs_than_sims() {
+    // Surplus workers exit cleanly without stealing or duplicating slots.
+    let mut scenarios = batch(SchedMode::Worklist, TickMode::Auto);
+    scenarios.truncate(2);
+    assert_farm_matches_serial(&scenarios, 8, "surplus workers");
+}

@@ -145,3 +145,68 @@ fn bench_compare_fails_a_doctored_scenario_regression() {
     assert!(r.regressions.iter().any(|x| x.metric == "cycles"));
     assert!(r.regressions.iter().any(|x| x.metric == "speedup"));
 }
+
+/// Regression test for the completion-0 pollution bug: a degraded sweep
+/// that records a failed point (`completed: 0`, placeholder `cycles: 0`)
+/// must not poison the `cycles` namespace of later compares.  Before the
+/// fix, a doctored baseline holding such a record made ANY healthy fresh
+/// measurement look like an unbounded cycles regression (`fresh > 0 *
+/// (1 + tol)`), and a fresh failure silently *passed* the
+/// higher-is-worse check.
+#[test]
+fn bench_compare_treats_completion0_records_as_completion_not_cycles() {
+    let s = small(builtin_scenarios(Platform::Paper3x4).remove(0));
+    let o = s.run().unwrap();
+    let healthy = Json::parse(&format!(
+        "{{\"records\":[{{\"bench\":\"scenarios_8x8_faults\",\"point\":\"{}\",\
+         \"cycles\":{},\"wall_s\":0.1,\"speedup\":{},\"completed\":1}}]}}",
+        s.name,
+        o.cycles,
+        o.speedup()
+    ))
+    .unwrap();
+    let failed = Json::parse(&format!(
+        "{{\"records\":[{{\"bench\":\"scenarios_8x8_faults\",\"point\":\"{}\",\
+         \"cycles\":0,\"wall_s\":0.1,\"completed\":0,\"failure\":\"quiesce timeout\"}}]}}",
+        s.name
+    ))
+    .unwrap();
+    // Doctored baseline with the failed record: the healthy fresh run is
+    // an improvement (a point started completing), never a regression.
+    let r = compare(&failed, &healthy, &CompareOpts::default());
+    assert!(r.passed(), "healthy fresh vs failed baseline must pass: {}", r.render());
+    assert!(r.regressions.is_empty());
+    // The reverse — a point that used to complete stops completing — is a
+    // real regression, reported as `completed`, not as a cycles artifact.
+    let r = compare(&healthy, &failed, &CompareOpts::default());
+    assert!(!r.passed(), "a point that stops completing must fail the gate");
+    assert!(r.regressions.iter().all(|x| x.metric == "completed"), "{}", r.render());
+}
+
+/// Regression test for the silent-skip bug: a baseline bench section the
+/// fresh run never executed used to vanish into `skipped_benches` with a
+/// green exit, so a renamed or dropped bench could evade the gate
+/// forever.  `--strict` (CI mode) turns that into a failure; the default
+/// stays permissive because the scheduler cross-check compares
+/// deliberately partial documents.
+#[test]
+fn bench_compare_strict_fails_when_a_baseline_bench_never_ran() {
+    let both = Json::parse(
+        "{\"records\":[\
+         {\"bench\":\"scenarios_8x8\",\"point\":\"a\",\"cycles\":100,\"wall_s\":0.1},\
+         {\"bench\":\"scenarios_16x16\",\"point\":\"a\",\"cycles\":200,\"wall_s\":0.1}]}",
+    )
+    .unwrap();
+    let only8 = Json::parse(
+        "{\"records\":[\
+         {\"bench\":\"scenarios_8x8\",\"point\":\"a\",\"cycles\":100,\"wall_s\":0.1}]}",
+    )
+    .unwrap();
+    let lax = compare(&both, &only8, &CompareOpts::default());
+    assert!(lax.passed(), "default mode keeps skipping permissive");
+    assert_eq!(lax.skipped_benches, vec!["scenarios_16x16".to_string()]);
+    let strict = CompareOpts { strict: true, ..CompareOpts::default() };
+    let r = compare(&both, &only8, &strict);
+    assert!(!r.passed(), "strict mode must fail on a never-ran bench section");
+    assert!(r.render().contains("SKIPPED scenarios_16x16"), "{}", r.render());
+}

@@ -233,6 +233,12 @@ pub struct SocConfig {
     /// Harvested tiles are never scheduled, injected at, or routed
     /// *through*; CPU/Mem/IO tiles must survive (validated).
     pub harvest: Vec<Coord>,
+    /// Arm the telemetry subsystem: per-router congestion counters on
+    /// every NoC plane plus the per-tile busy/sleeping/parked cycle
+    /// breakdown (DESIGN.md §telemetry).  Off by default — the hot path
+    /// then allocates nothing and results are byte-identical to a
+    /// telemetry-free build (`tests/prop_telemetry.rs`).
+    pub telemetry: bool,
 }
 
 impl SocConfig {
@@ -253,6 +259,7 @@ impl SocConfig {
             acc: AccConfig::default(),
             host: HostConfig::default(),
             harvest: Vec::new(),
+            telemetry: false,
         }
     }
 
@@ -272,6 +279,7 @@ impl SocConfig {
             acc: AccConfig::default(),
             host: HostConfig::default(),
             harvest: Vec::new(),
+            telemetry: false,
         }
     }
 
@@ -304,6 +312,7 @@ impl SocConfig {
             acc: AccConfig::default(),
             host: HostConfig::default(),
             harvest: Vec::new(),
+            telemetry: false,
         }
     }
 
@@ -406,6 +415,9 @@ impl SocConfig {
                 })
                 .collect::<Result<Vec<Coord>>>()?;
         }
+        if let Some(b) = j.get("telemetry") {
+            cfg.telemetry = b.as_bool()?;
+        }
         if let Some(h) = j.get("host") {
             set_u64(h, "invocation_overhead", |v| cfg.host.invocation_overhead = v as u32)?;
             set_u64(h, "irq_overhead", |v| cfg.host.irq_overhead = v as u32)?;
@@ -480,6 +492,7 @@ impl SocConfig {
                         .collect(),
                 ),
             ),
+            ("telemetry", Json::from(self.telemetry)),
             (
                 "host",
                 obj(vec![
@@ -795,6 +808,17 @@ mod tests {
         let c = SocConfig::from_json(r#"{"noc": {"bitwidth": 64}}"#).unwrap();
         assert_eq!(c.noc.bitwidth, 64);
         assert_eq!(c.width, 4, "rest defaults to the paper platform");
+    }
+
+    #[test]
+    fn telemetry_flag_roundtrips_and_defaults_off() {
+        assert!(!SocConfig::paper_3x4().telemetry, "telemetry is opt-in");
+        assert!(!SocConfig::from_json("{}").unwrap().telemetry);
+        let mut c = SocConfig::paper_3x4();
+        c.telemetry = true;
+        assert!(SocConfig::from_json(&c.to_json()).unwrap().telemetry);
+        assert!(SocConfig::from_json(r#"{"telemetry": true}"#).unwrap().telemetry);
+        assert!(SocConfig::from_json(r#"{"telemetry": 1}"#).is_err(), "must be a bool");
     }
 
     #[test]

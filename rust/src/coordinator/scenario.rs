@@ -31,6 +31,7 @@ use crate::coordinator::{App, Invocation, ProgramKind, Soc};
 use crate::fault::FaultPlan;
 use crate::noc::{TickMode, NUM_PLANES};
 use crate::sched::SchedMode;
+use crate::telemetry::TelemetryReport;
 use crate::util::Json;
 
 /// Evaluation platform a scenario runs on.
@@ -182,6 +183,10 @@ pub struct Scenario {
     /// Seed of the link storm (independent of the workload `seed` so the
     /// same traffic can be replayed under different fault draws).
     pub fault_seed: u64,
+    /// Arm telemetry: the [`Outcome`] then carries a [`TelemetryReport`]
+    /// of the optimized lowering.  Purely observational — cycles and flit
+    /// statistics are identical either way (`tests/prop_telemetry.rs`).
+    pub telemetry: bool,
 }
 
 /// Cycle window fault events are drawn from: early enough to hit every
@@ -218,6 +223,9 @@ pub struct Outcome {
     pub dropped_flits: u64,
     /// Socket sub-request retries (optimized lowering; 0 healthy).
     pub socket_retries: u64,
+    /// Congestion/utilization snapshot of the optimized lowering; `None`
+    /// unless [`Scenario::telemetry`] armed it.
+    pub telemetry: Option<TelemetryReport>,
 }
 
 impl Outcome {
@@ -265,6 +273,7 @@ impl Scenario {
             harvest_rows: Vec::new(),
             fault_links: 0,
             fault_seed: 1,
+            telemetry: false,
         }
     }
 
@@ -350,6 +359,7 @@ impl Scenario {
     fn soc(&self) -> Result<Soc> {
         let mut cfg = self.platform.config();
         cfg.noc.tick_mode = self.tick_mode;
+        cfg.telemetry = self.telemetry;
         if !self.harvest_rows.is_empty() {
             cfg.harvest_rows(&self.harvest_rows);
         }
@@ -397,7 +407,13 @@ impl Scenario {
         r.with_context(|| format!("scenario {} on {}", self.name, self.platform.code()))
     }
 
-    fn outcome(&self, cycles: u64, baseline_cycles: u64, report: &Report) -> Outcome {
+    fn outcome(
+        &self,
+        cycles: u64,
+        baseline_cycles: u64,
+        report: &Report,
+        telemetry: Option<TelemetryReport>,
+    ) -> Outcome {
         let mut plane_flits = [0u64; NUM_PLANES];
         let mut plane_delivered = [0u64; NUM_PLANES];
         for (i, p) in report.planes.iter().enumerate() {
@@ -416,6 +432,7 @@ impl Scenario {
             invocation_spans: report.invocations.clone(),
             dropped_flits: report.dropped_flits(),
             socket_retries: report.socket_retries(),
+            telemetry,
         }
     }
 
@@ -426,6 +443,7 @@ impl Scenario {
         let mut soc = self.soc()?;
         let cycles = g.run_budget(&mut soc, EdgePolicy::P2p, self.max_cycles)?;
         let report = soc.report();
+        let telem = soc.telemetry_report();
         // Free the optimized SoC (on the 16x16 platform its DRAM alone is
         // 256 MiB) before building the baseline one: farmed batches hold
         // `jobs` sims in flight, so per-sim peak memory is wall-clock for
@@ -433,7 +451,7 @@ impl Scenario {
         drop(soc);
         let mut base = self.soc()?;
         let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
-        Ok(self.outcome(cycles, baseline, &report))
+        Ok(self.outcome(cycles, baseline, &report, telem))
     }
 
     /// Red-black halo exchange on a ring of `n` nodes.
@@ -503,6 +521,7 @@ impl Scenario {
         App::new().phase(phase_a).phase(phase_b).launch(&mut soc)?;
         let cycles = soc.run(self.max_cycles)?;
         let report = soc.report();
+        let telem = soc.telemetry_report();
         drop(soc); // one SoC at a time: farmed batches run `jobs` sims at once
 
         // --- baseline: the same exchange staged through DRAM.
@@ -550,7 +569,7 @@ impl Scenario {
             .phase(evens.map(|i| mem_merge(i, out(i))).collect());
         app.launch(&mut base)?;
         let baseline = base.run(self.max_cycles)?;
-        Ok(self.outcome(cycles, baseline, &report))
+        Ok(self.outcome(cycles, baseline, &report, telem))
     }
 
     /// `stages` P2P producer/consumer phases separated by coherent-flag
@@ -596,13 +615,14 @@ impl Scenario {
         let got = soc.read_mem(stage(stages - 1), bytes as usize);
         ensure!(got == data, "coherent pipeline corrupted its stream");
         let report = soc.report();
+        let telem = soc.telemetry_report();
         drop(soc); // one SoC at a time: farmed batches run `jobs` sims at once
 
         // Baseline: the same 2*stages accelerators as a DMA-only chain.
         let g = Dataflow::generate(Shape::Chain(2 * stages as u8), bytes, burst, self.seed);
         let mut base = self.soc()?;
         let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
-        Ok(self.outcome(cycles, baseline, &report))
+        Ok(self.outcome(cycles, baseline, &report, telem))
     }
 
     /// Serialize to the scenario-file JSON schema.
@@ -625,6 +645,11 @@ impl Scenario {
         if self.fault_links > 0 {
             m.insert("fault_links".to_string(), Json::from(self.fault_links as u64));
             m.insert("fault_seed".to_string(), Json::from(self.fault_seed));
+        }
+        if self.telemetry {
+            // Emitted only when armed, so pre-telemetry scenario files
+            // serialize byte-identically.
+            m.insert("telemetry".to_string(), Json::from(true));
         }
         match self.pattern {
             Pattern::P2pChain { stages } | Pattern::CoherentPhases { stages } => {
@@ -710,6 +735,9 @@ impl Scenario {
         }
         if let Some(v) = j.get("fault_seed") {
             s.fault_seed = v.as_u64()?;
+        }
+        if let Some(v) = j.get("telemetry") {
+            s.telemetry = v.as_bool()?;
         }
         s.validate()?;
         Ok(s)

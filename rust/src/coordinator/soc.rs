@@ -23,6 +23,7 @@ use crate::fault::{FaultKind, FaultPlan};
 use crate::noc::{Coord, MeshParams, Noc, Plane};
 use crate::sched::{SchedMode, Wake};
 use crate::socket::Socket;
+use crate::telemetry::{TelemetryReport, TileTelemetry};
 use crate::tile::{AccTile, CpuTile, HostOp, IoTile, MemTile, Tile};
 
 use super::stats::Report;
@@ -207,6 +208,10 @@ pub struct Soc {
     fault_plan: FaultPlan,
     /// Next unapplied event in `fault_plan` (events are cycle-sorted).
     fault_next: usize,
+    /// Per-tile busy/sleeping/parked accounting, allocated only when
+    /// `cfg.telemetry` armed it (the NoC planes arm their counters in
+    /// lockstep).  Purely observational — see DESIGN.md §telemetry.
+    tile_telem: Option<Box<TileTelemetry>>,
 }
 
 impl Soc {
@@ -221,6 +226,9 @@ impl Soc {
         });
         noc.set_tick_mode(cfg.noc.tick_mode);
         noc.set_harvest(&cfg.harvest);
+        if cfg.telemetry {
+            noc.set_telemetry(true);
+        }
         let mut tiles = Vec::with_capacity(cfg.tiles.len());
         let mut acc_index = Vec::new();
         let mut next_acc: u16 = 0;
@@ -252,6 +260,7 @@ impl Soc {
             });
         }
         let sched = Sched::new(tiles.len());
+        let tile_telem = cfg.telemetry.then(|| Box::new(TileTelemetry::new(tiles.len())));
         Ok(Self {
             cfg,
             noc,
@@ -263,6 +272,7 @@ impl Soc {
             sched,
             fault_plan: FaultPlan::none(),
             fault_next: 0,
+            tile_telem,
         })
     }
 
@@ -385,8 +395,11 @@ impl Soc {
             self.apply_due_faults();
         }
         let now = self.now;
-        for t in &mut self.tiles {
-            t.tick(now, &mut self.noc);
+        for (i, t) in self.tiles.iter_mut().enumerate() {
+            let wake = t.tick(now, &mut self.noc);
+            if let Some(tt) = self.tile_telem.as_deref_mut() {
+                tt.note(i, now, wake);
+            }
         }
         self.noc.tick(now);
         self.now += 1;
@@ -408,6 +421,9 @@ impl Soc {
             let tile = &mut self.tiles[i as usize];
             let wake = tile.tick(now, &mut self.noc);
             let idle_if_parked = wake != Wake::Parked || tile.idle();
+            if let Some(tt) = self.tile_telem.as_deref_mut() {
+                tt.note(i as usize, now, wake);
+            }
             self.sched.note(i, wake, idle_if_parked);
         }
         cur.clear();
@@ -623,6 +639,23 @@ impl Soc {
         r.invocations.sort();
         r.sockets.sort_by_key(|(id, _)| *id);
         r
+    }
+
+    /// Telemetry snapshot: the per-plane congestion grids plus the
+    /// per-tile cycle breakdown, closed at the current cycle (each tile's
+    /// busy+sleeping+parked sums to [`Soc::now`]).  `None` unless the
+    /// config armed telemetry.  Non-destructive — the run may continue
+    /// and snapshot again later.
+    pub fn telemetry_report(&self) -> Option<TelemetryReport> {
+        let planes = self.noc.plane_telemetry()?;
+        let tiles = self.tile_telem.as_deref()?.snapshot(self.now);
+        Some(TelemetryReport {
+            width: self.cfg.width,
+            height: self.cfg.height,
+            cycles: self.now,
+            planes,
+            tiles,
+        })
     }
 
     /// Locate an accelerator id from a `(coord, slot)` pair.

@@ -40,6 +40,7 @@ pub mod runtime;
 pub mod sched;
 pub mod socket;
 pub mod sync;
+pub mod telemetry;
 pub mod tile;
 pub mod util;
 

@@ -6,10 +6,12 @@
 //! espsim sweep [--config soc.json]     # the full Fig. 6 grid
 //! espsim scenarios --jobs 8            # scenario registry on the farm
 //! espsim sweep-farm --seeds 100        # Monte-Carlo scenario/seed sweep
+//! espsim scenarios --telemetry t.json  # congestion heatmaps + hotspots
+//! espsim telemetry-check t.json        # validate a telemetry dump
 //! espsim config                        # print the default SoC config JSON
 //! ```
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use espsim::area::fig4_sweep;
 use espsim::config::SocConfig;
 use espsim::coordinator::experiments::{
@@ -20,6 +22,7 @@ use espsim::coordinator::farm::{expand_seeds, run_farm, FarmRun};
 use espsim::coordinator::scenario::{builtin_scenarios, Platform, Scenario};
 use espsim::noc::TickMode;
 use espsim::sched::SchedMode;
+use espsim::telemetry::{dump_document, validate_document};
 use espsim::util::bench::{fmt_secs, BenchJson, CompareOpts, Table};
 use espsim::util::Json;
 
@@ -36,7 +39,7 @@ USAGE:
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
                    [--sched MODE] [--harvest ROWS] [--faults N[:SEED]]
-                   [--jobs N] [--seeds K] [--list] [--json]
+                   [--jobs N] [--seeds K] [--telemetry OUT] [--list] [--json]
       Run the declarative scenario registry (P2P chains, multicast
       fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
       coherence-barrier pipelines) against the DMA-only baseline and
@@ -57,10 +60,18 @@ USAGE:
       input index, so cycles/speedup records are byte-identical to a
       serial run; every record additionally carries the batch's
       sims_per_sec farm throughput.
+      --telemetry OUT arms the per-router congestion counters on every
+      scenario and writes OUT as a JSON document of per-plane heatmaps
+      (stall / forwarded / fork / occupancy grids), per-tile
+      busy/sleeping/parked cycle breakdowns and a top-8 hotspot list
+      (schema espsim-telemetry-v1); each bench record then also carries
+      stall_cycles, hotspot_stall and mcast_forks totals.  Simulated
+      cycles are byte-identical with and without the flag.
   espsim sweep-farm [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
                     [--sched MODE|all] [--ticks MODE|all]
                     [--harvest ROWS] [--faults N[:SEED]]
-                    [--jobs N] [--seeds K] [--list] [--json]
+                    [--jobs N] [--seeds K] [--telemetry OUT]
+                    [--list] [--json]
       Monte-Carlo sweep on the simulation farm: cross the scenario
       registry with the sched-mode axis (--sched all), the NoC
       tick-mode axis (--ticks all), the degraded-mesh axes, and K
@@ -79,6 +90,11 @@ USAGE:
       quietly evade the gate); completion-0 records from degraded
       sweeps are compared on completion, never on their placeholder
       perf metrics.
+  espsim telemetry-check FILE
+      Validate a --telemetry dump: schema tag, mesh-shaped grids for
+      every plane and the tile breakdown, counter bounds (per-router
+      stalls never exceed elapsed cycles) and hotspot fields.  Exits
+      nonzero on a malformed document (the CI telemetry gate).
   espsim config
       Print the default SoC configuration as JSON.
 ";
@@ -156,6 +172,7 @@ struct ScenarioOpts {
     fault_seed: u64,
     jobs: usize,
     seeds: u64,
+    telemetry: Option<String>,
 }
 
 impl ScenarioOpts {
@@ -173,6 +190,7 @@ impl ScenarioOpts {
         let seeds: u64 =
             args.value("--seeds")?.map(|v| v.parse()).transpose()?.unwrap_or(default_seeds);
         ensure!(seeds >= 1, "--seeds needs at least one replica per scenario");
+        let telemetry = args.value("--telemetry")?;
         let harvest_rows: Vec<u8> = match args.value("--harvest")? {
             Some(v) => v
                 .split(',')
@@ -217,6 +235,7 @@ impl ScenarioOpts {
             fault_seed,
             jobs,
             seeds,
+            telemetry,
         })
     }
 
@@ -243,6 +262,13 @@ impl ScenarioOpts {
         if self.degraded() {
             for s in &mut scenarios {
                 *s = s.degraded(&self.harvest_rows, self.fault_links, self.fault_seed);
+            }
+        }
+        if self.telemetry.is_some() {
+            // The flag survives seed expansion and axis crossing: both
+            // clone the base scenario, so every replica records counters.
+            for s in &mut scenarios {
+                s.telemetry = true;
             }
         }
         ensure!(!scenarios.is_empty(), "no scenarios match");
@@ -300,8 +326,16 @@ fn list_scenarios(scenarios: &[Scenario]) {
 /// degraded mesh a failing scenario becomes a completion-0 record with
 /// its cause; on a pristine mesh the first failure *by input order* is
 /// returned — but only after the whole batch was measured and the sink
-/// finished, so the CI artifact keeps the partial record set.
-fn run_batch(scenarios: &[Scenario], jobs: usize, bench_name: &str, degraded: bool) -> Result<()> {
+/// finished, so the CI artifact keeps the partial record set.  When
+/// `telemetry` names a path, every outcome's congestion snapshot is
+/// collected into a single `espsim-telemetry-v1` heatmap document.
+fn run_batch(
+    scenarios: &[Scenario],
+    jobs: usize,
+    bench_name: &str,
+    degraded: bool,
+    telemetry: Option<&str>,
+) -> Result<()> {
     let farm = run_farm(scenarios, jobs);
     let completed = farm.completed();
     let sims_per_sec = farm.sims_per_sec();
@@ -313,6 +347,7 @@ fn run_batch(scenarios: &[Scenario], jobs: usize, bench_name: &str, degraded: bo
         &[28, 18, 12, 12, 8, 8, 9],
     );
     let mut failure: Option<anyhow::Error> = None;
+    let mut telem_entries: Vec<(String, Json)> = Vec::new();
     for (s, res) in scenarios.iter().zip(results) {
         let wall = res.wall_s;
         let o = match res.outcome {
@@ -375,6 +410,7 @@ fn run_batch(scenarios: &[Scenario], jobs: usize, bench_name: &str, degraded: bo
         // only record fields allowed to differ between `--jobs 1` and
         // `--jobs N` are this wall-clock family.
         let total_cps = (o.cycles + o.baseline_cycles) as f64 / wall.max(1e-12);
+        let point = format!("{}_{}", s.name, s.platform.code());
         let mut extras = vec![
             ("cycles_per_sec", Json::Num(total_cps)),
             ("sim_cycles_per_sec", Json::Num(total_cps)),
@@ -392,7 +428,14 @@ fn run_batch(scenarios: &[Scenario], jobs: usize, bench_name: &str, degraded: bo
             extras.push(("dropped_flits", Json::from(o.dropped_flits)));
             extras.push(("socket_retries", Json::from(o.socket_retries)));
         }
-        let point = format!("{}_{}", s.name, s.platform.code());
+        if let Some(tr) = &o.telemetry {
+            // Hotspot totals ride along in the bench record so a
+            // congestion shift shows up next to the cycles it cost.
+            extras.push(("stall_cycles", Json::from(tr.total_stall())));
+            extras.push(("hotspot_stall", Json::from(tr.max_router_stall())));
+            extras.push(("mcast_forks", Json::from(tr.total_forks())));
+            telem_entries.push((point.clone(), tr.to_json()));
+        }
         sink.record_with(&point, o.cycles, wall, &extras);
         t.row(&[
             s.name.clone(),
@@ -405,6 +448,13 @@ fn run_batch(scenarios: &[Scenario], jobs: usize, bench_name: &str, degraded: bo
         ]);
     }
     sink.finish();
+    if let Some(path) = telemetry {
+        let doc = dump_document(telem_entries);
+        let mut text = doc.to_string();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing telemetry dump {path}"))?;
+        println!("telemetry: wrote {path}");
+    }
     println!(
         "farm: {completed}/{sims} sims in {} ({jobs} jobs, {sims_per_sec:.2} sims/sec)",
         fmt_secs(farm_wall)
@@ -507,7 +557,13 @@ fn main() -> Result<()> {
                 list_scenarios(&scenarios);
                 return Ok(());
             }
-            run_batch(&scenarios, o.jobs, &o.bench_name("scenarios"), o.degraded())?;
+            run_batch(
+                &scenarios,
+                o.jobs,
+                &o.bench_name("scenarios"),
+                o.degraded(),
+                o.telemetry.as_deref(),
+            )?;
         }
         "sweep-farm" => {
             let scheds = sched_axis(&mut args)?;
@@ -538,7 +594,13 @@ fn main() -> Result<()> {
                 list_scenarios(&scenarios);
                 return Ok(());
             }
-            run_batch(&scenarios, o.jobs, &o.bench_name("sweep_farm"), o.degraded())?;
+            run_batch(
+                &scenarios,
+                o.jobs,
+                &o.bench_name("sweep_farm"),
+                o.degraded(),
+                o.telemetry.as_deref(),
+            )?;
         }
         "compare" => {
             let warn_only = args.flag("--warn-only");
@@ -565,6 +627,16 @@ fn main() -> Result<()> {
                     bail!("perf gate: fresh run regressed against {baseline}");
                 }
             }
+        }
+        "telemetry-check" => {
+            let path = args.positional("FILE")?;
+            args.finish()?;
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading telemetry dump {path}"))?;
+            let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+            validate_document(&doc).with_context(|| format!("validating {path}"))?;
+            let n = doc.req("scenarios")?.as_obj()?.len();
+            println!("{path}: ok ({n} scenarios, schema espsim-telemetry-v1)");
         }
         "config" => {
             args.finish()?;

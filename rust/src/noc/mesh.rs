@@ -26,6 +26,7 @@ use super::flit::{Coord, DestList, Dir, Flit, Message, PktId};
 use super::route_table::RouteTable;
 use super::router::{Move, Router, Slot, MAX_QUEUE_DEPTH};
 use super::routing::neighbor;
+use crate::telemetry::MeshTelemetry;
 
 /// Static parameters of one plane.
 #[derive(Debug, Clone, Copy)]
@@ -243,6 +244,11 @@ pub struct Mesh {
     /// check, so the healthy hot path pays one predictable branch and the
     /// fault layer allocates nothing (DESIGN.md §fault model).
     faulted: bool,
+    /// Congestion telemetry sink, allocated only when armed via
+    /// [`Mesh::set_telemetry`].  Mirrors the `faulted` gating contract:
+    /// `None` costs the hot path a predictable branch per recording site
+    /// and results stay byte-identical (DESIGN.md §telemetry).
+    telem: Option<Box<MeshTelemetry>>,
     /// Stats for this plane.
     pub stats: MeshStats,
 }
@@ -279,6 +285,7 @@ impl Mesh {
             scratch_moves: Vec::new(),
             table: Arc::new(RouteTable::xy(p.width, p.height)),
             faulted: false,
+            telem: None,
             stats: MeshStats::default(),
         }
     }
@@ -294,6 +301,20 @@ impl Mesh {
     /// The routing table currently in force.
     pub fn route_table(&self) -> &RouteTable {
         &self.table
+    }
+
+    /// Arm (or disarm) congestion telemetry.  Arming allocates zeroed
+    /// counters; disarming frees them and returns the plane to the
+    /// allocation-free hot path.  Counters never influence arbitration,
+    /// so simulation results are identical either way
+    /// (`tests/prop_telemetry.rs`).
+    pub fn set_telemetry(&mut self, on: bool) {
+        self.telem = if on { Some(Box::new(MeshTelemetry::new(self.p.n()))) } else { None };
+    }
+
+    /// The live congestion counters, when telemetry is armed.
+    pub fn telemetry(&self) -> Option<&MeshTelemetry> {
+        self.telem.as_deref()
     }
 
     /// Plane parameters.
@@ -437,6 +458,10 @@ impl Mesh {
             // cycle's arbitration (forks don't occupy the link yet, so
             // out_busy alone cannot serialize them).
             let mut claimed = [false; 5];
+            // Ports whose eligible front flit lost this cycle (telemetry
+            // only: recorded at the end of the router's turn when armed,
+            // a dead bitmask otherwise).
+            let mut stalled: u8 = 0;
             // 1. Replication-buffer drains (forked packets): one flit per
             //    output port per cycle, subject to downstream space.
             for d in Dir::ALL {
@@ -456,6 +481,7 @@ impl Mesh {
                     if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
                         >= self.p.queue_depth
                     {
+                        stalled |= 1 << o; // downstream backpressure
                         continue;
                     }
                     self.planned[ni][np] += 1;
@@ -485,9 +511,10 @@ impl Mesh {
                         // The table changed under this packet: no
                         // destination is reachable from here any more.
                         fault_drops.push((r as u32, in_port as u8));
+                    } else {
+                        // Body flit whose head was not yet granted — wait.
+                        stalled |= 1 << in_port;
                     }
-                    // Otherwise: body flit whose head was not yet granted —
-                    // wait.
                     continue;
                 }
                 let is_fork = mask.count_ones() > 1 || is_fork_body;
@@ -503,7 +530,9 @@ impl Mesh {
                                 && (router.out_alloc[o].is_some() || claimed[o])
                         });
                         if clash {
-                            continue; // a branch port is held by another packet
+                            // A branch port is held by another packet.
+                            stalled |= 1 << in_port;
+                            continue;
                         }
                         for o in 0..5 {
                             if mask & (1 << o) != 0 {
@@ -517,10 +546,9 @@ impl Mesh {
                 // Direct (unicast continuation) path: single output port.
                 let o = mask.trailing_zeros() as usize;
                 let d = Dir::ALL[o];
-                if out_busy[o] {
-                    continue;
-                }
-                if flit.is_head() && (router.out_alloc[o].is_some() || claimed[o]) {
+                if out_busy[o] || (flit.is_head() && (router.out_alloc[o].is_some() || claimed[o]))
+                {
+                    stalled |= 1 << in_port; // lost output-port arbitration
                     continue;
                 }
                 if d != Dir::Local {
@@ -539,6 +567,7 @@ impl Mesh {
                     if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
                         >= self.p.queue_depth
                     {
+                        stalled |= 1 << in_port; // downstream backpressure
                         continue;
                     }
                     self.planned[ni][np] += 1;
@@ -549,6 +578,13 @@ impl Mesh {
                     claimed[o] = true;
                 }
                 moves.push(Move { router: r as u32, in_port: in_port as u8, out_mask: mask });
+            }
+            // Record the router's stalled ports, at most once per tick —
+            // which is what keeps per-router stall <= elapsed cycles.
+            if stalled != 0 {
+                if let Some(t) = self.telem.as_deref_mut() {
+                    t.note_stalls(r, stalled);
+                }
             }
         }
 
@@ -610,6 +646,11 @@ impl Mesh {
                 }
                 if is_tail && copies > 1 {
                     self.pkts.add_tails(flit.pkt, copies - 1);
+                }
+                if is_head && copies > 1 {
+                    if let Some(t) = self.telem.as_deref_mut() {
+                        t.forks[r] += 1; // one multicast fork event
+                    }
                 }
                 let router = &mut self.routers[r];
                 if is_head {
@@ -684,6 +725,14 @@ impl Mesh {
         // Clear only the planned entries this cycle dirtied.
         for i in self.planned_dirty.drain(..) {
             self.planned[i as usize] = [0; 5];
+        }
+        // Telemetry occupancy sample: integrate post-move queue occupancy
+        // over this tick's active routers (idle routers contribute 0).
+        if let Some(t) = self.telem.as_deref_mut() {
+            t.active_ticks += 1;
+            for &i in &self.active.list {
+                t.occ_sum[i as usize] += self.routers[i as usize].occupancy as u64;
+            }
         }
         // Drop drained routers from the worklist.
         let routers = &self.routers;

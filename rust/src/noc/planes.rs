@@ -11,6 +11,7 @@ use std::sync::Arc;
 use super::flit::{Coord, Dir, Message};
 use super::mesh::{Mesh, MeshParams, MeshStats, StallProbe};
 use super::route_table::RouteTable;
+use crate::telemetry::PlaneTelemetry;
 
 /// Plane indices (fixed, as in ESP).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -297,6 +298,43 @@ impl Noc {
     /// Per-router forwarded-flit loads on one plane.
     pub fn router_loads(&self, plane: Plane) -> Vec<(Coord, u64)> {
         self.meshes[plane.idx()].router_loads()
+    }
+
+    /// Arm (or disarm) congestion telemetry on every plane.  Planes share
+    /// nothing, so the parallel tick needs no coordination: each mesh owns
+    /// its counters.
+    pub fn set_telemetry(&mut self, on: bool) {
+        for m in &mut self.meshes {
+            m.set_telemetry(on);
+        }
+    }
+
+    /// Is telemetry armed?  (Planes are armed and disarmed together.)
+    pub fn telemetry_enabled(&self) -> bool {
+        self.meshes[0].telemetry().is_some()
+    }
+
+    /// Per-plane telemetry snapshot ([`Plane::ALL`] order), pairing each
+    /// mesh's congestion counters with its ungated per-router forward
+    /// counts.  `None` unless telemetry is armed.
+    pub fn plane_telemetry(&self) -> Option<Vec<PlaneTelemetry>> {
+        self.meshes[0].telemetry()?;
+        Some(
+            self.meshes
+                .iter()
+                .map(|m| {
+                    let t = m.telemetry().expect("planes arm telemetry together");
+                    PlaneTelemetry {
+                        stall: t.stall.clone(),
+                        stall_dir: t.stall_dir.clone(),
+                        forwarded: m.router_loads().iter().map(|&(_, n)| n).collect(),
+                        forks: t.forks.clone(),
+                        occ_sum: t.occ_sum.clone(),
+                        active_ticks: t.active_ticks,
+                    }
+                })
+                .collect(),
+        )
     }
 }
 

@@ -1,0 +1,514 @@
+//! Gated telemetry: per-router congestion counters and per-tile cycle
+//! breakdowns (DESIGN.md §telemetry).
+//!
+//! Aggregate per-plane flit counts say a scenario got *slower*; telemetry
+//! says *where* — which router, on which plane, stalled for how many
+//! cycles, dominated by which port.  The subsystem is strictly opt-in
+//! (`SocConfig::telemetry` / `espsim … --telemetry OUT.json`): with the
+//! flag off no counter memory is allocated and simulation results are
+//! byte-identical to a build that never heard of telemetry
+//! (`tests/prop_telemetry.rs` pins this, the same zero-cost contract
+//! `prop_fault.rs` pins for the fault layer).  Counters are *observers*
+//! only — they never feed back into arbitration, so telemetry-on runs
+//! produce the same cycles/flit statistics as telemetry-off runs.
+//!
+//! Three layers:
+//!
+//! - [`MeshTelemetry`] — the live per-plane sink owned by each
+//!   `noc::Mesh` (stall cycles + per-port stall detail, multicast fork
+//!   events, occupancy integral).
+//! - [`TileTelemetry`] — the live per-tile busy/sleeping/parked tracker
+//!   owned by `Soc`, fed by the [`crate::sched::Wake`] state each tile
+//!   reports from its tick.  It records only *transitions* (O(changes),
+//!   not O(cycles)), so the worklist scheduler's idle-cycle fast-forward
+//!   needs no special casing: a gap spent `Parked` is one interval.
+//! - [`TelemetryReport`] — the immutable snapshot threaded through
+//!   `coordinator::scenario::Outcome` into the CLI heatmap dump.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::sched::Wake;
+use crate::util::Json;
+
+/// JSON plane keys, indexed by `noc::Plane::idx()`.
+pub const PLANE_NAMES: [&str; 6] = ["coh_req", "coh_fwd", "coh_rsp", "dma_req", "dma_rsp", "misc"];
+
+/// JSON port keys, indexed by `noc::Dir::idx()`.
+pub const PORT_NAMES: [&str; 5] = ["north", "south", "east", "west", "local"];
+
+/// Schema tag stamped on every telemetry dump document.
+pub const SCHEMA: &str = "espsim-telemetry-v1";
+
+/// Hotspots listed per scenario in the JSON dump.
+pub const TOP_HOTSPOTS: usize = 8;
+
+/// Live congestion counters for one plane's mesh, parallel to the router
+/// array.  A router is *stalled* on a cycle when at least one of its
+/// ports held an eligible flit (arrived, in front of its queue) that the
+/// plan pass could not advance — so `stall[r] <= elapsed cycles` by
+/// construction, while `stall_dir[r]` attributes the same cycles per
+/// port and may sum higher (several ports can block at once).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeshTelemetry {
+    /// Cycles with >=1 stalled port, per router.
+    pub stall: Vec<u64>,
+    /// Stalled cycles per port (Dir::idx() order), per router.
+    pub stall_dir: Vec<[u64; 5]>,
+    /// Multicast fork events (head flit replicated to >1 output), per router.
+    pub forks: Vec<u64>,
+    /// Sum over sampled ticks of the router's total queue occupancy.
+    pub occ_sum: Vec<u64>,
+    /// Ticks the plane did real work (the occupancy sample count).
+    pub active_ticks: u64,
+}
+
+impl MeshTelemetry {
+    /// Zeroed counters for an `n`-router mesh.
+    pub fn new(n: usize) -> Self {
+        Self {
+            stall: vec![0; n],
+            stall_dir: vec![[0; 5]; n],
+            forks: vec![0; n],
+            occ_sum: vec![0; n],
+            active_ticks: 0,
+        }
+    }
+
+    /// Record one stalled tick for router `r`; `mask` has bit `p` set for
+    /// each stalled port (Dir::idx() order).  Called at most once per
+    /// router per tick, which is what keeps `stall[r]` <= elapsed cycles.
+    #[inline]
+    pub fn note_stalls(&mut self, r: usize, mask: u8) {
+        self.stall[r] += 1;
+        let dirs = &mut self.stall_dir[r];
+        for (p, d) in dirs.iter_mut().enumerate() {
+            *d += ((mask >> p) & 1) as u64;
+        }
+    }
+}
+
+/// Snapshot of one plane's counters, plus the ungated per-router forward
+/// count (`Router::flits_forwarded`) the grids reconcile against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlaneTelemetry {
+    /// Cycles with >=1 stalled port, per router.
+    pub stall: Vec<u64>,
+    /// Stalled cycles per port (Dir::idx() order), per router.
+    pub stall_dir: Vec<[u64; 5]>,
+    /// Flits forwarded per router; grid total equals the plane's
+    /// `flit_hops` (pinned by `tests/prop_telemetry.rs`).
+    pub forwarded: Vec<u64>,
+    /// Multicast fork events per router.
+    pub forks: Vec<u64>,
+    /// Occupancy integral per router over the plane's active ticks.
+    pub occ_sum: Vec<u64>,
+    /// Ticks the plane did real work.
+    pub active_ticks: u64,
+}
+
+/// Per-tile cycle breakdown: how the run's cycles split across the
+/// PR-4 wake states.  Invariant: `busy + sleeping + parked` equals the
+/// elapsed cycles of the snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TileCycles {
+    /// Cycles the tile demanded a tick next cycle ([`Wake::Busy`]).
+    pub busy: u64,
+    /// Cycles spent waiting on a timed event ([`Wake::Sleeping`]).
+    pub sleeping: u64,
+    /// Cycles spent waiting on a delivery ([`Wake::Parked`]).
+    pub parked: u64,
+}
+
+/// Live per-tile wake-state tracker.  `note` is called with the `Wake` a
+/// tile reported from its tick and charges the interval since the last
+/// *transition* to the previous state, so cost is proportional to state
+/// changes.  Tiles start `Busy` at cycle 0 (matching the scheduler's
+/// all-busy reset).
+#[derive(Debug, Clone)]
+pub struct TileTelemetry {
+    cycles: Vec<TileCycles>,
+    state: Vec<u8>, // 0 = busy, 1 = sleeping, 2 = parked
+    since: Vec<u64>,
+}
+
+impl TileTelemetry {
+    /// Tracker for `n` tiles, all considered busy from cycle 0.
+    pub fn new(n: usize) -> Self {
+        Self { cycles: vec![TileCycles::default(); n], state: vec![0; n], since: vec![0; n] }
+    }
+
+    /// Note tile `i`'s wake state after its tick at cycle `now`.
+    #[inline]
+    pub fn note(&mut self, i: usize, now: u64, wake: Wake) {
+        let code = match wake {
+            Wake::Busy => 0,
+            Wake::Sleeping { .. } => 1,
+            Wake::Parked => 2,
+        };
+        if code != self.state[i] {
+            self.charge(i, now);
+            self.state[i] = code;
+        }
+    }
+
+    fn charge(&mut self, i: usize, now: u64) {
+        let dt = now - self.since[i];
+        let c = &mut self.cycles[i];
+        match self.state[i] {
+            0 => c.busy += dt,
+            1 => c.sleeping += dt,
+            _ => c.parked += dt,
+        }
+        self.since[i] = now;
+    }
+
+    /// Closed breakdown at cycle `end`: every still-open interval is
+    /// charged to its current state, so each tile's fields sum to `end`.
+    pub fn snapshot(&self, end: u64) -> Vec<TileCycles> {
+        (0..self.cycles.len())
+            .map(|i| {
+                let mut c = self.cycles[i];
+                let dt = end.saturating_sub(self.since[i]);
+                match self.state[i] {
+                    0 => c.busy += dt,
+                    1 => c.sleeping += dt,
+                    _ => c.parked += dt,
+                }
+                c
+            })
+            .collect()
+    }
+}
+
+/// One hotspot row: a (plane, router) pair ranked by stalled cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hotspot {
+    /// Plane index (`PLANE_NAMES` order).
+    pub plane: usize,
+    /// Router mesh coordinate.
+    pub x: u8,
+    /// Router mesh coordinate.
+    pub y: u8,
+    /// Cycles the router had >=1 stalled port.
+    pub stall: u64,
+    /// Port contributing the most stalled cycles (`PORT_NAMES` index).
+    pub dominant_dir: usize,
+}
+
+/// Immutable telemetry snapshot for one finished run: per-plane counter
+/// grids plus the per-tile cycle breakdown, all row-major over a
+/// `width x height` mesh.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryReport {
+    /// Mesh width (routers per row).
+    pub width: u8,
+    /// Mesh height.
+    pub height: u8,
+    /// Elapsed cycles at snapshot time.
+    pub cycles: u64,
+    /// One entry per plane, `PLANE_NAMES` order.
+    pub planes: Vec<PlaneTelemetry>,
+    /// One entry per router position, row-major.
+    pub tiles: Vec<TileCycles>,
+}
+
+impl TelemetryReport {
+    /// Total stalled router-cycles across all planes.
+    pub fn total_stall(&self) -> u64 {
+        self.planes.iter().map(|p| p.stall.iter().sum::<u64>()).sum()
+    }
+
+    /// The single worst router's stalled cycles (any plane).
+    pub fn max_router_stall(&self) -> u64 {
+        self.planes.iter().flat_map(|p| p.stall.iter().copied()).max().unwrap_or(0)
+    }
+
+    /// Total multicast fork events across all planes.
+    pub fn total_forks(&self) -> u64 {
+        self.planes.iter().map(|p| p.forks.iter().sum::<u64>()).sum()
+    }
+
+    /// The top `n` stalled (plane, router) pairs, most-stalled first;
+    /// ties break toward the lower plane then router index so the order
+    /// is deterministic.  Routers with zero stall never appear.
+    pub fn hotspots(&self, n: usize) -> Vec<Hotspot> {
+        let w = self.width as usize;
+        let mut all: Vec<Hotspot> = Vec::new();
+        for (pi, p) in self.planes.iter().enumerate() {
+            for (r, &stall) in p.stall.iter().enumerate() {
+                if stall == 0 {
+                    continue;
+                }
+                let dirs = &p.stall_dir[r];
+                let dominant_dir =
+                    (0..5).max_by_key(|&d| (dirs[d], std::cmp::Reverse(d))).unwrap_or(0);
+                all.push(Hotspot {
+                    plane: pi,
+                    x: (r % w) as u8,
+                    y: (r / w) as u8,
+                    stall,
+                    dominant_dir,
+                });
+            }
+        }
+        all.sort_by_key(|h| (std::cmp::Reverse(h.stall), h.plane, h.y, h.x));
+        all.truncate(n);
+        all
+    }
+
+    /// The dump-file JSON for one scenario: mesh-shaped grids per plane,
+    /// the tile breakdown grids, and the top-N hotspot table.  All keys
+    /// live in `BTreeMap`s, so the byte serialization is deterministic —
+    /// the CI gate `cmp`s two independent runs.
+    pub fn to_json(&self) -> Json {
+        let (w, h) = (self.width as usize, self.height as usize);
+        let grid = |vals: &[u64]| -> Json {
+            let row = |y: usize| {
+                Json::Arr(vals[y * w..(y + 1) * w].iter().map(|&v| Json::from(v)).collect())
+            };
+            Json::Arr((0..h).map(row).collect())
+        };
+        let mut planes = BTreeMap::new();
+        for (pi, p) in self.planes.iter().enumerate() {
+            let mut m = BTreeMap::new();
+            m.insert("stall".to_string(), grid(&p.stall));
+            m.insert("forwarded".to_string(), grid(&p.forwarded));
+            m.insert("forks".to_string(), grid(&p.forks));
+            m.insert("occupancy_sum".to_string(), grid(&p.occ_sum));
+            m.insert("active_ticks".to_string(), Json::from(p.active_ticks));
+            planes.insert(PLANE_NAMES[pi].to_string(), Json::Obj(m));
+        }
+        let pick = |f: fn(&TileCycles) -> u64| -> Vec<u64> { self.tiles.iter().map(f).collect() };
+        let mut tiles = BTreeMap::new();
+        tiles.insert("busy".to_string(), grid(&pick(|c| c.busy)));
+        tiles.insert("sleeping".to_string(), grid(&pick(|c| c.sleeping)));
+        tiles.insert("parked".to_string(), grid(&pick(|c| c.parked)));
+        let hotspots = Json::Arr(
+            self.hotspots(TOP_HOTSPOTS)
+                .into_iter()
+                .map(|hs| {
+                    let mut m = BTreeMap::new();
+                    m.insert("plane".to_string(), Json::from(PLANE_NAMES[hs.plane]));
+                    m.insert("x".to_string(), Json::from(hs.x as u64));
+                    m.insert("y".to_string(), Json::from(hs.y as u64));
+                    m.insert("stall".to_string(), Json::from(hs.stall));
+                    m.insert("dir".to_string(), Json::from(PORT_NAMES[hs.dominant_dir]));
+                    Json::Obj(m)
+                })
+                .collect(),
+        );
+        let mut doc = BTreeMap::new();
+        doc.insert("width".to_string(), Json::from(self.width as u64));
+        doc.insert("height".to_string(), Json::from(self.height as u64));
+        doc.insert("cycles".to_string(), Json::from(self.cycles));
+        doc.insert("planes".to_string(), Json::Obj(planes));
+        doc.insert("tiles".to_string(), Json::Obj(tiles));
+        doc.insert("hotspots".to_string(), hotspots);
+        Json::Obj(doc)
+    }
+}
+
+/// Assemble the top-level dump document from per-scenario reports
+/// (`point` name -> [`TelemetryReport::to_json`]).
+pub fn dump_document(entries: impl IntoIterator<Item = (String, Json)>) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::from(SCHEMA));
+    doc.insert("scenarios".to_string(), Json::Obj(entries.into_iter().collect()));
+    Json::Obj(doc)
+}
+
+/// Validate a telemetry dump document against the v1 schema: every grid
+/// is mesh-shaped, every counter a non-negative integer, per-router
+/// stall bounded by elapsed cycles, each tile's breakdown sums to the
+/// elapsed cycles, and the hotspot table sorted non-increasing with
+/// in-range coordinates.  `espsim telemetry-check` (and the CI gate
+/// behind it) is a thin wrapper over this.
+pub fn validate_document(doc: &Json) -> Result<()> {
+    ensure!(doc.req("schema")?.as_str()? == SCHEMA, "unknown telemetry schema");
+    let scenarios = doc.req("scenarios")?.as_obj()?;
+    for (name, s) in scenarios {
+        validate_scenario(s).map_err(|e| e.context(format!("scenario {name:?}")))?;
+    }
+    Ok(())
+}
+
+fn validate_scenario(s: &Json) -> Result<()> {
+    let w = s.req("width")?.as_u64()? as usize;
+    let h = s.req("height")?.as_u64()? as usize;
+    let cycles = s.req("cycles")?.as_u64()?;
+    ensure!(w >= 1 && h >= 1, "degenerate mesh {w}x{h}");
+    let grid = |g: &Json, what: &str, max: Option<u64>| -> Result<Vec<u64>> {
+        let rows = g.as_arr()?;
+        ensure!(rows.len() == h, "{what}: {} rows, mesh height {h}", rows.len());
+        let mut flat = Vec::with_capacity(w * h);
+        for row in rows {
+            let row = row.as_arr()?;
+            ensure!(row.len() == w, "{what}: {} cols, mesh width {w}", row.len());
+            for v in row {
+                let v = v.as_u64().map_err(|e| e.context(format!("{what} entry")))?;
+                if let Some(max) = max {
+                    ensure!(v <= max, "{what} entry {v} exceeds bound {max}");
+                }
+                flat.push(v);
+            }
+        }
+        Ok(flat)
+    };
+    let planes = s.req("planes")?;
+    for pname in PLANE_NAMES {
+        let p = planes.req(pname)?;
+        grid(p.req("stall")?, "stall", Some(cycles))
+            .map_err(|e| e.context(format!("plane {pname}")))?;
+        for key in ["forwarded", "forks", "occupancy_sum"] {
+            grid(p.req(key)?, key, None).map_err(|e| e.context(format!("plane {pname}")))?;
+        }
+        let active = p.req("active_ticks")?.as_u64()?;
+        ensure!(active <= cycles, "plane {pname}: active_ticks {active} > cycles {cycles}");
+    }
+    let tiles = s.req("tiles")?;
+    let busy = grid(tiles.req("busy")?, "tiles.busy", Some(cycles))?;
+    let sleeping = grid(tiles.req("sleeping")?, "tiles.sleeping", Some(cycles))?;
+    let parked = grid(tiles.req("parked")?, "tiles.parked", Some(cycles))?;
+    for i in 0..busy.len() {
+        let sum = busy[i] + sleeping[i] + parked[i];
+        ensure!(
+            sum == cycles,
+            "tile {i}: busy+sleeping+parked = {sum}, expected elapsed cycles {cycles}"
+        );
+    }
+    let hotspots = s.req("hotspots")?.as_arr()?;
+    let mut prev = u64::MAX;
+    for hs in hotspots {
+        let stall = hs.req("stall")?.as_u64()?;
+        ensure!(stall <= prev, "hotspots not sorted by stall (… {prev}, {stall} …)");
+        ensure!(stall <= cycles, "hotspot stall {stall} > cycles {cycles}");
+        prev = stall;
+        let plane = hs.req("plane")?.as_str()?;
+        ensure!(PLANE_NAMES.contains(&plane), "unknown hotspot plane {plane:?}");
+        let dir = hs.req("dir")?.as_str()?;
+        ensure!(PORT_NAMES.contains(&dir), "unknown hotspot dir {dir:?}");
+        let x = hs.req("x")?.as_u64()? as usize;
+        let y = hs.req("y")?.as_u64()? as usize;
+        ensure!(x < w && y < h, "hotspot ({x},{y}) outside {w}x{h} mesh");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_tracker_charges_transitions_and_closes_open_intervals() {
+        let mut t = TileTelemetry::new(2);
+        // Tile 0: busy [0,10), sleeping [10,25), busy [25,..).
+        t.note(0, 4, Wake::Busy); // no transition, no charge
+        t.note(0, 10, Wake::Sleeping { until: 25 });
+        t.note(0, 25, Wake::Busy);
+        // Tile 1: parked from cycle 3 onward.
+        t.note(1, 3, Wake::Parked);
+        let snap = t.snapshot(40);
+        assert_eq!(snap[0], TileCycles { busy: 25, sleeping: 15, parked: 0 });
+        assert_eq!(snap[1], TileCycles { busy: 3, sleeping: 0, parked: 37 });
+        // The snapshot is virtual: the tracker can keep going and
+        // snapshot again later.
+        let later = t.snapshot(50);
+        assert_eq!(later[0].busy, 35);
+    }
+
+    #[test]
+    fn stall_mask_counts_router_once_and_ports_individually() {
+        let mut m = MeshTelemetry::new(4);
+        m.note_stalls(2, 0b00101); // north + east
+        m.note_stalls(2, 0b00100); // east again
+        assert_eq!(m.stall[2], 2);
+        assert_eq!(m.stall_dir[2], [1, 0, 2, 0, 0]);
+        assert_eq!(m.stall[0], 0);
+    }
+
+    fn report_2x2() -> TelemetryReport {
+        let n = 4;
+        let mut planes = Vec::new();
+        for pi in 0..PLANE_NAMES.len() {
+            let mut p = PlaneTelemetry {
+                stall: vec![0; n],
+                stall_dir: vec![[0; 5]; n],
+                forwarded: vec![1; n],
+                forks: vec![0; n],
+                occ_sum: vec![0; n],
+                active_ticks: 5,
+            };
+            if pi == 3 {
+                // dma_req: router 1 heavily stalled toward west.
+                p.stall[1] = 9;
+                p.stall_dir[1] = [0, 0, 2, 7, 0];
+                p.stall[2] = 3;
+                p.stall_dir[2] = [3, 0, 0, 0, 0];
+            }
+            planes.push(p);
+        }
+        TelemetryReport {
+            width: 2,
+            height: 2,
+            cycles: 10,
+            planes,
+            tiles: vec![TileCycles { busy: 4, sleeping: 5, parked: 1 }; n],
+        }
+    }
+
+    #[test]
+    fn hotspots_rank_by_stall_with_dominant_port() {
+        let r = report_2x2();
+        let hs = r.hotspots(10);
+        assert_eq!(hs.len(), 2);
+        assert_eq!((hs[0].plane, hs[0].x, hs[0].y, hs[0].stall), (3, 1, 0, 9));
+        assert_eq!(PORT_NAMES[hs[0].dominant_dir], "west");
+        assert_eq!((hs[1].x, hs[1].y, hs[1].stall), (0, 1, 3));
+        assert_eq!(PORT_NAMES[hs[1].dominant_dir], "north");
+        assert_eq!(r.total_stall(), 12);
+        assert_eq!(r.max_router_stall(), 9);
+    }
+
+    #[test]
+    fn dump_document_roundtrips_and_validates() {
+        let doc = dump_document(vec![("shuffle_2x2".to_string(), report_2x2().to_json())]);
+        validate_document(&doc).unwrap();
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        validate_document(&reparsed).unwrap();
+        assert_eq!(reparsed.to_string(), doc.to_string());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_dumps() {
+        let good = dump_document(vec![("s".to_string(), report_2x2().to_json())]);
+        // Wrong grid shape: claim a 3-wide mesh.
+        let mut bad = good.clone();
+        if let Json::Obj(doc) = &mut bad {
+            let s = doc.get_mut("scenarios").unwrap();
+            if let Json::Obj(m) = s {
+                if let Json::Obj(sc) = m.get_mut("s").unwrap() {
+                    sc.insert("width".to_string(), Json::from(3u64));
+                }
+            }
+        }
+        assert!(validate_document(&bad).is_err());
+        // Stall above elapsed cycles.
+        let mut r = report_2x2();
+        r.planes[3].stall[1] = r.cycles + 1;
+        let bad = dump_document(vec![("s".to_string(), r.to_json())]);
+        assert!(validate_document(&bad).is_err());
+        // Tile breakdown that does not sum to the elapsed cycles.
+        let mut r = report_2x2();
+        r.tiles[0].busy += 1;
+        let bad = dump_document(vec![("s".to_string(), r.to_json())]);
+        assert!(validate_document(&bad).is_err());
+        // Unknown schema tag.
+        let mut bad = good.clone();
+        if let Json::Obj(doc) = &mut bad {
+            doc.insert("schema".to_string(), Json::from("espsim-telemetry-v0"));
+        }
+        assert!(validate_document(&bad).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Telemetry properties (DESIGN.md §telemetry):
+//!
+//! 1. **Telemetry is invisible**: arming the counters changes no cycle
+//!    and no statistic — the SoC-level twin of `prop_fault.rs`'s
+//!    empty-plan zero-cost invariant, and at the scenario level the
+//!    non-telemetry Outcome fields are identical across every sched and
+//!    NoC tick mode, armed or not.
+//! 2. **Counters reconcile**: per-plane forwarded grids total exactly the
+//!    plane's `flit_hops`, per-router stall never exceeds the elapsed
+//!    cycles (with per-port detail at least as large), plane active
+//!    ticks never exceed the run, and every tile's busy/sleeping/parked
+//!    breakdown sums to the elapsed cycles.
+//! 3. **Snapshots are deterministic**: repeat runs produce equal
+//!    `TelemetryReport`s, and the farm returns the same snapshot as a
+//!    serial run (the CI gate `cmp`s two independent dump files).
+//! 4. The dump document of a real run **validates against the v1
+//!    schema** end to end, hotspots sorted most-stalled first.
+
+use espsim::coordinator::farm::run_farm;
+use espsim::coordinator::scenario::{Outcome, Pattern, Platform, Scenario};
+use espsim::coordinator::workloads::{Dataflow, EdgePolicy, Shape};
+use espsim::noc::{TickMode, NUM_PLANES};
+use espsim::sched::SchedMode;
+use espsim::telemetry::{dump_document, validate_document, PLANE_NAMES};
+use espsim::{Soc, SocConfig};
+
+/// A 4x4 all-to-all shuffle on the 8x8 mesh: four producer streams merge
+/// into every consumer, so some router is guaranteed to arbitrate two
+/// eligible head flits for the same output and record a stall.
+fn shuffle_scenario() -> Scenario {
+    let mut s = Scenario::new(
+        "shuffle4x4",
+        Pattern::AllToAllShuffle { producers: 4, consumers: 4 },
+        Platform::Mesh8x8,
+    );
+    s.bytes = 16 << 10;
+    s.telemetry = true;
+    s
+}
+
+/// The outcome's debug print with the telemetry snapshot masked out —
+/// what must stay byte-identical when the counters are toggled.
+fn fingerprint_sans_telemetry(o: &Outcome) -> String {
+    let mut o = o.clone();
+    o.telemetry = None;
+    format!("{o:?}")
+}
+
+#[test]
+fn telemetry_is_invisible_at_the_soc_level() {
+    // The zero-cost contract: a telemetry-armed SoC simulates every
+    // cycle and statistic byte-identically to one that never allocated a
+    // counter (the counters only ever observe, never arbitrate).
+    let run = |telemetry: bool| {
+        let mut cfg = SocConfig::paper_3x4();
+        cfg.telemetry = telemetry;
+        let mut soc = Soc::new(cfg).unwrap();
+        let g = Dataflow::generate(Shape::Diamond(3), 16 << 10, 4096, 7);
+        let cycles = g.run(&mut soc, EdgePolicy::P2p).unwrap();
+        (cycles, format!("{:?}", soc.report()))
+    };
+    assert_eq!(run(false), run(true));
+}
+
+#[test]
+fn armed_scenarios_match_unarmed_across_sched_and_tick_modes() {
+    let mut base =
+        Scenario::new("chain", Pattern::P2pChain { stages: 3 }, Platform::Mesh8x8);
+    base.bytes = 8 << 10;
+    let reference = fingerprint_sans_telemetry(&base.run().unwrap());
+    for sched in [SchedMode::Worklist, SchedMode::FullScan] {
+        for tick in [TickMode::Sequential, TickMode::Parallel, TickMode::Auto] {
+            let mut s = base.clone();
+            s.telemetry = true;
+            s.sched = sched;
+            s.tick_mode = tick;
+            let o = s.run().unwrap();
+            assert!(o.telemetry.is_some(), "{sched:?}/{tick:?}: armed run lost its snapshot");
+            assert_eq!(
+                reference,
+                fingerprint_sans_telemetry(&o),
+                "{sched:?}/{tick:?}: telemetry perturbed the simulation"
+            );
+        }
+    }
+}
+
+#[test]
+fn counters_reconcile_and_dumps_validate() {
+    let s = shuffle_scenario();
+    let o = s.run().unwrap();
+    let tr = o.telemetry.as_ref().expect("armed run carries a snapshot");
+    let n = tr.width as usize * tr.height as usize;
+    assert_eq!(tr.planes.len(), NUM_PLANES);
+    for (p, pt) in tr.planes.iter().enumerate() {
+        assert_eq!(pt.stall.len(), n, "plane {p} stall grid");
+        assert_eq!(pt.stall_dir.len(), n, "plane {p} stall_dir grid");
+        assert_eq!(pt.forwarded.len(), n, "plane {p} forwarded grid");
+        assert_eq!(pt.forks.len(), n, "plane {p} forks grid");
+        assert_eq!(pt.occ_sum.len(), n, "plane {p} occupancy grid");
+        assert!(pt.active_ticks <= tr.cycles, "plane {p} active beyond the run");
+        // The gated stall/fork counters live next to the ungated forward
+        // counter: its grid must total exactly the plane's flit-hops.
+        assert_eq!(
+            pt.forwarded.iter().sum::<u64>(),
+            o.plane_flits[p],
+            "plane {p} ({}): forwarded grid disagrees with flit_hops",
+            PLANE_NAMES[p]
+        );
+        for r in 0..n {
+            assert!(pt.stall[r] <= tr.cycles, "plane {p} router {r}: stall beyond the run");
+            let per_port: u64 = pt.stall_dir[r].iter().sum();
+            assert!(
+                per_port >= pt.stall[r],
+                "plane {p} router {r}: port detail lost stalled cycles"
+            );
+        }
+    }
+    assert_eq!(tr.tiles.len(), n);
+    for (i, c) in tr.tiles.iter().enumerate() {
+        assert_eq!(
+            c.busy + c.sleeping + c.parked,
+            tr.cycles,
+            "tile {i}: breakdown does not cover the run"
+        );
+    }
+    assert!(tr.total_stall() > 0, "a 4x4 shuffle must contend somewhere");
+    assert!(tr.max_router_stall() <= tr.cycles);
+    let hotspots = tr.hotspots(usize::MAX);
+    assert!(!hotspots.is_empty());
+    assert!(
+        hotspots.windows(2).all(|w| w[0].stall >= w[1].stall),
+        "hotspots not sorted most-stalled first"
+    );
+    let doc = dump_document(vec![("shuffle4x4_mesh_8x8".to_string(), tr.to_json())]);
+    validate_document(&doc).unwrap();
+}
+
+#[test]
+fn snapshots_are_deterministic_and_farm_equals_serial() {
+    let mut chain =
+        Scenario::new("chain", Pattern::P2pChain { stages: 3 }, Platform::Mesh8x8);
+    chain.bytes = 8 << 10;
+    chain.telemetry = true;
+    let mut fanout = Scenario::new(
+        "fanout",
+        Pattern::MulticastFanout { consumers: 4 },
+        Platform::Mesh8x8,
+    );
+    fanout.bytes = 8 << 10;
+    fanout.telemetry = true;
+    let batch = vec![chain, fanout];
+    let snapshots = |jobs: usize| {
+        run_farm(&batch, jobs)
+            .results
+            .into_iter()
+            .map(|r| r.outcome.unwrap().telemetry.expect("armed run carries a snapshot"))
+            .collect::<Vec<_>>()
+    };
+    let serial = snapshots(1);
+    // Repeat run: byte-for-byte the same counters (the CI gate cmp's two
+    // independently produced dump files).
+    assert_eq!(serial, snapshots(1), "repeat serial run diverged");
+    // Farm run: worker threads change wall-clock only, never a counter.
+    assert_eq!(serial, snapshots(4), "farmed run diverged from serial");
+    let entries = batch
+        .iter()
+        .zip(&serial)
+        .map(|(s, tr)| (format!("{}_{}", s.name, s.platform.code()), tr.to_json()));
+    let doc = dump_document(entries);
+    validate_document(&doc).unwrap();
+    let reparsed = espsim::util::Json::parse(&doc.to_string()).unwrap();
+    assert_eq!(reparsed.to_string(), doc.to_string(), "dump serialization unstable");
+}

@@ -6,7 +6,9 @@
 //! 4. sequential vs concurrent baseline host model;
 //! 5. multicast fork vs serial unicast NoC cost (flit-hops);
 //! 6. coherence-flag sync vs IRQ round trip latency;
-//! 9. serial vs thread-pooled simulation farm (sims/sec scaling).
+//! 9. serial vs thread-pooled simulation farm (sims/sec scaling);
+//! 10. routing orientation, XY vs mixed request/response planes
+//!     (congestion A/B on the 16x16 shuffle and halo scenarios).
 //!
 //! ```text
 //! cargo bench --bench ablations
@@ -17,10 +19,13 @@
 use espsim::config::SocConfig;
 use espsim::coordinator::experiments::{run_fig6_point, run_multicast, Fig6Options};
 use espsim::coordinator::farm::{expand_seeds, run_farm};
-use espsim::coordinator::scenario::{builtin_scenarios, Pattern, Platform, Scenario};
+use espsim::coordinator::scenario::{
+    builtin_scenarios, OrientationMode, Pattern, Platform, Scenario,
+};
 use espsim::coordinator::Soc;
 use espsim::noc::{DestList, Mesh, MeshParams, Message, MsgKind};
 use espsim::sched::SchedMode;
+use espsim::telemetry::PLANE_NAMES;
 use espsim::util::bench::{fmt_secs, measure, time_once, BenchJson, Table};
 use espsim::util::Json;
 use std::sync::Arc;
@@ -336,6 +341,67 @@ fn farm_scaling(sink: &mut BenchJson) {
     }
 }
 
+fn orientation_ab(sink: &mut BenchJson) {
+    println!("\n== ablation 10: routing orientation, XY vs mixed planes (16x16) ==");
+    println!("   (telemetry-armed congestion A/B on the all-to-all shuffle and halo ring)");
+    let t = Table::new(
+        &["scenario", "cycles", "stall-cy", "peak-stall", "peak-occ"],
+        &[26, 10, 10, 10, 12],
+    );
+    // Per-plane stall keys ride along in the bench record so a shifted
+    // hotspot shows up next to the cycles it cost.
+    let stall_keys: Vec<String> = PLANE_NAMES.iter().map(|n| format!("stall_{n}")).collect();
+    let bases = [
+        Scenario::new(
+            "shuffle4x4",
+            Pattern::AllToAllShuffle { producers: 4, consumers: 4 },
+            Platform::Mesh16x16,
+        ),
+        Scenario::new("halo_ring8", Pattern::HaloExchange { nodes: 8 }, Platform::Mesh16x16),
+    ];
+    for base in bases {
+        // (mode, cycles, peak-router stall) per arm, XY first, for the
+        // summary line below the table.
+        let mut arms: Vec<(OrientationMode, u64, u64)> = Vec::new();
+        for mode in [OrientationMode::Xy, OrientationMode::Mixed] {
+            let mut s = base.oriented(mode);
+            s.telemetry = true;
+            let (o, wall) = time_once(|| s.run().unwrap());
+            let tr = o.telemetry.as_ref().unwrap();
+            let peak_occ =
+                tr.planes.iter().flat_map(|p| p.occ_sum.iter().copied()).max().unwrap_or(0);
+            let mut extras = vec![
+                ("orientation", Json::from(mode.code())),
+                ("stall_cycles", Json::from(tr.total_stall())),
+                ("hotspot_stall", Json::from(tr.max_router_stall())),
+                ("peak_occupancy", Json::from(peak_occ)),
+            ];
+            for (pi, p) in tr.planes.iter().enumerate() {
+                extras.push((stall_keys[pi].as_str(), Json::from(p.stall.iter().sum::<u64>())));
+            }
+            let point = format!("ablation10_orient_{}_16x16", s.name);
+            sink.record_with(&point, o.cycles, wall, &extras);
+            t.row(&[
+                s.name.clone(),
+                format!("{}", o.cycles),
+                format!("{}", tr.total_stall()),
+                format!("{}", tr.max_router_stall()),
+                format!("{peak_occ}"),
+            ]);
+            arms.push((mode, o.cycles, tr.max_router_stall()));
+        }
+        let (_, _, xy_peak) = arms[0];
+        let (_, _, mx_peak) = arms[1];
+        println!(
+            "  {}: peak-router stall {} (xy) -> {} (mixed), {:+.1}%",
+            base.name,
+            xy_peak,
+            mx_peak,
+            (mx_peak as f64 / xy_peak.max(1) as f64 - 1.0) * 100.0
+        );
+    }
+}
+
 fn main() {
     let mut sink = BenchJson::from_args("ablations");
     buffering(&mut sink);
@@ -347,5 +413,6 @@ fn main() {
     workload_shapes();
     sched_scan_vs_worklist(&mut sink);
     farm_scaling(&mut sink);
+    orientation_ab(&mut sink);
     sink.finish();
 }

@@ -13,8 +13,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::util::Json;
 
-use crate::noc::{header_dest_capacity_for, Coord, RouteTable, TickMode, MAX_DESTS,
-                 MAX_QUEUE_DEPTH};
+use crate::noc::{header_dest_capacity_for, Coord, Orientation, RouteTable, TickMode,
+                 MAX_DESTS, MAX_QUEUE_DEPTH, NUM_PLANES};
 
 /// Largest supported mesh edge.  Coordinates stay `u8`, but the header
 /// destination encoding (see [`crate::noc::flit::bits_per_dest`]) and the
@@ -87,6 +87,9 @@ pub struct NocConfig {
     /// How `Noc::tick` schedules the six planes (sequential, parallel, or
     /// auto thread fan-out); results are identical in every mode.
     pub tick_mode: TickMode,
+    /// Per-plane routing orientation ([`crate::noc::Plane::ALL`] order).
+    /// All-XY by default — the paper's baseline and the byte-exact legacy.
+    pub orientations: [Orientation; NUM_PLANES],
 }
 
 impl Default for NocConfig {
@@ -96,6 +99,7 @@ impl Default for NocConfig {
             queue_depth: 4,
             max_mcast_dests: MAX_DESTS,
             tick_mode: TickMode::Auto,
+            orientations: [Orientation::Xy; NUM_PLANES],
         }
     }
 }
@@ -375,6 +379,18 @@ impl SocConfig {
                 cfg.noc.tick_mode = TickMode::from_code(s)
                     .ok_or_else(|| anyhow!("unknown tick_mode {s:?}"))?;
             }
+            if let Some(o) = n.get("orientations") {
+                let arr = o.as_arr()?;
+                ensure!(
+                    arr.len() == NUM_PLANES,
+                    "orientations must list one code per plane ({NUM_PLANES})"
+                );
+                for (i, v) in arr.iter().enumerate() {
+                    let s = v.as_str()?;
+                    cfg.noc.orientations[i] = Orientation::from_code(s)
+                        .ok_or_else(|| anyhow!("unknown orientation {s:?}"))?;
+                }
+            }
         }
         if let Some(m) = j.get("mem") {
             set_u64(m, "dram_bytes", |v| cfg.mem.dram_bytes = v)?;
@@ -448,6 +464,12 @@ impl SocConfig {
                     ("queue_depth", Json::from(self.noc.queue_depth as u64)),
                     ("max_mcast_dests", Json::from(self.noc.max_mcast_dests as u64)),
                     ("tick_mode", Json::from(self.noc.tick_mode.code())),
+                    (
+                        "orientations",
+                        Json::Arr(
+                            self.noc.orientations.iter().map(|o| Json::from(o.code())).collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -775,6 +797,23 @@ mod tests {
             "default stays auto"
         );
         assert!(SocConfig::from_json(r#"{"noc": {"tick_mode": "bogus"}}"#).is_err());
+    }
+
+    #[test]
+    fn orientations_roundtrip_through_json() {
+        let mut c = SocConfig::paper_3x4();
+        c.noc.orientations[2] = Orientation::Yx;
+        c.noc.orientations[4] = Orientation::FlippedYx;
+        let c2 = SocConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.noc.orientations, c.noc.orientations);
+        assert_eq!(
+            SocConfig::from_json("{}").unwrap().noc.orientations,
+            [Orientation::Xy; NUM_PLANES],
+            "absent field defaults to all-XY"
+        );
+        assert!(SocConfig::from_json(r#"{"noc": {"orientations": ["zigzag"]}}"#).is_err());
+        let short = r#"{"noc": {"orientations": ["xy", "yx"]}}"#;
+        assert!(SocConfig::from_json(short).is_err(), "must name every plane");
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::coordinator::stats::Report;
 use crate::coordinator::workloads::{multi_pull_invocation, Dataflow, EdgePolicy, Shape};
 use crate::coordinator::{App, Invocation, ProgramKind, Soc};
 use crate::fault::FaultPlan;
-use crate::noc::{TickMode, NUM_PLANES};
+use crate::noc::{Orientation, TickMode, NUM_PLANES};
 use crate::sched::SchedMode;
 use crate::telemetry::TelemetryReport;
 use crate::util::Json;
@@ -72,6 +72,61 @@ impl Platform {
             Platform::Paper3x4 => SocConfig::paper_3x4(),
             Platform::Mesh8x8 => SocConfig::scaled_8x8(),
             Platform::Mesh16x16 => SocConfig::scaled_16x16(),
+        }
+    }
+}
+
+/// Scenario-level routing-orientation axis: a named per-plane
+/// [`Orientation`] assignment (the full 6-tuple stays a config-level
+/// concern; scenarios pick from the assignments worth benchmarking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OrientationMode {
+    /// Every plane XY — the paper's baseline (byte-exact legacy).
+    #[default]
+    Xy,
+    /// Every plane YX.
+    Yx,
+    /// Request planes XY, forward/response planes YX — the ttx-rs-style
+    /// split that spreads request and response traffic over disjoint
+    /// column/row link sets.
+    Mixed,
+}
+
+impl OrientationMode {
+    /// Every mode, in code order.
+    pub const ALL: [OrientationMode; 3] =
+        [OrientationMode::Xy, OrientationMode::Yx, OrientationMode::Mixed];
+
+    /// Stable short code (JSON field, CLI flag, bench name suffix).
+    pub fn code(self) -> &'static str {
+        match self {
+            OrientationMode::Xy => "xy",
+            OrientationMode::Yx => "yx",
+            OrientationMode::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a [`code`](Self::code) back into a mode.
+    pub fn from_code(s: &str) -> Option<Self> {
+        OrientationMode::ALL.into_iter().find(|m| m.code() == s)
+    }
+
+    /// The per-plane assignment ([`crate::noc::Plane::ALL`] order).
+    /// `Mixed` keeps CohReq/DmaReq/Misc on XY and flips CohFwd/CohRsp/
+    /// DmaRsp to YX, so a request plane and the plane answering it never
+    /// contend for the same column links.
+    pub fn plane_orientations(self) -> [Orientation; NUM_PLANES] {
+        match self {
+            OrientationMode::Xy => [Orientation::Xy; NUM_PLANES],
+            OrientationMode::Yx => [Orientation::Yx; NUM_PLANES],
+            OrientationMode::Mixed => [
+                Orientation::Xy, // CohReq
+                Orientation::Yx, // CohFwd
+                Orientation::Yx, // CohRsp
+                Orientation::Xy, // DmaReq
+                Orientation::Yx, // DmaRsp
+                Orientation::Xy, // Misc
+            ],
         }
     }
 }
@@ -187,6 +242,10 @@ pub struct Scenario {
     /// of the optimized lowering.  Purely observational — cycles and flit
     /// statistics are identical either way (`tests/prop_telemetry.rs`).
     pub telemetry: bool,
+    /// Routing-orientation axis (XY baseline, all-YX, or the mixed
+    /// request-XY/response-YX split).  Unlike `telemetry`, this *does*
+    /// change cycles — which is the point of the congestion A/B.
+    pub orientation: OrientationMode,
 }
 
 /// Cycle window fault events are drawn from: early enough to hit every
@@ -274,7 +333,20 @@ impl Scenario {
             fault_links: 0,
             fault_seed: 1,
             telemetry: false,
+            orientation: OrientationMode::default(),
         }
+    }
+
+    /// Copy with the routing-orientation axis set.  Non-XY modes gain a
+    /// `+yx`/`+mixed` name suffix so bench records from different
+    /// orientations never share a point namespace.
+    pub fn oriented(&self, mode: OrientationMode) -> Self {
+        let mut s = self.clone();
+        s.orientation = mode;
+        if mode != OrientationMode::Xy {
+            s.name = format!("{}+{}", s.name, mode.code());
+        }
+        s
     }
 
     /// Degraded-mode copy: `rows` harvested, `links` killed mid-run.  The
@@ -360,6 +432,7 @@ impl Scenario {
         let mut cfg = self.platform.config();
         cfg.noc.tick_mode = self.tick_mode;
         cfg.telemetry = self.telemetry;
+        cfg.noc.orientations = self.orientation.plane_orientations();
         if !self.harvest_rows.is_empty() {
             cfg.harvest_rows(&self.harvest_rows);
         }
@@ -651,6 +724,11 @@ impl Scenario {
             // serialize byte-identically.
             m.insert("telemetry".to_string(), Json::from(true));
         }
+        if self.orientation != OrientationMode::Xy {
+            // Same contract: absent means the XY baseline, so existing
+            // scenario files and committed bench records stay valid.
+            m.insert("orientation".to_string(), Json::from(self.orientation.code()));
+        }
         match self.pattern {
             Pattern::P2pChain { stages } | Pattern::CoherentPhases { stages } => {
                 m.insert("stages".to_string(), Json::from(stages as u64));
@@ -739,6 +817,11 @@ impl Scenario {
         if let Some(v) = j.get("telemetry") {
             s.telemetry = v.as_bool()?;
         }
+        if let Some(v) = j.get("orientation") {
+            let code = v.as_str()?;
+            s.orientation = OrientationMode::from_code(code)
+                .ok_or_else(|| anyhow!("unknown orientation {code:?}"))?;
+        }
         s.validate()?;
         Ok(s)
     }
@@ -815,6 +898,58 @@ mod tests {
             assert_eq!(s, s2, "{} roundtrip", s.name);
         }
         assert!(Scenario::from_json(&Json::parse("{\"name\":\"x\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn orientation_roundtrips_and_defaults_to_xy() {
+        let base = Scenario::new("t", Pattern::P2pChain { stages: 3 }, Platform::Paper3x4);
+        // Absent field: the XY baseline, and to_json leaves it out so
+        // pre-orientation scenario files serialize byte-identically.
+        assert_eq!(base.orientation, OrientationMode::Xy);
+        assert!(base.to_json().get("orientation").is_none());
+        assert_eq!(Scenario::from_json(&base.to_json()).unwrap().orientation,
+                   OrientationMode::Xy);
+        for mode in [OrientationMode::Yx, OrientationMode::Mixed] {
+            let s = base.oriented(mode);
+            assert_eq!(s.name, format!("t+{}", mode.code()), "non-XY modes suffix the name");
+            let s2 = Scenario::from_json(&s.to_json()).unwrap();
+            assert_eq!(s, s2, "{mode:?} roundtrip");
+        }
+        assert_eq!(base.oriented(OrientationMode::Xy).name, "t", "XY keeps the bare name");
+        let bad = Json::parse(r#"{"name":"x","pattern":"p2p_chain","stages":2,
+                                  "platform":"paper_3x4","orientation":"zigzag"}"#)
+            .unwrap();
+        assert!(Scenario::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn orientation_modes_name_every_plane() {
+        for mode in OrientationMode::ALL {
+            assert_eq!(OrientationMode::from_code(mode.code()), Some(mode));
+        }
+        let mixed = OrientationMode::Mixed.plane_orientations();
+        assert_eq!(mixed.len(), NUM_PLANES);
+        assert!(mixed.contains(&Orientation::Xy) && mixed.contains(&Orientation::Yx));
+        assert_eq!(OrientationMode::Xy.plane_orientations(), [Orientation::Xy; NUM_PLANES]);
+        assert_eq!(OrientationMode::Yx.plane_orientations(), [Orientation::Yx; NUM_PLANES]);
+    }
+
+    #[test]
+    fn oriented_scenarios_run_and_deliver() {
+        // The same chain completes under every orientation mode; cycles may
+        // differ (that is the point), deliveries may not.
+        let mut s = Scenario::new("t", Pattern::P2pChain { stages: 3 }, Platform::Paper3x4);
+        s.bytes = 8 << 10;
+        let reference = s.run().unwrap();
+        for mode in [OrientationMode::Yx, OrientationMode::Mixed] {
+            let o = s.oriented(mode).run().unwrap();
+            assert!(o.cycles > 0 && o.baseline_cycles > 0, "{mode:?}");
+            assert_eq!(o.p2p_bytes, reference.p2p_bytes, "{mode:?}: payload changed");
+            assert_eq!(
+                o.plane_delivered, reference.plane_delivered,
+                "{mode:?}: delivery counts changed"
+            );
+        }
     }
 
     #[test]

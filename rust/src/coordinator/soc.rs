@@ -225,6 +225,9 @@ impl Soc {
             queue_depth: cfg.noc.queue_depth,
         });
         noc.set_tick_mode(cfg.noc.tick_mode);
+        // Orientations first: the harvest rebuild below materializes the
+        // per-plane tables under whatever orientations are in force.
+        noc.set_orientations(cfg.noc.orientations);
         noc.set_harvest(&cfg.harvest);
         if cfg.telemetry {
             noc.set_telemetry(true);

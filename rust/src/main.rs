@@ -19,7 +19,7 @@ use espsim::coordinator::experiments::{
     run_fig6_point, Fig6Options,
 };
 use espsim::coordinator::farm::{expand_seeds, run_farm, FarmRun};
-use espsim::coordinator::scenario::{builtin_scenarios, Platform, Scenario};
+use espsim::coordinator::scenario::{builtin_scenarios, OrientationMode, Platform, Scenario};
 use espsim::noc::TickMode;
 use espsim::sched::SchedMode;
 use espsim::telemetry::{dump_document, validate_document};
@@ -38,7 +38,8 @@ USAGE:
       The full Fig. 6 grid (consumers x data sizes); --mesh16 runs the
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
-                   [--sched MODE] [--harvest ROWS] [--faults N[:SEED]]
+                   [--sched MODE] [--orientation MODE|all]
+                   [--harvest ROWS] [--faults N[:SEED]]
                    [--jobs N] [--seeds K] [--telemetry OUT] [--list] [--json]
       Run the declarative scenario registry (P2P chains, multicast
       fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
@@ -49,6 +50,11 @@ USAGE:
       --sched picks the SoC tile scheduler (\"worklist\", the default, or
       the \"full_scan\" reference) — simulated cycles are identical in
       both, so the CI perf gate cross-checks the two documents.
+      --orientation picks the per-plane routing orientation (\"xy\", the
+      default; \"yx\"; \"mixed\", which splits request planes XY and
+      response planes YX; or \"all\" to run every mode) — unlike --sched
+      this axis changes the simulated cycles, and non-XY runs suffix
+      their bench points +yx / +mixed.
       --harvest disables the listed mesh rows (comma-separated; each
       keeps a bridge tile so the mesh stays routable) and --faults
       kills N random links mid-run from a seeded deterministic plan.
@@ -69,16 +75,18 @@ USAGE:
       cycles are byte-identical with and without the flag.
   espsim sweep-farm [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
                     [--sched MODE|all] [--ticks MODE|all]
+                    [--orientation MODE|all]
                     [--harvest ROWS] [--faults N[:SEED]]
                     [--jobs N] [--seeds K] [--telemetry OUT]
                     [--list] [--json]
       Monte-Carlo sweep on the simulation farm: cross the scenario
       registry with the sched-mode axis (--sched all), the NoC
-      tick-mode axis (--ticks all), the degraded-mesh axes, and K
-      seeded replicas per point (default 8), then run the whole batch
+      tick-mode axis (--ticks all), the routing-orientation axis
+      (--orientation all), the degraded-mesh axes, and K seeded
+      replicas per point (default 8), then run the whole batch
       across the thread pool (--jobs, default 0 = one per core).
       Records land in the sweep_farm_* bench sections with a +seedN
-      (and +sched/+tick) suffix per point.
+      (and +sched/+tick/+yx/+mixed) suffix per point.
   espsim compare BASELINE FRESH [--tol-cycles F] [--tol-speedup F]
                  [--tol-throughput F] [--strict] [--warn-only]
       Diff a fresh bench document against a committed baseline with
@@ -315,6 +323,20 @@ fn tick_axis(args: &mut Args) -> Result<Vec<TickMode>> {
     })
 }
 
+/// `--orientation` axis: one routing-orientation mode (`xy`, the
+/// default; `yx`; `mixed`) or `all` to cross the three.  Unlike the
+/// sched and tick axes this one changes the simulated cycles — it is
+/// the congestion A/B the orientation ablation measures — so non-XY
+/// points carry a `+yx` / `+mixed` name suffix.
+fn orientation_axis(args: &mut Args) -> Result<Vec<OrientationMode>> {
+    Ok(match args.value("--orientation")? {
+        None => vec![OrientationMode::default()],
+        Some(c) if c == "all" => OrientationMode::ALL.to_vec(),
+        Some(c) => vec![OrientationMode::from_code(&c)
+            .ok_or_else(|| anyhow!("unknown --orientation {c:?} (xy, yx, mixed, all)"))?],
+    })
+}
+
 fn list_scenarios(scenarios: &[Scenario]) {
     for s in scenarios {
         println!("{:32} {:20} {:10} {:>8} B", s.name, s.pattern.code(), s.platform.code(), s.bytes);
@@ -542,6 +564,7 @@ fn main() -> Result<()> {
                         .ok_or_else(|| anyhow!("unknown --sched {code:?} (worklist, full_scan)"))
                 })
                 .transpose()?;
+            let orients = orientation_axis(&mut args)?;
             // Serial, single-seed defaults: without --jobs/--seeds the
             // command behaves (and records) exactly as before the farm.
             let o = ScenarioOpts::parse(&mut args, 1, 1)?;
@@ -552,6 +575,10 @@ fn main() -> Result<()> {
                     s.sched = m;
                 }
             }
+            // Cross with the orientation axis; `oriented` suffixes the
+            // name for non-XY modes so every bench point stays unique.
+            let scenarios: Vec<Scenario> =
+                scenarios.iter().flat_map(|s| orients.iter().map(|&om| s.oriented(om))).collect();
             let scenarios = expand_seeds(&scenarios, o.seeds);
             if o.list {
                 list_scenarios(&scenarios);
@@ -568,24 +595,28 @@ fn main() -> Result<()> {
         "sweep-farm" => {
             let scheds = sched_axis(&mut args)?;
             let ticks = tick_axis(&mut args)?;
+            let orients = orientation_axis(&mut args)?;
             // Farm defaults: one worker per core, 8 seeded replicas.
             let o = ScenarioOpts::parse(&mut args, 0, 8)?;
             args.finish()?;
             let mut crossed = Vec::new();
             for s in &o.scenarios()? {
-                for &sched in &scheds {
-                    for &tick in &ticks {
-                        let mut c = s.clone();
-                        c.sched = sched;
-                        c.tick_mode = tick;
-                        // Suffix a swept axis so bench points stay unique.
-                        if scheds.len() > 1 {
-                            c.name = format!("{}+{}", c.name, sched.code());
+                for &om in &orients {
+                    for &sched in &scheds {
+                        for &tick in &ticks {
+                            // `oriented` already suffixes +yx/+mixed.
+                            let mut c = s.oriented(om);
+                            c.sched = sched;
+                            c.tick_mode = tick;
+                            // Suffix a swept axis so bench points stay unique.
+                            if scheds.len() > 1 {
+                                c.name = format!("{}+{}", c.name, sched.code());
+                            }
+                            if ticks.len() > 1 {
+                                c.name = format!("{}+{}", c.name, tick.code());
+                            }
+                            crossed.push(c);
                         }
-                        if ticks.len() > 1 {
-                            c.name = format!("{}+{}", c.name, tick.code());
-                        }
-                        crossed.push(c);
                     }
                 }
             }

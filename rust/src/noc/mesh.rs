@@ -77,7 +77,7 @@ struct PacketSlab {
 #[derive(Debug)]
 struct PktEntry {
     msg: Arc<Message>,
-    /// Tile the packet was injected at — the root of its XY route tree.
+    /// Tile the packet was injected at — the root of its route tree.
     /// Routing derives from this, not `msg.src`: the seed model routed
     /// purely from the injection point, and a caller may (in principle)
     /// stamp a `src` that differs from where it injects.
@@ -237,8 +237,9 @@ pub struct Mesh {
     /// Reused plan scratch (avoids two allocations per active cycle).
     scratch_drains: Vec<(u32, u8)>,
     scratch_moves: Vec<Move>,
-    /// Routing table, shared read-only across the plane bundle.  Pristine
-    /// XY unless a harvest mask or fault plan changed the live topology.
+    /// Routing table, shared read-only with planes of the same
+    /// orientation.  Pristine closed-form (XY by default) unless a harvest
+    /// mask or fault plan changed the live topology.
     table: Arc<RouteTable>,
     /// Cached `table.has_faults()`: the single test that gates every fault
     /// check, so the healthy hot path pays one predictable branch and the
@@ -291,7 +292,8 @@ impl Mesh {
     }
 
     /// Install a (shared) routing table.  The [`super::planes::Noc`] calls
-    /// this when a harvest mask or fault event changes the live topology.
+    /// this when a harvest mask or fault event changes the live topology,
+    /// or when the plane is assigned a non-default orientation.
     pub fn set_route_table(&mut self, table: Arc<RouteTable>) {
         assert_eq!((table.width(), table.height()), (self.p.width, self.p.height));
         self.faulted = table.has_faults();
@@ -458,9 +460,14 @@ impl Mesh {
             // cycle's arbitration (forks don't occupy the link yet, so
             // out_busy alone cannot serialize them).
             let mut claimed = [false; 5];
-            // Ports whose eligible front flit lost this cycle (telemetry
-            // only: recorded at the end of the router's turn when armed,
-            // a dead bitmask otherwise).
+            // Output ports an eligible flit failed to advance through
+            // this cycle (telemetry only: recorded at the end of the
+            // router's turn when armed, a dead bitmask otherwise).
+            // Stalls attribute to the *egress* port the flit wanted — so
+            // hotspot dominant-port labels name the contended link under
+            // any routing orientation — except a body flit whose head was
+            // not yet granted, where no egress is known yet and the input
+            // port stands in.
             let mut stalled: u8 = 0;
             // 1. Replication-buffer drains (forked packets): one flit per
             //    output port per cycle, subject to downstream space.
@@ -524,14 +531,19 @@ impl Mesh {
                     // buffers unconditionally (the buffers absorb
                     // backpressure, keeping the dependency graph acyclic).
                     if flit.is_head() {
-                        let clash = Dir::ALL.iter().any(|d| {
+                        let mut clash: u8 = 0;
+                        for d in Dir::ALL {
                             let o = d.idx();
-                            mask & (1 << o) != 0
+                            if mask & (1 << o) != 0
                                 && (router.out_alloc[o].is_some() || claimed[o])
-                        });
-                        if clash {
-                            // A branch port is held by another packet.
-                            stalled |= 1 << in_port;
+                            {
+                                clash |= 1 << o;
+                            }
+                        }
+                        if clash != 0 {
+                            // Branch ports held by another packet: charge
+                            // the stall to the contended egress ports.
+                            stalled |= clash;
                             continue;
                         }
                         for o in 0..5 {
@@ -548,7 +560,7 @@ impl Mesh {
                 let d = Dir::ALL[o];
                 if out_busy[o] || (flit.is_head() && (router.out_alloc[o].is_some() || claimed[o]))
                 {
-                    stalled |= 1 << in_port; // lost output-port arbitration
+                    stalled |= 1 << o; // lost output-port arbitration
                     continue;
                 }
                 if d != Dir::Local {
@@ -567,7 +579,7 @@ impl Mesh {
                     if self.routers[ni].inq[np].len() + self.planned[ni][np] as usize
                         >= self.p.queue_depth
                     {
-                        stalled |= 1 << in_port; // downstream backpressure
+                        stalled |= 1 << o; // downstream backpressure
                         continue;
                     }
                     self.planned[ni][np] += 1;

@@ -2,9 +2,10 @@
 //! extension.
 //!
 //! - [`flit`]: messages, flits, destination lists, header-capacity math.
-//! - [`routing`]: dimension-ordered XY + lookahead, multicast partitioning.
-//! - [`route_table`]: precomputed next hops (XY-exact when healthy,
-//!   fault-avoiding on harvested/degraded meshes).
+//! - [`routing`]: dimension-ordered XY/YX + lookahead, multicast
+//!   partitioning, per-plane [`Orientation`]s.
+//! - [`route_table`]: precomputed next hops (closed-form-exact when
+//!   healthy, fault-avoiding on harvested/degraded meshes).
 //! - [`router`]/[`mesh`]: the wormhole router and one physical plane.
 //! - [`planes`]: the six-plane bundle (3 coherence, 2 DMA, 1 misc).
 //!
@@ -28,4 +29,5 @@ pub use mesh::{Mesh, MeshParams, MeshStats, StallProbe};
 pub use planes::{Noc, Plane, TickMode, NUM_PLANES};
 pub use route_table::RouteTable;
 pub use router::MAX_QUEUE_DEPTH;
-pub use routing::{branch_mask, hop_count, on_xy_path, partition_dests, xy_dir};
+pub use routing::{branch_mask, hop_count, on_xy_path, on_yx_path, oriented_branch_mask,
+                  partition_dests, partition_dests_oriented, xy_dir, yx_dir, Orientation};

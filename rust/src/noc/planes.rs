@@ -11,6 +11,7 @@ use std::sync::Arc;
 use super::flit::{Coord, Dir, Message};
 use super::mesh::{Mesh, MeshParams, MeshStats, StallProbe};
 use super::route_table::RouteTable;
+use super::routing::Orientation;
 use crate::telemetry::PlaneTelemetry;
 
 /// Plane indices (fixed, as in ESP).
@@ -100,34 +101,75 @@ pub const PAR_MIN_PLANES: usize = 2;
 pub struct Noc {
     meshes: Vec<Mesh>,
     mode: TickMode,
+    /// Per-plane routing orientation ([`Plane::ALL`] order).  Planes with
+    /// the same orientation share one route-table [`Arc`].
+    orients: [Orientation; NUM_PLANES],
     /// Accumulated dead routers (harvest mask + router-kill faults).  The
-    /// route table shared by all six planes is rebuilt from these sets on
-    /// every change.
+    /// per-orientation route tables shared across the six planes are
+    /// rebuilt from these sets on every change.
     dead_routers: Vec<Coord>,
     /// Accumulated dead links (link-kill faults).
     dead_links: Vec<(Coord, Dir)>,
 }
 
 impl Noc {
-    /// Build all planes with identical parameters ([`TickMode::Auto`]).
+    /// Build all planes with identical parameters ([`TickMode::Auto`],
+    /// every plane [`Orientation::Xy`]).
     pub fn new(p: MeshParams) -> Self {
         Self {
             meshes: (0..NUM_PLANES).map(|_| Mesh::new(p)).collect(),
             mode: TickMode::Auto,
+            orients: [Orientation::Xy; NUM_PLANES],
             dead_routers: Vec::new(),
             dead_links: Vec::new(),
         }
     }
 
-    /// Rebuild the shared route table from the accumulated dead sets and
-    /// install it on every plane.
-    fn rebuild_table(&mut self) {
+    /// Install the route tables matching the current orientations and
+    /// dead sets on every plane: closed-form (zero-memory) when nothing is
+    /// dead, BFS-materialized otherwise.  Distinct orientations get
+    /// distinct tables; planes sharing an orientation share one [`Arc`]
+    /// (the materialization is O(n^2), so it runs once per orientation,
+    /// not once per plane).
+    fn install_tables(&mut self) {
         let p = *self.params();
-        let table =
-            Arc::new(RouteTable::build(p.width, p.height, &self.dead_routers, &self.dead_links));
-        for m in &mut self.meshes {
-            m.set_route_table(table.clone());
+        let pristine = self.dead_routers.is_empty() && self.dead_links.is_empty();
+        let mut tables: Vec<(Orientation, Arc<RouteTable>)> = Vec::with_capacity(2);
+        for i in 0..NUM_PLANES {
+            let o = self.orients[i];
+            let table = match tables.iter().find(|(t, _)| *t == o) {
+                Some((_, t)) => t.clone(),
+                None => {
+                    let t = Arc::new(if pristine {
+                        RouteTable::closed_form(o, p.width, p.height)
+                    } else {
+                        RouteTable::build_oriented(
+                            o,
+                            p.width,
+                            p.height,
+                            &self.dead_routers,
+                            &self.dead_links,
+                        )
+                    });
+                    tables.push((o, t.clone()));
+                    t
+                }
+            };
+            self.meshes[i].set_route_table(table);
         }
+    }
+
+    /// Assign each plane its routing orientation and install the matching
+    /// tables.  Call before traffic, alongside
+    /// [`set_harvest`](Self::set_harvest).
+    pub fn set_orientations(&mut self, orients: [Orientation; NUM_PLANES]) {
+        self.orients = orients;
+        self.install_tables();
+    }
+
+    /// Per-plane routing orientations ([`Plane::ALL`] order).
+    pub fn orientations(&self) -> [Orientation; NUM_PLANES] {
+        self.orients
     }
 
     /// Disable a set of routers up front (harvest mask).  Applied before
@@ -138,7 +180,7 @@ impl Noc {
             return;
         }
         self.dead_routers.extend_from_slice(dead);
-        self.rebuild_table();
+        self.install_tables();
     }
 
     /// Kill the (bidirectional) link leaving `at` in direction `dir`:
@@ -147,20 +189,23 @@ impl Noc {
     pub fn kill_link(&mut self, at: Coord, dir: Dir) {
         assert!(dir != Dir::Local, "Local ports cannot die");
         self.dead_links.push((at, dir));
-        self.rebuild_table();
+        self.install_tables();
     }
 
     /// Kill the router at `at`: all four links die, and everything queued
     /// inside it (on every plane) is purged.
     pub fn kill_router(&mut self, at: Coord) {
         self.dead_routers.push(at);
-        self.rebuild_table();
+        self.install_tables();
         for m in &mut self.meshes {
             m.kill_router(at);
         }
     }
 
-    /// The route table currently in force (identical across planes).
+    /// Plane 0's route table.  Orientations may differ across planes, but
+    /// the dead sets never do, so liveness/reachability queries
+    /// ([`RouteTable::router_dead`], [`RouteTable::reachable`]) answer for
+    /// every plane.
     pub fn route_table(&self) -> &RouteTable {
         self.meshes[0].route_table()
     }
@@ -408,6 +453,71 @@ mod tests {
         assert_eq!(Plane::Misc.idx(), 5);
         for (i, p) in Plane::ALL.iter().enumerate() {
             assert_eq!(p.idx(), i);
+        }
+    }
+
+    #[test]
+    fn mixed_orientations_route_per_plane() {
+        let p = MeshParams { width: 4, height: 4, flit_bytes: 16, queue_depth: 4 };
+        let mut noc = Noc::new(p);
+        assert_eq!(noc.orientations(), [Orientation::Xy; NUM_PLANES]);
+        let mut orients = [Orientation::Xy; NUM_PLANES];
+        orients[Plane::CohRsp.idx()] = Orientation::Yx;
+        orients[Plane::DmaRsp.idx()] = Orientation::Yx;
+        noc.set_orientations(orients);
+        assert_eq!(noc.orientations(), orients);
+        // Each plane got the table matching its orientation, planes
+        // sharing an orientation share one Arc, and none materialized.
+        for (i, pl) in Plane::ALL.iter().enumerate() {
+            let t = noc.meshes[pl.idx()].route_table();
+            assert_eq!(t.orientation(), orients[i], "{pl:?}");
+            assert!(!t.has_faults(), "{pl:?}: pristine mesh must stay closed-form");
+        }
+        assert!(std::ptr::eq(
+            noc.meshes[Plane::CohRsp.idx()].route_table(),
+            noc.meshes[Plane::DmaRsp.idx()].route_table(),
+        ));
+        assert!(!std::ptr::eq(
+            noc.meshes[Plane::CohReq.idx()].route_table(),
+            noc.meshes[Plane::CohRsp.idx()].route_table(),
+        ));
+        // Both regimes deliver the same traffic (over different paths).
+        for pl in [Plane::DmaReq, Plane::DmaRsp] {
+            noc.send(
+                pl,
+                (0, 0),
+                Message::data(
+                    (0, 0),
+                    (3, 3),
+                    MsgKind::P2pData { seq: 7, prod_slot: 0 },
+                    std::sync::Arc::new(vec![0u8; 200]),
+                ),
+            );
+        }
+        let mut t = 0;
+        while !noc.is_idle() {
+            noc.tick(t);
+            t += 1;
+            assert!(t < 1000);
+        }
+        for pl in [Plane::DmaReq, Plane::DmaRsp] {
+            assert!(noc.recv(pl, (3, 3)).is_some(), "{pl:?} lost its message");
+        }
+    }
+
+    #[test]
+    fn mixed_orientations_survive_a_harvest_rebuild() {
+        let p = MeshParams { width: 4, height: 4, flit_bytes: 16, queue_depth: 4 };
+        let mut noc = Noc::new(p);
+        let mut orients = [Orientation::Xy; NUM_PLANES];
+        orients[Plane::CohRsp.idx()] = Orientation::Yx;
+        noc.set_orientations(orients);
+        noc.set_harvest(&[(1, 1)]);
+        for (i, pl) in Plane::ALL.iter().enumerate() {
+            let t = noc.meshes[pl.idx()].route_table();
+            assert_eq!(t.orientation(), orients[i], "{pl:?}: rebuild lost the orientation");
+            assert!(t.has_faults(), "{pl:?}: harvest must materialize the table");
+            assert!(t.router_dead((1, 1)), "{pl:?}: dead sets are shared across planes");
         }
     }
 }

@@ -1,30 +1,35 @@
 //! Table-driven routing: a precomputed next-hop table per mesh that
-//! reproduces dimension-ordered XY bit-exactly on a healthy mesh and
+//! reproduces dimension-ordered routing bit-exactly on a healthy mesh and
 //! routes *around* harvested routers and dead links on a degraded one.
 //!
-//! The table has two regimes:
+//! Every table carries an [`Orientation`] (DESIGN.md §routing
+//! orientations) and has two regimes:
 //!
-//! - **Pristine** ([`RouteTable::xy`]): no table memory at all — every
-//!   query delegates to the closed-form [`super::routing`] primitives, so
-//!   the no-fault hot path is byte-for-byte the seed model (this is the
+//! - **Pristine** ([`RouteTable::closed_form`], with [`RouteTable::xy`]
+//!   the legacy XY shorthand): no table memory at all — every query
+//!   delegates to the closed-form [`super::routing`] primitives, so the
+//!   no-fault hot path is byte-for-byte the seed model (this is the
 //!   "zero-cost when healthy" invariant of DESIGN.md §fault model).
-//! - **Materialized** ([`RouteTable::build`]): an `n x n` next-hop array
+//! - **Materialized** ([`RouteTable::build_oriented`], with
+//!   [`RouteTable::build`] the XY shorthand): an `n x n` next-hop array
 //!   computed by per-destination BFS over the live subgraph.  Ties between
-//!   equally short next hops prefer the XY direction, so a materialized
-//!   table with *nothing* dead is bit-identical to XY (property-tested in
-//!   `tests/prop_fault.rs`), and a degraded table deviates only where a
-//!   route must detour.
+//!   equally short next hops prefer the orientation's dimension-ordered
+//!   direction and then its [`Orientation::fallback`] order, so a
+//!   materialized table with *nothing* dead is bit-identical to its
+//!   closed form (property-tested in `tests/prop_fault.rs` and
+//!   `tests/prop_orientation.rs`), and a degraded table deviates only
+//!   where a route must detour.
 //!
 //! Multicast re-partitioning falls out of determinism: the next hop
 //! depends only on `(current, destination)`, so each destination's path
 //! from the packet's origin is unique and the branch set at any router is
 //! recomputable from the interned `(origin, dests)` pair — exactly the
-//! contract [`super::routing::branch_mask`] established for XY.
+//! contract [`super::routing::oriented_branch_mask`] established.
 //! Destinations that are unreachable on the current table simply
 //! contribute no branch (the mesh counts them as dropped at injection).
 
 use super::flit::{Coord, DestList, Dir};
-use super::routing::{branch_mask as xy_branch_mask, neighbor, xy_dir};
+use super::routing::{neighbor, oriented_branch_mask, Orientation};
 
 /// Next-hop sentinel: no live path from this router to that destination.
 const UNREACHABLE: u8 = 0xFF;
@@ -32,12 +37,15 @@ const UNREACHABLE: u8 = 0xFF;
 /// Distance sentinel for the BFS.
 const INF: u32 = u32::MAX;
 
-/// Per-mesh routing table (shared read-only across the six planes).
+/// Per-mesh routing table (shared read-only across planes of the same
+/// orientation).
 #[derive(Debug, Clone)]
 pub struct RouteTable {
     width: u8,
     height: u8,
-    /// `None` = pristine XY fast path; `Some` = materialized table.
+    /// Routing orientation this table was derived under.
+    orient: Orientation,
+    /// `None` = pristine closed-form fast path; `Some` = materialized.
     deg: Option<Degraded>,
 }
 
@@ -57,17 +65,37 @@ struct Degraded {
 }
 
 impl RouteTable {
-    /// Pristine XY table for a `width x height` mesh (no memory, no
-    /// faults; every query is the closed-form seed primitive).
+    /// Pristine XY table for a `width x height` mesh — the legacy
+    /// shorthand for [`closed_form`](Self::closed_form) under
+    /// [`Orientation::Xy`].
     pub fn xy(width: u8, height: u8) -> Self {
-        Self { width, height, deg: None }
+        Self::closed_form(Orientation::Xy, width, height)
+    }
+
+    /// Pristine table for a `width x height` mesh under `orient` (no
+    /// memory, no faults; every query is the closed-form primitive).
+    pub fn closed_form(orient: Orientation, width: u8, height: u8) -> Self {
+        Self { width, height, orient, deg: None }
+    }
+
+    /// [`build_oriented`](Self::build_oriented) under the baseline XY
+    /// orientation (the legacy constructor; call sites that predate
+    /// orientations keep their byte-exact behavior through it).
+    pub fn build(
+        width: u8,
+        height: u8,
+        dead_routers: &[Coord],
+        dead_links: &[(Coord, Dir)],
+    ) -> Self {
+        Self::build_oriented(Orientation::Xy, width, height, dead_routers, dead_links)
     }
 
     /// Materialize the table for a mesh with the given dead routers and
-    /// dead links.  Links are physical (bidirectional): killing
-    /// `(c, East)` also kills the neighbour's West output.  A dead router
-    /// implies all four of its links are dead.
-    pub fn build(
+    /// dead links, under orientation `orient`.  Links are physical
+    /// (bidirectional): killing `(c, East)` also kills the neighbour's
+    /// West output.  A dead router implies all four of its links are dead.
+    pub fn build_oriented(
+        orient: Orientation,
         width: u8,
         height: u8,
         dead_routers: &[Coord],
@@ -105,7 +133,9 @@ impl RouteTable {
         // Per-destination BFS over the live subgraph.  Links are
         // symmetric, so the BFS tree from `dest` gives every router's
         // distance to `dest`; the next hop is any neighbour one step
-        // closer, preferring the XY direction (bit-exact XY when healthy).
+        // closer, preferring the orientation's dimension-ordered direction
+        // (bit-exact with the closed form when healthy) and then its
+        // fallback order.
         let mut next = vec![UNREACHABLE; n * n].into_boxed_slice();
         let mut dist = vec![INF; n];
         let mut queue = Vec::with_capacity(n);
@@ -154,11 +184,12 @@ impl RouteTable {
                             neighbor(cur, dir, width, height)
                                 .is_some_and(|nb| dist[at(nb)] == dist[ci] - 1)
                         };
-                        let xy = xy_dir(cur, dest);
-                        let pick = if step_down(xy) {
-                            xy
+                        let pref = orient.dir(cur, dest);
+                        let pick = if step_down(pref) {
+                            pref
                         } else {
-                            *[Dir::North, Dir::South, Dir::East, Dir::West]
+                            *orient
+                                .fallback()
                                 .iter()
                                 .find(|&&d| step_down(d))
                                 .expect("BFS-reachable router must have a downhill neighbour")
@@ -168,7 +199,8 @@ impl RouteTable {
                 }
             }
         }
-        Self { width, height, deg: Some(Degraded { next, dead_router, dead_out, faulted }) }
+        let deg = Some(Degraded { next, dead_router, dead_out, faulted });
+        Self { width, height, orient, deg }
     }
 
     /// Mesh width.
@@ -179,6 +211,11 @@ impl RouteTable {
     /// Mesh height.
     pub fn height(&self) -> u8 {
         self.height
+    }
+
+    /// The orientation this table routes under.
+    pub fn orientation(&self) -> Orientation {
+        self.orient
     }
 
     /// Any dead router or link in this table?
@@ -210,7 +247,7 @@ impl RouteTable {
     #[inline]
     pub fn dir(&self, cur: Coord, dest: Coord) -> Option<Dir> {
         match &self.deg {
-            None => Some(xy_dir(cur, dest)),
+            None => Some(self.orient.dir(cur, dest)),
             Some(deg) => {
                 let n = self.width as usize * self.height as usize;
                 match deg.next[self.at(cur) * n + self.at(dest)] {
@@ -228,11 +265,11 @@ impl RouteTable {
 
     /// Output-port mask the header flit of packet `(origin, dests)` claims
     /// at router `cur` — the table-driven counterpart of
-    /// [`super::routing::branch_mask`].  Destinations whose path does not
-    /// visit `cur` (or that are unreachable) contribute nothing.
+    /// [`super::routing::oriented_branch_mask`].  Destinations whose path
+    /// does not visit `cur` (or that are unreachable) contribute nothing.
     pub fn branch_mask(&self, cur: Coord, origin: Coord, dests: &DestList) -> u8 {
         if self.deg.is_none() {
-            return xy_branch_mask(cur, origin, dests);
+            return oriented_branch_mask(self.orient, cur, origin, dests);
         }
         let mut mask = 0u8;
         let cap = self.width as u32 * self.height as u32;
@@ -275,7 +312,9 @@ impl RouteTable {
 
 #[cfg(test)]
 mod tests {
-    use super::super::routing::partition_dests;
+    use super::super::routing::{
+        branch_mask as xy_branch_mask, partition_dests, xy_dir, yx_dir,
+    };
     use super::*;
 
     #[test]
@@ -311,6 +350,61 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn closed_form_orientations_delegate() {
+        let yx = RouteTable::closed_form(Orientation::Yx, 4, 3);
+        assert_eq!(yx.orientation(), Orientation::Yx);
+        assert!(!yx.has_faults());
+        for cy in 0..3 {
+            for cx in 0..4 {
+                for dy in 0..3 {
+                    for dx in 0..4 {
+                        let (c, d) = ((cy, cx), (dy, dx));
+                        assert_eq!(yx.dir(c, d), Some(yx_dir(c, d)));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_clean_tables_are_bit_exact_per_orientation() {
+        // The orientation-preferred tie-break makes every clean
+        // materialized table reproduce its closed form exactly — the
+        // flipped variants included (their preferred step is always live
+        // on a healthy mesh, so the mirrored fallback never engages).
+        for orient in Orientation::ALL {
+            for (w, h) in [(2u8, 2u8), (4, 3), (6, 6)] {
+                let t = RouteTable::build_oriented(orient, w, h, &[], &[]);
+                let cf = RouteTable::closed_form(orient, w, h);
+                assert!(!t.has_faults(), "{orient:?}: nothing dead");
+                for cy in 0..h {
+                    for cx in 0..w {
+                        for dy in 0..h {
+                            for dx in 0..w {
+                                let (c, d) = ((cy, cx), (dy, dx));
+                                assert_eq!(t.dir(c, d), cf.dir(c, d), "{orient:?} {c:?}->{d:?}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flipped_tie_breaks_spread_detours() {
+        // Kill the center of a 3x3.  (1,0)->(1,2) must detour: XY's
+        // fallback order goes North first, flipped-XY mirrors it South —
+        // same hop count, opposite side of the dead router.  Likewise the
+        // column route (0,1)->(2,1) under YX detours West, flipped-YX East.
+        let by = |o: Orientation| RouteTable::build_oriented(o, 3, 3, &[(1, 1)], &[]);
+        assert_eq!(by(Orientation::Xy).dir((1, 0), (1, 2)), Some(Dir::North));
+        assert_eq!(by(Orientation::FlippedXy).dir((1, 0), (1, 2)), Some(Dir::South));
+        assert_eq!(by(Orientation::Yx).dir((0, 1), (2, 1)), Some(Dir::West));
+        assert_eq!(by(Orientation::FlippedYx).dir((0, 1), (2, 1)), Some(Dir::East));
     }
 
     #[test]

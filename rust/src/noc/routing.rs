@@ -1,15 +1,97 @@
-//! Dimension-ordered (XY) routing with lookahead, plus the multicast
+//! Dimension-ordered routing with lookahead, plus the multicast
 //! destination-partitioning step.
 //!
-//! ESP routes X first, then Y: this guarantees the absence of routing
-//! deadlock (no turn cycles).  *Lookahead* routing in the RTL computes the
-//! next hop's output port one hop early so a flit spends a single cycle per
-//! router; we model that by charging one cycle per hop.  For multicast, the
-//! paper replicates the lookahead logic per destination — here
-//! [`partition_dests`] computes every destination's direction in parallel
-//! (one pass) and splits the destination list into per-output-port branches.
+//! ESP's baseline routes X first, then Y: this guarantees the absence of
+//! routing deadlock (no turn cycles).  *Lookahead* routing in the RTL
+//! computes the next hop's output port one hop early so a flit spends a
+//! single cycle per router; we model that by charging one cycle per hop.
+//! For multicast, the paper replicates the lookahead logic per destination —
+//! here [`partition_dests`] computes every destination's direction in
+//! parallel (one pass) and splits the destination list into per-output-port
+//! branches.
+//!
+//! Planes may now route under different [`Orientation`]s (DESIGN.md
+//! §routing orientations): YX resolves Y first (column-then-row), and the
+//! *flipped* variants mirror the fault-table tie-break preference while
+//! sharing their cousin's minimal paths — on a bidirectional mesh,
+//! coordinate-flipped dimension-ordered routing traverses exactly the links
+//! of the unflipped regime, so only XY vs YX are path-distinct.  Every
+//! orientation is a single dimension-ordered policy per plane, hence
+//! deadlock-free; planes share no links, so mixing orientations *across*
+//! planes is safe.
 
 use super::flit::{Coord, DestList, Dir};
+
+/// Per-plane routing orientation: which dimension resolves first, and (for
+/// the flipped variants) which way the fault-table tie-breaks lean.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Orientation {
+    /// X first, then Y — the paper's baseline (and the byte-exact legacy).
+    #[default]
+    Xy,
+    /// Y first, then X — the path-distinct alternative.
+    Yx,
+    /// XY paths with mirrored fault-table tie-breaks.
+    FlippedXy,
+    /// YX paths with mirrored fault-table tie-breaks.
+    FlippedYx,
+}
+
+impl Orientation {
+    /// Every orientation, in code order.
+    pub const ALL: [Orientation; 4] =
+        [Orientation::Xy, Orientation::Yx, Orientation::FlippedXy, Orientation::FlippedYx];
+
+    /// Stable short code (JSON fields, CLI flags, bench point names).
+    pub fn code(self) -> &'static str {
+        match self {
+            Orientation::Xy => "xy",
+            Orientation::Yx => "yx",
+            Orientation::FlippedXy => "flipped_xy",
+            Orientation::FlippedYx => "flipped_yx",
+        }
+    }
+
+    /// Parse a [`code`](Self::code) back into an orientation.
+    pub fn from_code(code: &str) -> Option<Self> {
+        Orientation::ALL.into_iter().find(|o| o.code() == code)
+    }
+
+    /// Closed-form output direction from `cur` towards `dest`.  The
+    /// flipped variants share their cousin's minimal paths (see module
+    /// doc), so only the first-resolved dimension matters here.
+    #[inline]
+    pub fn dir(self, cur: Coord, dest: Coord) -> Dir {
+        match self {
+            Orientation::Xy | Orientation::FlippedXy => xy_dir(cur, dest),
+            Orientation::Yx | Orientation::FlippedYx => yx_dir(cur, dest),
+        }
+    }
+
+    /// True when tile `p` lies on this orientation's route from `src` to
+    /// `dst`.
+    #[inline]
+    pub fn on_path(self, src: Coord, dst: Coord, p: Coord) -> bool {
+        match self {
+            Orientation::Xy | Orientation::FlippedXy => on_xy_path(src, dst, p),
+            Orientation::Yx | Orientation::FlippedYx => on_yx_path(src, dst, p),
+        }
+    }
+
+    /// Fault-table tie-break order: when the preferred dimension-ordered
+    /// step is dead or not downhill, the BFS picks the first downhill
+    /// direction in this order.  XY keeps the legacy order (byte-exact
+    /// with pre-orientation tables); the others mirror it so detour load
+    /// spreads instead of piling onto the same fallback links.
+    pub fn fallback(self) -> [Dir; 4] {
+        match self {
+            Orientation::Xy => [Dir::North, Dir::South, Dir::East, Dir::West],
+            Orientation::Yx => [Dir::West, Dir::East, Dir::South, Dir::North],
+            Orientation::FlippedXy => [Dir::South, Dir::North, Dir::West, Dir::East],
+            Orientation::FlippedYx => [Dir::East, Dir::West, Dir::North, Dir::South],
+        }
+    }
+}
 
 /// XY output direction from `cur` towards `dest` (X resolved first).
 pub fn xy_dir(cur: Coord, dest: Coord) -> Dir {
@@ -28,25 +110,53 @@ pub fn xy_dir(cur: Coord, dest: Coord) -> Dir {
     }
 }
 
-/// Number of hops between two tiles under XY routing.
+/// YX output direction from `cur` towards `dest` (Y resolved first).
+pub fn yx_dir(cur: Coord, dest: Coord) -> Dir {
+    let (cy, cx) = cur;
+    let (dy, dx) = dest;
+    if dy > cy {
+        Dir::South
+    } else if dy < cy {
+        Dir::North
+    } else if dx > cx {
+        Dir::East
+    } else if dx < cx {
+        Dir::West
+    } else {
+        Dir::Local
+    }
+}
+
+/// Number of hops between two tiles under any dimension-ordered routing
+/// (both orientations take minimal Manhattan paths).
 pub fn hop_count(a: Coord, b: Coord) -> u32 {
     (a.0 as i32 - b.0 as i32).unsigned_abs() + (a.1 as i32 - b.1 as i32).unsigned_abs()
 }
 
 /// Split a destination list by the output port each destination takes from
-/// `cur`.  Returns `(directions_present_bitmask, per-port lists)`; this is
-/// the fork decision of the multicast router, materialized.  The mesh hot
-/// path uses the allocation-free [`branch_mask`] instead; this form remains
-/// for analysis tools and the equivalence tests.
-pub fn partition_dests(cur: Coord, dests: &DestList) -> (u8, [DestList; 5]) {
+/// `cur` under orientation `o`.  Returns `(directions_present_bitmask,
+/// per-port lists)`; this is the fork decision of the multicast router,
+/// materialized.  The mesh hot path uses the allocation-free
+/// [`oriented_branch_mask`] instead; this form remains for analysis tools
+/// and the equivalence tests.
+pub fn partition_dests_oriented(
+    o: Orientation,
+    cur: Coord,
+    dests: &DestList,
+) -> (u8, [DestList; 5]) {
     let mut out: [DestList; 5] = Default::default();
     let mut mask = 0u8;
     for d in dests.iter() {
-        let dir = xy_dir(cur, d);
+        let dir = o.dir(cur, d);
         out[dir.idx()].push(d);
         mask |= 1 << dir.idx();
     }
     (mask, out)
+}
+
+/// [`partition_dests_oriented`] under the baseline XY orientation.
+pub fn partition_dests(cur: Coord, dests: &DestList) -> (u8, [DestList; 5]) {
+    partition_dests_oriented(Orientation::Xy, cur, dests)
 }
 
 /// True when tile `p` lies on the XY route from `src` to `dst`: first along
@@ -58,24 +168,39 @@ pub fn on_xy_path(src: Coord, dst: Coord, p: Coord) -> bool {
     (p.0 == src.0 && between(p.1, src.1, dst.1)) || (p.1 == dst.1 && between(p.0, src.0, dst.0))
 }
 
+/// True when tile `p` lies on the YX route from `src` to `dst`: first along
+/// column `src.1` from row `src.0` to `dst.0`, then along row `dst.0` from
+/// column `src.1` to `dst.1`.
+#[inline]
+pub fn on_yx_path(src: Coord, dst: Coord, p: Coord) -> bool {
+    let between = |a: u8, b: u8, c: u8| (b.min(c)..=b.max(c)).contains(&a);
+    (p.1 == src.1 && between(p.0, src.0, dst.0)) || (p.0 == dst.0 && between(p.1, src.1, dst.1))
+}
+
 /// Output-port mask a header flit of packet `(src, dests)` claims at router
-/// `cur`, without materializing per-branch destination lists.
+/// `cur` under orientation `o`, without materializing per-branch
+/// destination lists.
 ///
-/// XY routing is deterministic, so the multicast replication tree is fixed
-/// at injection time: the destination subset of the branch passing through
-/// `cur` is exactly the destinations whose XY route visits `cur`, and the
-/// fork decision at `cur` is their per-destination next-hop directions.
-/// This is bit-for-bit the mask [`partition_dests`] computes on the carried
-/// subset in the seed model (see `prop_mesh_equiv`), with O(dests) work and
-/// zero copying per hop.
-pub fn branch_mask(cur: Coord, src: Coord, dests: &DestList) -> u8 {
+/// Dimension-ordered routing is deterministic, so the multicast replication
+/// tree is fixed at injection time: the destination subset of the branch
+/// passing through `cur` is exactly the destinations whose route visits
+/// `cur`, and the fork decision at `cur` is their per-destination next-hop
+/// directions.  This is bit-for-bit the mask [`partition_dests_oriented`]
+/// computes on the carried subset in the seed model (see
+/// `prop_mesh_equiv`), with O(dests) work and zero copying per hop.
+pub fn oriented_branch_mask(o: Orientation, cur: Coord, src: Coord, dests: &DestList) -> u8 {
     let mut mask = 0u8;
     for d in dests.iter() {
-        if on_xy_path(src, d, cur) {
-            mask |= 1 << xy_dir(cur, d).idx();
+        if o.on_path(src, d, cur) {
+            mask |= 1 << o.dir(cur, d).idx();
         }
     }
     mask
+}
+
+/// [`oriented_branch_mask`] under the baseline XY orientation.
+pub fn branch_mask(cur: Coord, src: Coord, dests: &DestList) -> u8 {
+    oriented_branch_mask(Orientation::Xy, cur, src, dests)
 }
 
 /// Coordinate of the neighbour in direction `d` (None at mesh edge).
@@ -105,6 +230,54 @@ mod tests {
     }
 
     #[test]
+    fn y_before_x() {
+        assert_eq!(yx_dir((0, 0), (2, 2)), Dir::South);
+        assert_eq!(yx_dir((2, 0), (2, 2)), Dir::East);
+        assert_eq!(yx_dir((2, 2), (0, 0)), Dir::North);
+        assert_eq!(yx_dir((0, 2), (0, 0)), Dir::West);
+        assert_eq!(yx_dir((1, 1), (1, 1)), Dir::Local);
+    }
+
+    #[test]
+    fn orientation_codes_roundtrip() {
+        for o in Orientation::ALL {
+            assert_eq!(Orientation::from_code(o.code()), Some(o));
+        }
+        assert_eq!(Orientation::from_code("zigzag"), None);
+        assert_eq!(Orientation::default(), Orientation::Xy);
+    }
+
+    #[test]
+    fn flipped_variants_share_their_cousins_paths() {
+        for cy in 0..4u8 {
+            for cx in 0..4u8 {
+                for dy in 0..4u8 {
+                    for dx in 0..4u8 {
+                        let (c, d) = ((cy, cx), (dy, dx));
+                        assert_eq!(Orientation::FlippedXy.dir(c, d), xy_dir(c, d));
+                        assert_eq!(Orientation::FlippedYx.dir(c, d), yx_dir(c, d));
+                        assert_eq!(
+                            Orientation::FlippedXy.on_path(c, d, (dy, cx)),
+                            on_xy_path(c, d, (dy, cx))
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_orders_cover_all_directions() {
+        for o in Orientation::ALL {
+            let mut mask = 0u8;
+            for d in o.fallback() {
+                mask |= 1 << d.idx();
+            }
+            assert_eq!(mask.count_ones(), 4, "{o:?}: fallback must name each mesh direction once");
+        }
+    }
+
+    #[test]
     fn hops() {
         assert_eq!(hop_count((0, 0), (2, 3)), 5);
         assert_eq!(hop_count((1, 1), (1, 1)), 0);
@@ -122,6 +295,18 @@ mod tests {
     }
 
     #[test]
+    fn yx_partition_groups_by_row_first() {
+        let dests = DestList::from_slice(&[(0, 2), (2, 2), (1, 0), (1, 1)]);
+        let (mask, parts) = partition_dests_oriented(Orientation::Yx, (1, 1), &dests);
+        // (0,2) goes North first, (2,2) South first (y resolves before x).
+        assert_eq!(parts[Dir::North.idx()].as_slice(), &[(0, 2)]);
+        assert_eq!(parts[Dir::South.idx()].as_slice(), &[(2, 2)]);
+        assert_eq!(parts[Dir::West.idx()].as_slice(), &[(1, 0)]);
+        assert_eq!(parts[Dir::Local.idx()].as_slice(), &[(1, 1)]);
+        assert_eq!(mask.count_ones(), 4);
+    }
+
+    #[test]
     fn on_path_covers_row_then_column() {
         // Route (1,0) -> (2,3): row 1 cols 0..=3, then col 3 rows 1..=2.
         for p in [(1, 0), (1, 1), (1, 2), (1, 3), (2, 3)] {
@@ -134,23 +319,46 @@ mod tests {
     }
 
     #[test]
+    fn yx_on_path_covers_column_then_row() {
+        // YX route (1,0) -> (2,3): col 0 rows 1..=2, then row 2 cols 0..=3.
+        for p in [(1, 0), (2, 0), (2, 1), (2, 2), (2, 3)] {
+            assert!(on_yx_path((1, 0), (2, 3), p), "{p:?} should be on path");
+        }
+        for p in [(0, 0), (1, 1), (1, 2), (1, 3), (0, 3)] {
+            assert!(!on_yx_path((1, 0), (2, 3), p), "{p:?} should be off path");
+        }
+        assert!(on_yx_path((1, 1), (1, 1), (1, 1)), "self route");
+    }
+
+    #[test]
     fn branch_mask_matches_partition_along_the_tree() {
         // Walk the replication tree the carried-list model would build and
-        // check the derived mask agrees with partition_dests at every node.
-        fn walk(cur: Coord, src: Coord, carried: &DestList, full: &DestList, w: u8, h: u8) {
-            let (mask, parts) = partition_dests(cur, carried);
-            assert_eq!(branch_mask(cur, src, full), mask, "at {cur:?}");
+        // check the derived mask agrees with partition_dests at every node,
+        // for every orientation.
+        fn walk(
+            o: Orientation,
+            cur: Coord,
+            src: Coord,
+            carried: &DestList,
+            full: &DestList,
+            w: u8,
+            h: u8,
+        ) {
+            let (mask, parts) = partition_dests_oriented(o, cur, carried);
+            assert_eq!(oriented_branch_mask(o, cur, src, full), mask, "{o:?} at {cur:?}");
             for d in Dir::ALL {
                 if d == Dir::Local || mask & (1 << d.idx()) == 0 {
                     continue;
                 }
                 let next = neighbor(cur, d, w, h).unwrap();
-                walk(next, src, &parts[d.idx()], full, w, h);
+                walk(o, next, src, &parts[d.idx()], full, w, h);
             }
         }
         let dests = DestList::from_slice(&[(0, 2), (2, 2), (1, 0), (1, 1), (2, 0), (0, 0)]);
-        walk((1, 1), (1, 1), &dests, &dests, 3, 3);
-        walk((0, 0), (0, 0), &dests, &dests, 3, 3);
+        for o in Orientation::ALL {
+            walk(o, (1, 1), (1, 1), &dests, &dests, 3, 3);
+            walk(o, (0, 0), (0, 0), &dests, &dests, 3, 3);
+        }
     }
 
     #[test]

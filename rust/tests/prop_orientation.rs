@@ -1,0 +1,263 @@
+//! Routing-orientation properties (DESIGN.md §routing orientations):
+//!
+//! 1. For **every orientation**, a materialized route table built with
+//!    nothing dead drives the mesh bit-exactly like that orientation's
+//!    closed-form fast path — same idleness, same flit-hops, same
+//!    per-tile delivery sequences, every cycle.
+//! 2. The explicit closed-form **XY** table is byte-identical to the
+//!    default mesh (the pre-orientation pristine path): the orientation
+//!    plumbing costs existing XY runs nothing.
+//! 3. **Oriented runs are deterministic** across NoC tick modes and SoC
+//!    scheduler modes: XY, YX and mixed plane assignments all produce
+//!    byte-identical outcomes whichever engine drives them.
+//! 4. An orientation-crossed batch on the **simulation farm** matches a
+//!    serial run slot-for-slot (the `sweep-farm --orientation all` axis).
+
+use std::sync::Arc;
+
+use espsim::coordinator::farm::run_farm;
+use espsim::coordinator::scenario::{
+    builtin_scenarios, OrientationMode, Pattern, Platform, Scenario,
+};
+use espsim::noc::{
+    Coord, DestList, Mesh, MeshParams, Message, MsgKind, Orientation, RouteTable, TickMode,
+};
+use espsim::sched::SchedMode;
+use espsim::util::Prng;
+
+fn msg_seq(m: &Message) -> u32 {
+    match m.kind {
+        MsgKind::P2pData { seq, .. } => seq,
+        _ => panic!("unexpected kind"),
+    }
+}
+
+/// Drive the same sends on two meshes in lockstep, asserting cycle-level
+/// equality of idleness, flit-hops and delivery sequences.  `left` is
+/// `None` for the untouched default mesh (the pristine-XY fast path);
+/// otherwise both sides get their table installed explicitly.
+fn run_lockstep(
+    what: &str,
+    p: MeshParams,
+    mut sends: Vec<(u64, Coord, Message)>,
+    left: Option<Arc<RouteTable>>,
+    right: Arc<RouteTable>,
+) {
+    sends.sort_by_key(|s| s.0);
+    let mut a = Mesh::new(p);
+    if let Some(table) = left {
+        a.set_route_table(table);
+    }
+    let mut b = Mesh::new(p);
+    b.set_route_table(right);
+    let mut next = 0usize;
+    let mut t = 0u64;
+    loop {
+        while next < sends.len() && sends[next].0 == t {
+            let (_, src, msg) = &sends[next];
+            a.send(*src, msg.clone());
+            b.send(*src, msg.clone());
+            next += 1;
+        }
+        a.tick(t);
+        b.tick(t);
+        t += 1;
+        assert_eq!(a.is_idle(), b.is_idle(), "{what}: idleness diverged at cycle {t}");
+        assert_eq!(
+            a.stats.flit_hops, b.stats.flit_hops,
+            "{what}: flit-hops diverged at cycle {t}"
+        );
+        for y in 0..p.height {
+            for x in 0..p.width {
+                let c = (y, x);
+                loop {
+                    match (a.recv(c), b.recv(c)) {
+                        (None, None) => break,
+                        (Some(m), Some(n)) => {
+                            assert_eq!(
+                                msg_seq(&m),
+                                msg_seq(&n),
+                                "{what}: delivery order diverged at {c:?} cycle {t}"
+                            );
+                        }
+                        (m, n) => panic!(
+                            "{what}: delivery presence diverged at {c:?} cycle {t}: \
+                             left={:?} right={:?}",
+                            m.map(|m| msg_seq(&m)),
+                            n.map(|m| msg_seq(&m))
+                        ),
+                    }
+                }
+            }
+        }
+        if next == sends.len() && a.is_idle() && b.is_idle() {
+            break;
+        }
+        assert!(t < 2_000_000, "{what}: meshes did not drain");
+    }
+    assert_eq!(a.stats.delivered, b.stats.delivered, "{what}: delivered total");
+    assert_eq!(a.stats.injected, b.stats.injected, "{what}: injected total");
+    assert_eq!(a.stats.busy_cycles, b.stats.busy_cycles, "{what}: busy cycles");
+}
+
+/// A random multicast workload on a `w` x `h` mesh, identical in shape to
+/// the `prop_fault` generator so the two property suites cover the same
+/// traffic space.
+fn random_sends(rng: &mut Prng, w: u8, h: u8) -> Vec<(u64, Coord, Message)> {
+    let n_msgs = rng.range(1, 12);
+    let mut sends = Vec::new();
+    for seq in 0..n_msgs {
+        let src = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+        let mut dests = DestList::new();
+        let mut uniq: Vec<Coord> = Vec::new();
+        for _ in 0..rng.range(1, 8) {
+            let d = (rng.below(h as u64) as u8, rng.below(w as u64) as u8);
+            if !uniq.contains(&d) {
+                uniq.push(d);
+                dests.push(d);
+            }
+        }
+        let len = rng.range(0, 3000) as usize;
+        sends.push((
+            rng.range(0, 60),
+            src,
+            Message::multicast(
+                src,
+                dests,
+                MsgKind::P2pData { seq: seq as u32, prod_slot: 0 },
+                Arc::new(vec![rng.next_u64() as u8; len]),
+            ),
+        ));
+    }
+    sends
+}
+
+#[test]
+fn prop_materialized_clean_table_matches_closed_form_per_orientation() {
+    // Property 1, and the heart of the orientation claim: the zero-memory
+    // closed-form regimes compute exactly the paths the BFS materializes
+    // on a healthy mesh — YX included, where the closed form is new.
+    let mut rng = Prng::new(0x0B1E_47ED_5EED);
+    for orient in Orientation::ALL {
+        for case in 0..8 {
+            let w = rng.range(2, 8) as u8;
+            let h = rng.range(2, 8) as u8;
+            let p = MeshParams {
+                width: w,
+                height: h,
+                flit_bytes: *rng.pick(&[8u32, 16, 32]),
+                queue_depth: rng.range(2, 5) as usize,
+            };
+            let sends = random_sends(&mut rng, w, h);
+            run_lockstep(
+                &format!("{orient:?} case {case}"),
+                p,
+                sends,
+                Some(Arc::new(RouteTable::closed_form(orient, w, h))),
+                Arc::new(RouteTable::build_oriented(orient, w, h, &[], &[])),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_closed_form_xy_is_byte_identical_to_the_default_mesh() {
+    // Property 2: the XY regression pin.  A mesh that never heard of
+    // orientations and one with the explicit closed-form XY table must be
+    // indistinguishable cycle-by-cycle — this is what keeps every pre-PR
+    // XY result byte-identical.
+    let mut rng = Prng::new(0x5EED_0F_C1);
+    for case in 0..8 {
+        let w = rng.range(2, 8) as u8;
+        let h = rng.range(2, 8) as u8;
+        let p = MeshParams {
+            width: w,
+            height: h,
+            flit_bytes: *rng.pick(&[8u32, 16, 32]),
+            queue_depth: rng.range(2, 5) as usize,
+        };
+        let sends = random_sends(&mut rng, w, h);
+        run_lockstep(
+            &format!("xy pin case {case}"),
+            p,
+            sends,
+            None,
+            Arc::new(RouteTable::closed_form(Orientation::Xy, w, h)),
+        );
+    }
+}
+
+/// One oriented scenario run rendered as a stable string (the same trick
+/// as `prop_fault` and `farm_equivalence`: no wall-clock ever lands in an
+/// `Outcome`, so its Debug print is a byte-identity fingerprint).
+fn fingerprint(s: &Scenario) -> String {
+    match s.run() {
+        Ok(o) => format!("ok: {o:?}"),
+        Err(e) => format!("err: {e:#}"),
+    }
+}
+
+fn oriented_scenario(mode: OrientationMode) -> Scenario {
+    let mut s = Scenario::new(
+        "shuffle3x3",
+        Pattern::AllToAllShuffle { producers: 3, consumers: 3 },
+        Platform::Mesh8x8,
+    );
+    s.bytes = 8 << 10;
+    s.oriented(mode)
+}
+
+#[test]
+fn oriented_runs_are_deterministic_across_tick_modes() {
+    for mode in OrientationMode::ALL {
+        let mut s = oriented_scenario(mode);
+        s.tick_mode = TickMode::Sequential;
+        let reference = fingerprint(&s);
+        assert!(reference.starts_with("ok"), "{}: {reference}", s.name);
+        for tick in [TickMode::Parallel, TickMode::Auto] {
+            s.tick_mode = tick;
+            assert_eq!(reference, fingerprint(&s), "{}: {tick:?} diverged", s.name);
+        }
+    }
+}
+
+#[test]
+fn oriented_runs_are_deterministic_across_sched_modes() {
+    for mode in OrientationMode::ALL {
+        let mut s = oriented_scenario(mode);
+        s.sched = SchedMode::Worklist;
+        let reference = fingerprint(&s);
+        s.sched = SchedMode::FullScan;
+        assert_eq!(reference, fingerprint(&s), "{}: full_scan diverged", s.name);
+    }
+}
+
+#[test]
+fn farmed_oriented_outcomes_match_serial() {
+    // Property 4: the exact batch shape `sweep-farm --orientation all`
+    // builds — every builtin scenario crossed with every orientation mode
+    // — must be farm/serial byte-identical in input order.
+    let mut crossed = Vec::new();
+    for s in &builtin_scenarios(Platform::Paper3x4) {
+        for mode in OrientationMode::ALL {
+            let mut c = s.oriented(mode);
+            c.bytes = 8 << 10;
+            crossed.push(c);
+        }
+    }
+    let serial = run_farm(&crossed, 1);
+    let farmed = run_farm(&crossed, 4);
+    assert_eq!(serial.results.len(), crossed.len(), "serial lost slots");
+    assert_eq!(farmed.results.len(), crossed.len(), "farm lost slots");
+    for (i, (a, b)) in serial.results.iter().zip(&farmed.results).enumerate() {
+        let a = a.outcome.as_ref().unwrap_or_else(|e| panic!("serial slot {i}: {e:#}"));
+        let b = b.outcome.as_ref().unwrap_or_else(|e| panic!("farmed slot {i}: {e:#}"));
+        assert_eq!(a.name, crossed[i].name, "slot {i} out of input order");
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "slot {i} ({}) diverged between jobs=1 and jobs=4",
+            crossed[i].name
+        );
+    }
+}

@@ -172,6 +172,12 @@ pub struct AccConfig {
     /// Resends attempted per request before the socket declares the
     /// destination blackholed and parks with a fault diagnosis.
     pub max_retries: u32,
+    /// Bytes of recently streamed P2P data the producer buffers per
+    /// consumer for retransmission.  0 disables replay entirely (the
+    /// default: the healthy hot path must stay byte-identical); recovery
+    /// runs set it so a resume-carrying re-request replays the lost bytes
+    /// instead of corrupting the stream.
+    pub replay_window: u32,
 }
 
 impl Default for AccConfig {
@@ -186,6 +192,7 @@ impl Default for AccConfig {
             dp_words_per_cycle: 8,
             retry_timeout: 0,
             max_retries: 3,
+            replay_window: 0,
         }
     }
 }
@@ -416,6 +423,7 @@ impl SocConfig {
             set_u64(a, "dp_words_per_cycle", |v| cfg.acc.dp_words_per_cycle = v as u32)?;
             set_u64(a, "retry_timeout", |v| cfg.acc.retry_timeout = v as u32)?;
             set_u64(a, "max_retries", |v| cfg.acc.max_retries = v as u32)?;
+            set_u64(a, "replay_window", |v| cfg.acc.replay_window = v as u32)?;
             if let Some(b) = a.get("l2_enabled") {
                 cfg.acc.l2_enabled = b.as_bool()?;
             }
@@ -501,6 +509,7 @@ impl SocConfig {
                     ("dp_words_per_cycle", Json::from(self.acc.dp_words_per_cycle as u64)),
                     ("retry_timeout", Json::from(self.acc.retry_timeout as u64)),
                     ("max_retries", Json::from(self.acc.max_retries as u64)),
+                    ("replay_window", Json::from(self.acc.replay_window as u64)),
                 ]),
             ),
             (
@@ -931,11 +940,15 @@ mod tests {
     fn retry_config_roundtrips() {
         let mut c = SocConfig::paper_3x4();
         assert_eq!(c.acc.retry_timeout, 0, "retry off by default");
+        assert_eq!(c.acc.replay_window, 0, "replay off by default");
         c.acc.retry_timeout = 4096;
         c.acc.max_retries = 5;
+        c.acc.replay_window = 1 << 16;
         let c2 = SocConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.acc.retry_timeout, 4096);
         assert_eq!(c2.acc.max_retries, 5);
+        assert_eq!(c2.acc.replay_window, 1 << 16);
+        assert_eq!(SocConfig::from_json("{}").unwrap().acc.replay_window, 0);
     }
 
     #[test]

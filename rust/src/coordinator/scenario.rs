@@ -32,7 +32,7 @@ use crate::fault::FaultPlan;
 use crate::noc::{Orientation, TickMode, NUM_PLANES};
 use crate::sched::SchedMode;
 use crate::telemetry::TelemetryReport;
-use crate::util::Json;
+use crate::util::{fnv1a64, Json, FNV_OFFSET};
 
 /// Evaluation platform a scenario runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -246,6 +246,10 @@ pub struct Scenario {
     /// request-XY/response-YX split).  Unlike `telemetry`, this *does*
     /// change cycles — which is the point of the congestion A/B.
     pub orientation: OrientationMode,
+    /// Recovery axis: producer-side P2P replay-ring window in bytes
+    /// ([`crate::config::AccConfig::replay_window`]).  0 = off
+    /// (byte-exact legacy): a lost chunk is diagnosed, not recovered.
+    pub replay_window: u32,
 }
 
 /// Cycle window fault events are drawn from: early enough to hit every
@@ -282,6 +286,21 @@ pub struct Outcome {
     pub dropped_flits: u64,
     /// Socket sub-request retries (optimized lowering; 0 healthy).
     pub socket_retries: u64,
+    /// Bytes retransmitted from producer replay rings (optimized
+    /// lowering; 0 unless [`Scenario::replay_window`] armed recovery and
+    /// a re-request actually resumed).
+    pub replayed_bytes: u64,
+    /// Truncated wormhole allocations retired by the fault drain's
+    /// downstream walk (optimized lowering; 0 healthy).
+    pub drained_worms: u64,
+    /// True when the run *survived* injected damage: it completed with
+    /// verified sink payloads even though bytes had to be replayed.
+    /// Always false when the replay window is off or the run was clean.
+    pub recovered: bool,
+    /// FNV-1a/64 over every sink's final output region, in node order —
+    /// the end-to-end payload-integrity digest (optimized lowering).  A
+    /// degraded run that completes must reproduce the healthy digest.
+    pub sink_digest: u64,
     /// Congestion/utilization snapshot of the optimized lowering; `None`
     /// unless [`Scenario::telemetry`] armed it.
     pub telemetry: Option<TelemetryReport>,
@@ -334,6 +353,7 @@ impl Scenario {
             fault_seed: 1,
             telemetry: false,
             orientation: OrientationMode::default(),
+            replay_window: 0,
         }
     }
 
@@ -362,6 +382,18 @@ impl Scenario {
         }
         if links > 0 {
             s.name = format!("{}+faults{links}", s.name);
+        }
+        s
+    }
+
+    /// Recovery copy: producer replay rings of `window` bytes armed.  The
+    /// name gains a `+replay{W}` suffix so bench records from the
+    /// diagnosis-only and recovery sweeps never collide.
+    pub fn recovery(&self, window: u32) -> Self {
+        let mut s = self.clone();
+        s.replay_window = window;
+        if window > 0 {
+            s.name = format!("{}+replay{window}", s.name);
         }
         s
     }
@@ -441,6 +473,9 @@ impl Scenario {
             // sub-request surfaces as a precise socket fault, not a hang.
             cfg.acc.retry_timeout = FAULT_RETRY_TIMEOUT;
         }
+        if self.replay_window > 0 {
+            cfg.acc.replay_window = self.replay_window;
+        }
         let (w, h) = (cfg.width, cfg.height);
         let mut soc = Soc::new(cfg)?;
         soc.set_sched_mode(self.sched);
@@ -486,6 +521,7 @@ impl Scenario {
         baseline_cycles: u64,
         report: &Report,
         telemetry: Option<TelemetryReport>,
+        sink_digest: u64,
     ) -> Outcome {
         let mut plane_flits = [0u64; NUM_PLANES];
         let mut plane_delivered = [0u64; NUM_PLANES];
@@ -493,6 +529,7 @@ impl Scenario {
             plane_flits[i] = p.flit_hops;
             plane_delivered[i] = p.delivered;
         }
+        let replayed_bytes = report.replayed_bytes();
         Outcome {
             name: self.name.clone(),
             platform: self.platform,
@@ -505,8 +542,22 @@ impl Scenario {
             invocation_spans: report.invocations.clone(),
             dropped_flits: report.dropped_flits(),
             socket_retries: report.socket_retries(),
+            replayed_bytes,
+            drained_worms: report.drained_worms(),
+            recovered: replayed_bytes > 0,
+            sink_digest,
             telemetry,
         }
+    }
+
+    /// Fold each `(vaddr, len)` region of `soc` memory into the payload
+    /// digest, in slice order.
+    fn digest_regions(soc: &mut Soc, regions: &[(u64, u32)]) -> u64 {
+        let mut h = FNV_OFFSET;
+        for &(vaddr, len) in regions {
+            h = fnv1a64(h, &soc.read_mem(vaddr, len as usize));
+        }
+        h
     }
 
     /// Graph-shaped patterns ride the dataflow lowering: P2P/multicast
@@ -517,6 +568,7 @@ impl Scenario {
         let cycles = g.run_budget(&mut soc, EdgePolicy::P2p, self.max_cycles)?;
         let report = soc.report();
         let telem = soc.telemetry_report();
+        let digest = Self::digest_regions(&mut soc, &g.sink_regions());
         // Free the optimized SoC (on the 16x16 platform its DRAM alone is
         // 256 MiB) before building the baseline one: farmed batches hold
         // `jobs` sims in flight, so per-sim peak memory is wall-clock for
@@ -524,7 +576,7 @@ impl Scenario {
         drop(soc);
         let mut base = self.soc()?;
         let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
-        Ok(self.outcome(cycles, baseline, &report, telem))
+        Ok(self.outcome(cycles, baseline, &report, telem, digest))
     }
 
     /// Red-black halo exchange on a ring of `n` nodes.
@@ -595,6 +647,11 @@ impl Scenario {
         let cycles = soc.run(self.max_cycles)?;
         let report = soc.report();
         let telem = soc.telemetry_report();
+        // Even nodes drain the merged halos to memory; their output
+        // regions are the exchange's end-to-end payload.
+        let regions: Vec<(u64, u32)> =
+            (0..n).filter(|i| i % 2 == 0).map(|i| (out(i), bytes)).collect();
+        let digest = Self::digest_regions(&mut soc, &regions);
         drop(soc); // one SoC at a time: farmed batches run `jobs` sims at once
 
         // --- baseline: the same exchange staged through DRAM.
@@ -642,7 +699,7 @@ impl Scenario {
             .phase(evens.map(|i| mem_merge(i, out(i))).collect());
         app.launch(&mut base)?;
         let baseline = base.run(self.max_cycles)?;
-        Ok(self.outcome(cycles, baseline, &report, telem))
+        Ok(self.outcome(cycles, baseline, &report, telem, digest))
     }
 
     /// `stages` P2P producer/consumer phases separated by coherent-flag
@@ -687,6 +744,7 @@ impl Scenario {
         let cycles = soc.run(self.max_cycles)?;
         let got = soc.read_mem(stage(stages - 1), bytes as usize);
         ensure!(got == data, "coherent pipeline corrupted its stream");
+        let digest = fnv1a64(FNV_OFFSET, &got);
         let report = soc.report();
         let telem = soc.telemetry_report();
         drop(soc); // one SoC at a time: farmed batches run `jobs` sims at once
@@ -695,7 +753,7 @@ impl Scenario {
         let g = Dataflow::generate(Shape::Chain(2 * stages as u8), bytes, burst, self.seed);
         let mut base = self.soc()?;
         let baseline = g.run_budget(&mut base, EdgePolicy::Memory, self.max_cycles)?;
-        Ok(self.outcome(cycles, baseline, &report, telem))
+        Ok(self.outcome(cycles, baseline, &report, telem, digest))
     }
 
     /// Serialize to the scenario-file JSON schema.
@@ -718,6 +776,11 @@ impl Scenario {
         if self.fault_links > 0 {
             m.insert("fault_links".to_string(), Json::from(self.fault_links as u64));
             m.insert("fault_seed".to_string(), Json::from(self.fault_seed));
+        }
+        if self.replay_window > 0 {
+            // Absent means off, so pre-recovery scenario files serialize
+            // byte-identically.
+            m.insert("replay_window".to_string(), Json::from(self.replay_window as u64));
         }
         if self.telemetry {
             // Emitted only when armed, so pre-telemetry scenario files
@@ -813,6 +876,9 @@ impl Scenario {
         }
         if let Some(v) = j.get("fault_seed") {
             s.fault_seed = v.as_u64()?;
+        }
+        if let Some(v) = j.get("replay_window") {
+            s.replay_window = as_u32(v, "replay_window")?;
         }
         if let Some(v) = j.get("telemetry") {
             s.telemetry = v.as_bool()?;
@@ -967,6 +1033,36 @@ mod tests {
         assert_eq!(d2.fault_links, 3);
         assert_eq!(d2.fault_seed, 9);
         assert_eq!(d2.name, "t+harvest1+faults3");
+    }
+
+    #[test]
+    fn recovery_axis_roundtrips_and_defaults_to_off() {
+        let base = Scenario::new("t", Pattern::P2pChain { stages: 3 }, Platform::Paper3x4);
+        assert_eq!(base.replay_window, 0);
+        assert!(base.to_json().get("replay_window").is_none(), "absent means off");
+        let r = base.recovery(1 << 14);
+        assert_eq!(r.name, "t+replay16384", "recovery suffixes the name");
+        assert_eq!(r.replay_window, 1 << 14);
+        let r2 = Scenario::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, r2, "recovery roundtrip");
+        assert_eq!(base.recovery(0).name, "t", "window 0 keeps the bare name");
+    }
+
+    #[test]
+    fn replay_on_healthy_run_changes_nothing_and_digests_match() {
+        // With no faults injected the replay ring only buffers: cycles,
+        // traffic, and the payload digest are identical to replay-off, no
+        // byte is ever replayed, and the run does not count as recovered.
+        let mut s = Scenario::new("t", Pattern::P2pChain { stages: 3 }, Platform::Paper3x4);
+        s.bytes = 8 << 10;
+        let off = s.run().unwrap();
+        let on = s.recovery(1 << 14).run().unwrap();
+        assert_eq!(on.cycles, off.cycles, "healthy hot path must not shift");
+        assert_eq!(on.sink_digest, off.sink_digest, "payload digest must match");
+        assert_eq!(on.plane_flits, off.plane_flits);
+        assert_eq!(on.replayed_bytes, 0);
+        assert_eq!(off.drained_worms, 0);
+        assert!(!on.recovered && !off.recovered);
     }
 
     #[test]

@@ -517,15 +517,51 @@ impl Soc {
             };
             let _ = writeln!(d, "  {:?}: {what}", self.cfg.coord_of(i));
         }
-        // Socket-level fault latches (retry exhaustion diagnoses).
+        // Socket-level fault latches (retry exhaustion diagnoses), plus
+        // replay-ring forensics wherever the recovery path was exercised:
+        // producer rings are on a *different* socket than the consumer that
+        // latched, so the replay lines scan every socket, not just faulted
+        // ones.
         for t in &self.tiles {
             if let Tile::Acc(a) = t {
                 for s in &a.sockets {
                     if let Some(cause) = s.fault() {
-                        let _ = writeln!(d, "socket fault: {cause}");
+                        let _ = writeln!(
+                            d,
+                            "socket fault: {cause} ({} retries spent)",
+                            s.stats.retries
+                        );
+                    }
+                    let p = &s.p2p;
+                    if p.window() > 0 && (p.replayed_bytes + p.window_exceeded > 0) {
+                        let _ = write!(
+                            d,
+                            "replay {:?}.{}: window {} B, {} B replayed, {} resume(s) beyond \
+                             window;",
+                            s.coord,
+                            s.slot,
+                            p.window(),
+                            p.replayed_bytes,
+                            p.window_exceeded
+                        );
+                        for (c, slot, buffered, sent) in p.replay_state() {
+                            let _ = write!(d, " ->{c:?}.{slot} {buffered} B kept @ off {sent}");
+                        }
+                        let _ = writeln!(d);
                     }
                 }
             }
+        }
+        // Fault-injection counters: distinguishes a storm that actually hit
+        // traffic (dropped flits explain a lost, unretryable control write)
+        // from a hang with no fault signal at all.
+        let noc = self.noc.stats_total();
+        if noc.dropped_flits + noc.dropped_msgs + noc.drained_worms > 0 {
+            let _ = writeln!(
+                d,
+                "faults: {} flits dropped, {} msgs refused, {} worms drained",
+                noc.dropped_flits, noc.dropped_msgs, noc.drained_worms
+            );
         }
         // Per-plane router occupancy.
         for plane in Plane::ALL {
@@ -562,7 +598,13 @@ impl Soc {
         let socket_fault = self.tiles.iter().any(|t| {
             matches!(t, Tile::Acc(a) if a.sockets.iter().any(|s| s.fault().is_some()))
         });
-        let cause = if socket_fault {
+        let window_exceeded = self.tiles.iter().any(|t| {
+            matches!(t, Tile::Acc(a) if a.sockets.iter().any(|s| s.p2p.window_exceeded > 0))
+        });
+        let cause = if socket_fault && window_exceeded {
+            "replay window exceeded (a consumer's resume offset fell behind its producer's \
+             ring; see replay state above)"
+        } else if socket_fault {
             "dead-link blackhole (socket retries exhausted; see socket fault above)"
         } else if matches!(&stall, Some((_, p)) if p.next_dead) {
             "dead-link blackhole (oldest packet's next hop crosses a killed link)"

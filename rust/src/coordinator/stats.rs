@@ -54,6 +54,18 @@ impl Report {
         self.sockets.iter().map(|(_, s)| s.retries).sum()
     }
 
+    /// Bytes retransmitted from producer-side replay rings (0 unless
+    /// `replay_window` is armed and a re-request actually resumed).
+    pub fn replayed_bytes(&self) -> u64 {
+        self.sockets.iter().map(|(_, s)| s.replayed_bytes).sum()
+    }
+
+    /// Truncated wormhole allocations retired by the fault drain's
+    /// downstream walk, across planes (0 on healthy runs).
+    pub fn drained_worms(&self) -> u64 {
+        self.planes.iter().map(|p| p.drained_worms).sum()
+    }
+
     /// Latency of accelerator `acc`'s first invocation, if logged.
     pub fn invocation_latency(&self, acc: u16) -> Option<u64> {
         self.invocations.iter().find(|(a, _, _)| *a == acc).map(|(_, s, e)| e - s)
@@ -93,10 +105,13 @@ impl Report {
         if self.dropped_flits() + self.dropped_msgs() + self.socket_retries() > 0 {
             let _ = writeln!(
                 s,
-                "faults: {} flits dropped, {} msgs refused, {} socket retries",
+                "faults: {} flits dropped, {} msgs refused, {} socket retries, \
+                 {} worms drained, {} B replayed",
                 self.dropped_flits(),
                 self.dropped_msgs(),
-                self.socket_retries()
+                self.socket_retries(),
+                self.drained_worms(),
+                self.replayed_bytes()
             );
         }
         for (acc, st) in &self.sockets {

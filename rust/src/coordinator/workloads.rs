@@ -180,6 +180,17 @@ impl Dataflow {
         0x0280_0000 + id as u64 * 0x0010_0000
     }
 
+    /// Final-output DRAM regions `(vaddr, len)` of every sink, in node
+    /// order — the scenario layer hashes these after a run for its
+    /// end-to-end payload digest (both lowerings write the same regions).
+    pub fn sink_regions(&self) -> Vec<(u64, u32)> {
+        self.nodes
+            .iter()
+            .filter(|n| self.fanout(n.id) == 0)
+            .map(|n| (Self::out_addr(n.id), self.bytes))
+            .collect()
+    }
+
     /// [`Dataflow::run`] with the default 100M-cycle budget.
     pub fn run(&self, soc: &mut Soc, policy: EdgePolicy) -> Result<u64> {
         self.run_budget(soc, policy, 100_000_000)

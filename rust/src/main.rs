@@ -39,7 +39,7 @@ USAGE:
       scaled 16x16 sweep (32 packed consumers, 4 MB transfers).
   espsim scenarios [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
                    [--sched MODE] [--orientation MODE|all]
-                   [--harvest ROWS] [--faults N[:SEED]]
+                   [--harvest ROWS] [--faults N[:SEED]] [--replay W]
                    [--jobs N] [--seeds K] [--telemetry OUT] [--list] [--json]
       Run the declarative scenario registry (P2P chains, multicast
       fan-outs, scatter-gather, all-to-all shuffles, halo exchanges,
@@ -60,6 +60,13 @@ USAGE:
       kills N random links mid-run from a seeded deterministic plan.
       Degraded sweeps record completion 0/1, drop and retry counts per
       scenario instead of aborting on the first failure.
+      --replay W arms W-byte producer-side P2P replay rings (the
+      recovery axis): a sub-request lost to a killed link is
+      retransmitted from the ring at the consumer's resume offset
+      instead of being diagnosed as latched corruption, points gain a
+      +replayW suffix and the bench section a _replay suffix, and
+      degraded records carry recovered / replayed_bytes /
+      drained_worms next to the drop and retry counts.
       --jobs runs the batch on the simulation farm (N worker threads;
       0 = one per core; default 1 = serial) and --seeds fans each
       scenario out to K seeded replicas.  Results are collected by
@@ -76,7 +83,7 @@ USAGE:
   espsim sweep-farm [--filter NAME] [--mesh16] [--bytes N] [--file PATH]
                     [--sched MODE|all] [--ticks MODE|all]
                     [--orientation MODE|all]
-                    [--harvest ROWS] [--faults N[:SEED]]
+                    [--harvest ROWS] [--faults N[:SEED]] [--replay W]
                     [--jobs N] [--seeds K] [--telemetry OUT]
                     [--list] [--json]
       Monte-Carlo sweep on the simulation farm: cross the scenario
@@ -178,6 +185,7 @@ struct ScenarioOpts {
     harvest_rows: Vec<u8>,
     fault_links: u8,
     fault_seed: u64,
+    replay_window: u32,
     jobs: usize,
     seeds: u64,
     telemetry: Option<String>,
@@ -228,6 +236,8 @@ impl ScenarioOpts {
             }
             None => (0, 1),
         };
+        let replay_window: u32 =
+            args.value("--replay")?.map(|v| v.parse()).transpose()?.unwrap_or(0);
         ensure!(
             !(mesh16 && file.is_some()),
             "--mesh16 selects the builtin registry's platform; scenario files carry their own"
@@ -241,6 +251,7 @@ impl ScenarioOpts {
             harvest_rows,
             fault_links,
             fault_seed,
+            replay_window,
             jobs,
             seeds,
             telemetry,
@@ -272,6 +283,13 @@ impl ScenarioOpts {
                 *s = s.degraded(&self.harvest_rows, self.fault_links, self.fault_seed);
             }
         }
+        if self.replay_window > 0 {
+            // The recovery axis composes with the degraded axes above:
+            // `recovery` suffixes +replayW after +harvestR/+faultsN.
+            for s in &mut scenarios {
+                *s = s.recovery(self.replay_window);
+            }
+        }
         if self.telemetry.is_some() {
             // The flag survives seed expansion and axis crossing: both
             // clone the base scenario, so every replica records counters.
@@ -295,6 +313,9 @@ impl ScenarioOpts {
         }
         if self.fault_links > 0 {
             name.push_str("_faults");
+        }
+        if self.replay_window > 0 {
+            name.push_str("_replay");
         }
         name
     }
@@ -449,6 +470,9 @@ fn run_batch(
             extras.push(("completed", Json::from(1u64)));
             extras.push(("dropped_flits", Json::from(o.dropped_flits)));
             extras.push(("socket_retries", Json::from(o.socket_retries)));
+            extras.push(("recovered", Json::from(o.recovered as u64)));
+            extras.push(("replayed_bytes", Json::from(o.replayed_bytes)));
+            extras.push(("drained_worms", Json::from(o.drained_worms)));
         }
         if let Some(tr) = &o.telemetry {
             // Hotspot totals ride along in the bench record so a

@@ -201,10 +201,19 @@ pub enum MsgKind {
     DmaWriteAck { tag: u32, slot: u8 },
     /// Consumer socket -> producer socket: pull request for `len` bytes
     /// (the *length-carrying* request of the flexible-P2P enhancement).
-    P2pReq { len: u32, prod_slot: u8, cons_slot: u8 },
+    /// `resume` is [`RESUME_NONE`] on a fresh pull; a retransmission
+    /// request carries the consumer's exact stream offset instead, so a
+    /// replay-buffering producer can resend the lost bytes (DESIGN.md
+    /// §fault recovery).
+    P2pReq { len: u32, prod_slot: u8, cons_slot: u8, resume: u32 },
     /// Producer socket -> consumer socket(s): forwarded data (payload
     /// attached).  Multicast when the header has several destinations;
-    /// consumers match on `(src coord, prod_slot)`.
+    /// consumers match on `(src coord, prod_slot)`.  `seq` is a plain
+    /// per-producer message counter on the legacy path; with the replay
+    /// window armed (`replay_window > 0`) the producer repurposes the same
+    /// header field as the payload's **stream offset**, which lets
+    /// consumers place bytes exactly and drop gapped or duplicate chunks
+    /// instead of mis-assembling them (DESIGN.md §fault recovery).
     P2pData { seq: u32, prod_slot: u8 },
     /// Coherence protocol message; `line` is the cache-line address.
     Coh { op: CohOp, line: u64, ack_count: u16 },
@@ -218,6 +227,11 @@ pub enum MsgKind {
     /// Accelerator tile -> CPU: invocation finished (`acc` = global id).
     Irq { acc: u16 },
 }
+
+/// `resume` sentinel of [`MsgKind::P2pReq`]: a fresh pull request (no
+/// retransmission implied).  Stream offsets wrap far below this value in
+/// practice — a single invocation moves at most `u32::MAX - 1` bytes.
+pub const RESUME_NONE: u32 = u32::MAX;
 
 /// A protocol message travelling on one NoC plane.
 #[derive(Debug, Clone)]
@@ -386,8 +400,11 @@ mod tests {
 
     #[test]
     fn flit_count_includes_header() {
-        let msg =
-            Message::ctrl((0, 0), (1, 1), MsgKind::P2pReq { len: 64, prod_slot: 0, cons_slot: 0 });
+        let msg = Message::ctrl(
+            (0, 0),
+            (1, 1),
+            MsgKind::P2pReq { len: 64, prod_slot: 0, cons_slot: 0, resume: RESUME_NONE },
+        );
         assert_eq!(msg.flit_count(32), 1);
         let data = Message::data(
             (0, 0),

@@ -24,7 +24,7 @@ pub mod routing;
 
 pub use flit::{bits_per_dest, coord_component_bits, header_dest_capacity,
                header_dest_capacity_for, header_meta_bits, CohOp, Coord, DestList, Dir, Flit,
-               Message, MsgKind, PktId, MAX_DESTS};
+               Message, MsgKind, PktId, MAX_DESTS, RESUME_NONE};
 pub use mesh::{Mesh, MeshParams, MeshStats, StallProbe};
 pub use planes::{Noc, Plane, TickMode, NUM_PLANES};
 pub use route_table::RouteTable;

@@ -336,6 +336,7 @@ impl Noc {
             t.busy_cycles += m.stats.busy_cycles;
             t.dropped_flits += m.stats.dropped_flits;
             t.dropped_msgs += m.stats.dropped_msgs;
+            t.drained_worms += m.stats.drained_worms;
         }
         t
     }
@@ -392,7 +393,12 @@ mod tests {
     fn planes_are_independent() {
         let mut noc =
             Noc::new(MeshParams { width: 3, height: 3, flit_bytes: 32, queue_depth: 4 });
-        let req = MsgKind::P2pReq { len: 8, prod_slot: 0, cons_slot: 0 };
+        let req = MsgKind::P2pReq {
+            len: 8,
+            prod_slot: 0,
+            cons_slot: 0,
+            resume: crate::noc::flit::RESUME_NONE,
+        };
         noc.send(Plane::DmaReq, (0, 0), Message::ctrl((0, 0), (1, 1), req));
         noc.send(Plane::Misc, (0, 0), Message::ctrl((0, 0), (1, 1), MsgKind::Irq { acc: 0 }));
         let mut t = 0;

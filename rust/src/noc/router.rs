@@ -17,7 +17,7 @@
 
 use std::collections::VecDeque;
 
-use super::flit::{Coord, Flit};
+use super::flit::{Coord, Flit, PktId};
 
 /// Hard capacity of a [`PortQ`]; `MeshParams::queue_depth` must not exceed
 /// it (checked at mesh construction).  16 covers every configuration the
@@ -131,6 +131,14 @@ pub struct Router {
     /// dropped by fault injection, so the remaining flits (through the
     /// tail) are discarded as they arrive.  Never set on a healthy mesh.
     pub in_dropping: [bool; 5],
+    /// Packet whose head allocated through input port `i` (valid while
+    /// `in_branches[i] != 0`).  Slab slots are recycled, so the id is
+    /// paired with the slab generation below: together they name the worm
+    /// exactly, which is what lets the fault drain retire allocations
+    /// orphaned by an upstream truncation (DESIGN.md §fault recovery).
+    pub in_pkt: [PktId; 5],
+    /// Slab generation of `in_pkt[i]` at allocation time.
+    pub in_pkt_gen: [u32; 5],
     /// Replication buffer per output port (forked packets only).
     pub branch_q: [VecDeque<Slot>; 5],
     /// Flits currently queued here (inq + branch_q), kept incrementally so
@@ -150,6 +158,8 @@ impl Router {
             in_branches: [0; 5],
             in_buffered: [false; 5],
             in_dropping: [false; 5],
+            in_pkt: [0; 5],
+            in_pkt_gen: [0; 5],
             branch_q: Default::default(),
             occupancy: 0,
             flits_forwarded: 0,

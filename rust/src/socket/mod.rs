@@ -31,7 +31,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use crate::config::AccConfig;
-use crate::noc::{Coord, Message, MsgKind, Plane};
+use crate::noc::{Coord, Message, MsgKind, Plane, RESUME_NONE};
 use crate::sched::Wake;
 
 pub use interface::{DmaDir, LiChannel, ReadCtrl, WriteCtrl};
@@ -85,8 +85,14 @@ pub struct SocketStats {
     /// Sub-requests re-sent after a response timeout (degraded mode only;
     /// always 0 while `retry_timeout == 0`).
     pub retries: u64,
-    /// Stale responses dropped: duplicate answers to retried requests.
+    /// Stale bytes/responses dropped: duplicate answers to retried
+    /// requests, plus (with the replay window armed) P2P chunks whose
+    /// stream offset is gapped or already-delivered — dropping them is
+    /// what keeps a recovered stream exactly in order.
     pub stale_drops: u64,
+    /// Bytes retransmitted from the producer-side replay ring (always 0
+    /// while `replay_window == 0`; not counted in `p2p_write_bytes`).
+    pub replayed_bytes: u64,
 }
 
 /// An outstanding P2P pull on the consumer side.
@@ -96,6 +102,9 @@ struct P2pRead {
     plm_addr: u32,
     len: u32,
     received: u32,
+    /// Stream offset (bytes pulled from this producer before this txn):
+    /// a stalled re-request resumes at exactly `base + received`.
+    base: u64,
     /// Retry bookkeeping (meaningful only when `retry_timeout > 0`):
     /// re-request deadline (`u64::MAX` = retry off or given up), number of
     /// re-requests sent, and bytes seen at the last progress check — a
@@ -159,6 +168,9 @@ pub struct Socket {
     fault: Option<String>,
     /// Consumer-side P2P pulls, FIFO per (producer, slot).
     p2p_rd: HashMap<(Coord, u8), VecDeque<P2pRead>>,
+    /// Cumulative bytes requested per producer this invocation (stream
+    /// offsets for resume-carrying re-requests).
+    p2p_rd_pos: HashMap<(Coord, u8), u64>,
     /// Outstanding consumer-side pulls (cheap quiescence check).
     p2p_rd_outstanding: u32,
     /// Producer-side P2P/multicast unit.
@@ -182,6 +194,7 @@ impl Socket {
         mcast_capacity: usize,
     ) -> Self {
         let tlb = Tlb::new(cfg.tlb_entries, cfg.page_bytes, 0);
+        let replay_window = cfg.replay_window;
         Self {
             coord,
             slot,
@@ -204,8 +217,9 @@ impl Socket {
             retry_q: Vec::new(),
             fault: None,
             p2p_rd: HashMap::new(),
+            p2p_rd_pos: HashMap::new(),
             p2p_rd_outstanding: 0,
-            p2p: P2pUnit::default(),
+            p2p: P2pUnit::with_window(replay_window),
             delayed: Vec::new(),
             out: Vec::new(),
             stats: SocketStats::default(),
@@ -278,6 +292,7 @@ impl Socket {
         self.next_tag = 0;
         self.p2p.reset();
         self.p2p_rd.clear();
+        self.p2p_rd_pos.clear();
         self.p2p_rd_outstanding = 0;
         self.retry_q.clear();
     }
@@ -341,19 +356,24 @@ impl Socket {
                     self.done.insert(txn);
                 }
             }
-            MsgKind::P2pReq { len, prod_slot, cons_slot } if prod_slot == self.slot => {
-                self.p2p.on_request(msg.src, cons_slot, len);
+            MsgKind::P2pReq { len, prod_slot, cons_slot, resume } if prod_slot == self.slot => {
+                self.p2p.on_request(msg.src, cons_slot, len, resume);
             }
-            MsgKind::P2pData { prod_slot, .. } => {
+            MsgKind::P2pData { seq, prod_slot } => {
                 if !cons_participates(&msg.dests, msg.cons_slots, self.coord, self.slot) {
                     return;
                 }
                 let key = (msg.src, prod_slot);
+                // With the replay window armed, `seq` carries the payload's
+                // stream offset; the legacy path fills pulls in arrival
+                // order and must stay byte-identical.
+                let offset_tagged = self.cfg.replay_window > 0;
+                let mut moff = seq as u64;
                 let q = self.p2p_rd.entry(key).or_default();
                 let mut off = 0usize;
                 while off < msg.payload.len() {
                     let Some(txn) = q.front_mut() else {
-                        if self.cfg.retry_timeout > 0 {
+                        if self.cfg.retry_timeout > 0 || offset_tagged {
                             // Over-delivery from a re-requested pull whose
                             // original data also arrived: drop the excess.
                             self.stats.stale_drops += (msg.payload.len() - off) as u64;
@@ -364,12 +384,35 @@ impl Socket {
                             self.coord, self.slot, key
                         );
                     };
+                    if offset_tagged {
+                        let expect = txn.base + txn.received as u64;
+                        if moff > expect {
+                            // A gap: an earlier chunk was lost (or is
+                            // straggling on a longer post-reroute path).
+                            // Taking these bytes would mis-assemble the
+                            // stream, so drop them — the stalled pull's
+                            // re-request resumes at `expect` and the
+                            // producer's ring replays the gap in order.
+                            self.stats.stale_drops += (msg.payload.len() - off) as u64;
+                            break;
+                        }
+                        if moff < expect {
+                            // Stale overlap: bytes a replay (or the late
+                            // original it duplicated) already delivered.
+                            let skip = ((expect - moff) as usize).min(msg.payload.len() - off);
+                            self.stats.stale_drops += skip as u64;
+                            off += skip;
+                            moff += skip as u64;
+                            continue;
+                        }
+                    }
                     let want = (txn.len - txn.received) as usize;
                     let take = want.min(msg.payload.len() - off);
                     let dst = (txn.plm_addr + txn.received) as usize;
                     plm[dst..dst + take].copy_from_slice(&msg.payload[off..off + take]);
                     txn.received += take as u32;
                     off += take;
+                    moff += take as u64;
                     self.stats.p2p_read_bytes += take as u64;
                     if txn.received == txn.len {
                         self.done.insert(txn.tag);
@@ -407,6 +450,9 @@ impl Socket {
                 } else {
                     u64::MAX
                 };
+                let pos = self.p2p_rd_pos.entry((prod, prod_slot)).or_insert(0);
+                let base = *pos;
+                *pos += rc.len as u64;
                 self.p2p_rd
                     .entry((prod, prod_slot))
                     .or_default()
@@ -415,13 +461,18 @@ impl Socket {
                         plm_addr: rc.plm_addr,
                         len: rc.len,
                         received: 0,
+                        base,
                         deadline,
                         tries: 0,
                         last_seen: 0,
                     });
                 self.p2p_rd_outstanding += 1;
-                let kind =
-                    MsgKind::P2pReq { len: rc.len, prod_slot, cons_slot: self.slot };
+                let kind = MsgKind::P2pReq {
+                    len: rc.len,
+                    prod_slot,
+                    cons_slot: self.slot,
+                    resume: RESUME_NONE,
+                };
                 self.out.push((Plane::DmaReq, Message::ctrl(self.coord, prod, kind)));
             }
         }
@@ -444,6 +495,7 @@ impl Socket {
         // Per-consumer byte accounting lives in the unit (distinct dest
         // coords under-count when two consumer slots share a tile).
         self.stats.p2p_write_bytes = self.p2p.bytes_sent;
+        self.stats.replayed_bytes = self.p2p.replayed_bytes;
         // A tag completing *here* (after the core's tick this cycle) may
         // unblock a Wdma spin: stay busy one cycle so the core observes
         // it, exactly when the full-scan reference would.
@@ -555,10 +607,14 @@ impl Socket {
             }
             t.tries += 1;
             t.deadline = now + timeout;
+            // The re-request names the exact stream offset to resume from;
+            // a replay-buffering producer retransmits from there, a plain
+            // producer (`replay_window == 0`) treats it as a credit add.
             let kind = MsgKind::P2pReq {
                 len: t.len - t.received,
                 prod_slot,
                 cons_slot: self.slot,
+                resume: (t.base + t.received as u64) as u32,
             };
             self.stats.retries += 1;
             self.out.push((Plane::DmaReq, Message::ctrl(self.coord, prod, kind)));
@@ -754,8 +810,10 @@ mod tests {
         let out = s.drain_out();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].1.dests.as_slice(), &[(2, 2)]);
-        let MsgKind::P2pReq { len, prod_slot, cons_slot } = out[0].1.kind else { panic!() };
-        assert_eq!((len, prod_slot, cons_slot), (1024, 1, 0));
+        let MsgKind::P2pReq { len, prod_slot, cons_slot, resume } = out[0].1.kind else {
+            panic!()
+        };
+        assert_eq!((len, prod_slot, cons_slot, resume), (1024, 1, 0, RESUME_NONE));
         // Data arrives (possibly split): two 512-byte messages.
         for i in 0..2u32 {
             let mut m = Message::data(
@@ -784,7 +842,7 @@ mod tests {
         let req = Message::ctrl(
             (0, 1),
             (1, 1),
-            MsgKind::P2pReq { len: 2048, prod_slot: 0, cons_slot: 0 },
+            MsgKind::P2pReq { len: 2048, prod_slot: 0, cons_slot: 0, resume: RESUME_NONE },
         );
         s.handle_msg(&req, &mut plm);
         s.tick(1, &mut plm);
@@ -901,9 +959,116 @@ mod tests {
         s.tick(17, &mut plm);
         let out = s.drain_out();
         assert_eq!(out.len(), 1);
-        let MsgKind::P2pReq { len, .. } = out[0].1.kind else { panic!() };
+        let MsgKind::P2pReq { len, resume, .. } = out[0].1.kind else { panic!() };
         assert_eq!(len, 512, "re-request asks for the missing bytes only");
+        assert_eq!(resume, 512, "re-request names the exact resume offset");
         assert_eq!(s.stats.retries, 1);
+    }
+
+    #[test]
+    fn second_pull_resumes_at_the_stream_offset() {
+        // Stream offsets are cumulative per producer: a stall in the second
+        // pull resumes past the first pull's bytes, not at its own start.
+        let mut s = retry_socket(8, 3);
+        let mut plm = vec![0u8; 64 << 10];
+        s.regs.write(regs::regno::SRC_LUT + 2, pack_src((2, 2), 1));
+        s.submit_read(0, 256, 2, 0).unwrap();
+        s.tick(0, &mut plm);
+        s.drain_out();
+        let mut m = Message::data(
+            (2, 2),
+            (1, 1),
+            MsgKind::P2pData { seq: 0, prod_slot: 1 },
+            Arc::new(vec![1u8; 256]),
+        );
+        m.cons_slots = p2p::encode_cons_slots(&[(1, 1)], &[((1, 1), 0)]);
+        s.handle_msg(&m, &mut plm);
+        s.submit_read(0, 256, 2, 256).unwrap();
+        s.tick(1, &mut plm);
+        s.drain_out();
+        // The second pull never delivers: its re-request resumes at 256.
+        s.tick(10, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        let MsgKind::P2pReq { len, resume, .. } = out[0].1.kind else { panic!() };
+        assert_eq!((len, resume), (256, 256));
+    }
+
+    fn replay_socket(timeout: u32, max_retries: u32, window: u32) -> Socket {
+        let cfg = AccConfig {
+            retry_timeout: timeout,
+            max_retries,
+            replay_window: window,
+            ..AccConfig::default()
+        };
+        let mut s = Socket::new((1, 1), 0, 3, cfg, (0, 3), (0, 0), 16);
+        s.tlb.map_linear(0x10000, 1 << 20);
+        s
+    }
+
+    fn p2p_data(seq: u32, payload: Vec<u8>) -> Message {
+        let mut m = Message::data(
+            (2, 2),
+            (1, 1),
+            MsgKind::P2pData { seq, prod_slot: 1 },
+            Arc::new(payload),
+        );
+        m.cons_slots = p2p::encode_cons_slots(&[(1, 1)], &[((1, 1), 0)]);
+        m
+    }
+
+    #[test]
+    fn armed_consumer_drops_gapped_data_instead_of_misassembling() {
+        // A mid-stream chunk is lost but a later chunk still arrives (it
+        // rerouted around the kill).  Without offset tags the later bytes
+        // would silently land at the earlier offset; with the window armed
+        // the gap is detected, the chunk dropped, and the stalled pull's
+        // re-request recovers the stream in order.
+        let mut s = replay_socket(8, 3, 4096);
+        let mut plm = vec![0u8; 64 << 10];
+        s.regs.write(regs::regno::SRC_LUT + 2, pack_src((2, 2), 1));
+        let tag = s.submit_read(0, 1024, 2, 0).unwrap();
+        s.tick(0, &mut plm);
+        s.drain_out();
+        // Chunk [0, 512) is lost; chunk [512, 1024) arrives first.
+        s.handle_msg(&p2p_data(512, vec![2u8; 512]), &mut plm);
+        assert_eq!(s.stats.stale_drops, 512, "gapped chunk dropped, not placed");
+        assert_eq!(s.stats.p2p_read_bytes, 0);
+        // The stalled pull re-requests from offset 0...
+        s.tick(9, &mut plm);
+        let out = s.drain_out();
+        assert_eq!(out.len(), 1);
+        let MsgKind::P2pReq { len, resume, .. } = out[0].1.kind else { panic!() };
+        assert_eq!((len, resume), (1024, 0));
+        // ...and the producer's replay delivers the whole stream in order.
+        s.handle_msg(&p2p_data(0, vec![1u8; 512]), &mut plm);
+        s.handle_msg(&p2p_data(512, vec![2u8; 512]), &mut plm);
+        assert!(s.is_done(tag));
+        assert_eq!(&plm[..512], &[1u8; 512][..]);
+        assert_eq!(&plm[512..1024], &[2u8; 512][..]);
+        assert!(s.fault().is_none());
+    }
+
+    #[test]
+    fn armed_consumer_skips_duplicate_bytes_a_replay_already_delivered() {
+        // The original chunk was only delayed, not lost: after the replay
+        // fills the stream, the straggler's overlap is skipped while any
+        // genuinely new tail bytes are still taken.
+        let mut s = replay_socket(8, 3, 4096);
+        let mut plm = vec![0u8; 64 << 10];
+        s.regs.write(regs::regno::SRC_LUT + 2, pack_src((2, 2), 1));
+        let tag = s.submit_read(0, 1024, 2, 0).unwrap();
+        s.tick(0, &mut plm);
+        s.drain_out();
+        s.handle_msg(&p2p_data(0, vec![1u8; 512]), &mut plm);
+        // The replayed copy of [0, 512) straggles in again.
+        s.handle_msg(&p2p_data(0, vec![1u8; 512]), &mut plm);
+        assert_eq!(s.stats.stale_drops, 512, "duplicate overlap skipped");
+        assert!(!s.is_done(tag));
+        s.handle_msg(&p2p_data(512, vec![2u8; 512]), &mut plm);
+        assert!(s.is_done(tag));
+        assert_eq!(&plm[..512], &[1u8; 512][..]);
+        assert_eq!(&plm[512..1024], &[2u8; 512][..]);
     }
 
     #[test]

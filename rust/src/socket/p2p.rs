@@ -19,7 +19,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::noc::{Coord, DestList, Message, MsgKind};
+use crate::noc::{Coord, DestList, Message, MsgKind, RESUME_NONE};
 
 /// A consumer that has sent at least one pull request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +42,30 @@ struct PendingBurst {
     sent: usize,
 }
 
+/// Bounded retransmission history for one consumer (parallel to
+/// [`P2pUnit::consumers`]); only maintained when the replay window is on.
+#[derive(Debug, Default)]
+struct ReplayRing {
+    /// The most recent `window` bytes streamed to this consumer.
+    buf: VecDeque<u8>,
+    /// Stream offset of the first buffered byte.
+    start: u64,
+    /// Resume offset of the replay currently queued for emission.  A
+    /// repeated re-request at the same offset before the queued replay
+    /// goes out is absorbed (one retransmission serves both); the guard
+    /// clears at emission, so a re-request arriving a full timeout later —
+    /// the replay itself was lost — retransmits again.  Duplicates are
+    /// harmless either way: consumers skip already-delivered offsets.
+    last_resume: Option<u64>,
+}
+
+impl ReplayRing {
+    /// Stream offset one past the last byte streamed to this consumer.
+    fn sent_total(&self) -> u64 {
+        self.start + self.buf.len() as u64
+    }
+}
+
 /// Producer-side state for one socket.
 #[derive(Debug, Default)]
 pub struct P2pUnit {
@@ -49,10 +73,24 @@ pub struct P2pUnit {
     consumers: Vec<Consumer>,
     bursts: VecDeque<PendingBurst>,
     seq: u32,
+    /// Replay window in bytes buffered per consumer; 0 disables replay
+    /// entirely (the default: re-requests fall back to plain credit adds,
+    /// byte-identical to the pre-replay unit).
+    window: u32,
+    /// Per-consumer replay rings, parallel to `consumers`.
+    rings: Vec<ReplayRing>,
+    /// Retransmissions awaiting emission on the next tick, with the stream
+    /// offset each one resumes at.
+    replays: Vec<(Coord, u8, u64, Vec<u8>)>,
     /// Stats: bytes sent via P2P/multicast.
     pub bytes_sent: u64,
     /// Stats: multicast messages (>= 2 dests) sent.
     pub multicasts: u64,
+    /// Stats: bytes retransmitted from replay rings.
+    pub replayed_bytes: u64,
+    /// Stats: re-requests whose resume offset predated the ring — recovery
+    /// impossible, so the consumer's retry budget latches the diagnosis.
+    pub window_exceeded: u64,
 }
 
 /// Encode the per-destination slot participation mask: bit `2*i + slot` is
@@ -76,15 +114,59 @@ pub fn cons_participates(dests: &DestList, cons_slots: u32, coord: Coord, slot: 
 }
 
 impl P2pUnit {
-    /// Record a consumer pull request of `len` bytes.
-    pub fn on_request(&mut self, coord: Coord, slot: u8, len: u32) {
-        if let Some(c) =
-            self.consumers.iter_mut().find(|c| c.coord == coord && c.slot == slot)
-        {
-            c.credit += len as u64;
-        } else {
-            self.consumers.push(Consumer { coord, slot, credit: len as u64 });
+    /// A unit with an armed replay window of `window` bytes per consumer.
+    pub fn with_window(window: u32) -> Self {
+        Self { window, ..Self::default() }
+    }
+
+    /// Replay window (bytes buffered per consumer; 0 = replay disabled).
+    pub fn window(&self) -> u32 {
+        self.window
+    }
+
+    /// Record a consumer pull request of `len` bytes.  `resume` is
+    /// [`RESUME_NONE`] on a fresh pull (plain credit add); a retransmission
+    /// request instead carries the consumer's exact stream offset, and with
+    /// the replay window armed the unit resends `[resume, sent_total)` from
+    /// the ring and *replaces* the consumer's credit with the unsent
+    /// remainder — the resume request supersedes whatever stale credit the
+    /// lost original left behind.
+    pub fn on_request(&mut self, coord: Coord, slot: u8, len: u32, resume: u32) {
+        let i = match self.consumers.iter().position(|c| c.coord == coord && c.slot == slot) {
+            Some(i) => i,
+            None => {
+                self.consumers.push(Consumer { coord, slot, credit: 0 });
+                self.rings.push(ReplayRing::default());
+                self.consumers.len() - 1
+            }
+        };
+        if resume == RESUME_NONE || self.window == 0 {
+            // Fresh pull, or replay disabled: the legacy credit-only path
+            // (byte-identical to the pre-replay unit either way).
+            self.consumers[i].credit += len as u64;
+            return;
         }
+        let ring = &mut self.rings[i];
+        let resume = resume as u64;
+        if resume < ring.start {
+            // The lost bytes already fell out of the bounded window:
+            // recovery is impossible.  Grant no credit — the consumer's
+            // retry budget exhausts and latches the precise diagnosis
+            // instead of the stream silently resuming with wrong bytes.
+            self.window_exceeded += 1;
+            return;
+        }
+        let sent_total = ring.sent_total();
+        debug_assert!(resume <= sent_total, "consumer resumed past the stream head");
+        let have = sent_total.saturating_sub(resume);
+        if have > 0 && ring.last_resume != Some(resume) {
+            ring.last_resume = Some(resume);
+            let off = (resume - ring.start) as usize;
+            let bytes: Vec<u8> = ring.buf.iter().skip(off).copied().collect();
+            self.replayed_bytes += bytes.len() as u64;
+            self.replays.push((coord, slot, resume, bytes));
+        }
+        self.consumers[i].credit = (len as u64).saturating_sub(have);
     }
 
     /// Queue a write burst for `ndests` consumers (tag completes once the
@@ -109,6 +191,26 @@ impl P2pUnit {
         out: &mut Vec<Message>,
     ) -> Vec<u32> {
         let mut done = Vec::new();
+        // Retransmissions go out first: they are strictly older stream
+        // bytes than anything the credit loop below can emit.  Replays only
+        // exist with the window armed, so `seq` carries the stream offset
+        // the retransmission resumes at.
+        for (coord, slot, resume, bytes) in self.replays.drain(..) {
+            if let Some(i) =
+                self.consumers.iter().position(|c| c.coord == coord && c.slot == slot)
+            {
+                self.rings[i].last_resume = None;
+            }
+            let kind = MsgKind::P2pData { seq: resume as u32, prod_slot: self_slot };
+            self.seq += 1;
+            out.push(Message {
+                src: self_coord,
+                dests: DestList::unicast(coord),
+                kind,
+                cons_slots: encode_cons_slots(&[coord], &[(coord, slot)]),
+                payload: Arc::new(bytes),
+            });
+        }
         while let Some(front) = self.bursts.front() {
             let n = front.ndests as usize;
             if self.consumers.len() < n {
@@ -142,6 +244,31 @@ impl P2pUnit {
                 Arc::new(front.data[front.sent..front.sent + chunk].to_vec())
             };
             front.sent += chunk;
+            let mut stream_off = 0u64;
+            if self.window > 0 {
+                // With the window armed the outgoing `seq` field carries
+                // this chunk's stream offset, shared by every participating
+                // consumer — all n rings advance in lockstep (consumers
+                // join before any byte flows and every chunk appends to all
+                // of them), which the assert pins: a producer invocation
+                // that mixed fan-out widths would desynchronize the rings,
+                // and one offset per message could no longer be exact.
+                stream_off = self.rings.first().map_or(0, |r| r.sent_total());
+                assert!(
+                    self.rings[..n].iter().all(|r| r.sent_total() == stream_off),
+                    "replay requires lockstep consumer streams (uniform fan-out per invocation)"
+                );
+                // Append the chunk to every participating consumer's ring,
+                // trimming the front to the bounded window.
+                for ring in &mut self.rings[..n] {
+                    ring.buf.extend(payload.iter().copied());
+                    let excess = ring.buf.len().saturating_sub(self.window as usize);
+                    if excess > 0 {
+                        ring.buf.drain(..excess);
+                        ring.start += excess as u64;
+                    }
+                }
+            }
             // One header encodes at most `mcast_capacity` destination
             // tiles.  A transaction spanning more tiles serializes into one
             // message per destination group — the producer socket replays
@@ -156,7 +283,10 @@ impl P2pUnit {
                 if group.len() >= 2 {
                     self.multicasts += 1;
                 }
-                let kind = MsgKind::P2pData { seq: self.seq, prod_slot: self_slot };
+                // Armed: `seq` is the chunk's stream offset (exact consumer
+                // placement); off: the legacy per-unit message counter.
+                let seq = if self.window > 0 { stream_off as u32 } else { self.seq };
+                let kind = MsgKind::P2pData { seq, prod_slot: self_slot };
                 self.seq += 1;
                 out.push(Message {
                     src: self_coord,
@@ -174,11 +304,24 @@ impl P2pUnit {
         done
     }
 
-    /// Reset transaction state at invocation end.
+    /// Reset transaction state at invocation end (cumulative statistics
+    /// survive, like `bytes_sent`).
     pub fn reset(&mut self) {
         self.consumers.clear();
         self.bursts.clear();
+        self.rings.clear();
+        self.replays.clear();
         self.seq = 0;
+    }
+
+    /// Per-consumer replay forensics: `(coord, slot, buffered bytes, next
+    /// stream offset)` for every joined consumer (quiesce-watchdog dump).
+    pub fn replay_state(&self) -> Vec<(Coord, u8, usize, u64)> {
+        self.consumers
+            .iter()
+            .zip(&self.rings)
+            .map(|(c, r)| (c.coord, c.slot, r.buf.len(), r.sent_total()))
+            .collect()
     }
 
     /// Consumers currently joined.
@@ -206,7 +349,7 @@ mod tests {
         let mut out = Vec::new();
         u.submit_burst(burst(1024), 1, 7);
         assert!(u.tick((0, 0), 0, 16, &mut out).is_empty(), "no consumer yet");
-        u.on_request((1, 1), 0, 1024);
+        u.on_request((1, 1), 0, 1024, RESUME_NONE);
         let done = u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(done, vec![7]);
         assert_eq!(out.len(), 1);
@@ -218,10 +361,10 @@ mod tests {
         let mut u = P2pUnit::default();
         let mut out = Vec::new();
         u.submit_burst(burst(512), 3, 1);
-        u.on_request((0, 1), 0, 512);
-        u.on_request((1, 0), 0, 512);
+        u.on_request((0, 1), 0, 512, RESUME_NONE);
+        u.on_request((1, 0), 0, 512, RESUME_NONE);
         assert!(u.tick((0, 0), 0, 16, &mut out).is_empty(), "only 2 of 3 joined");
-        u.on_request((2, 2), 1, 512);
+        u.on_request((2, 2), 1, 512, RESUME_NONE);
         let done = u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(done, vec![1]);
         assert_eq!(out[0].dests.len(), 3);
@@ -233,13 +376,13 @@ mod tests {
         // Consumer requests 2x2KB; producer writes 4x1KB bursts: all flow.
         let mut u = P2pUnit::default();
         let mut out = Vec::new();
-        u.on_request((1, 1), 0, 2048);
+        u.on_request((1, 1), 0, 2048, RESUME_NONE);
         for t in 0..4 {
             u.submit_burst(burst(1024), 1, t);
         }
         let done = u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(done, vec![0, 1], "only 2KB of credit so far");
-        u.on_request((1, 1), 0, 2048);
+        u.on_request((1, 1), 0, 2048, RESUME_NONE);
         let done = u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(done, vec![2, 3]);
         assert_eq!(out.len(), 4);
@@ -254,10 +397,10 @@ mod tests {
         let mut out = Vec::new();
         u.submit_burst(burst(4096), 1, 9);
         for _ in 0..3 {
-            u.on_request((2, 0), 1, 1024);
+            u.on_request((2, 0), 1, 1024, RESUME_NONE);
             assert!(u.tick((0, 0), 0, 16, &mut out).is_empty(), "not fully sent yet");
         }
-        u.on_request((2, 0), 1, 1024);
+        u.on_request((2, 0), 1, 1024, RESUME_NONE);
         assert_eq!(u.tick((0, 0), 0, 16, &mut out), vec![9]);
         assert_eq!(out.len(), 4, "four 1KB chunks");
         assert!(out.iter().all(|m| m.payload.len() == 1024));
@@ -268,8 +411,8 @@ mod tests {
         let mut u = P2pUnit::default();
         let mut out = Vec::new();
         u.submit_burst(burst(256), 2, 0);
-        u.on_request((1, 2), 0, 256);
-        u.on_request((1, 2), 1, 256);
+        u.on_request((1, 2), 0, 256, RESUME_NONE);
+        u.on_request((1, 2), 1, 256, RESUME_NONE);
         u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(out[0].dests.as_slice(), &[(1, 2)], "coords deduplicated");
         // Both slots participate.
@@ -282,9 +425,9 @@ mod tests {
     fn transaction_uses_first_n_requesters() {
         let mut u = P2pUnit::default();
         let mut out = Vec::new();
-        u.on_request((0, 1), 0, 128);
-        u.on_request((0, 2), 0, 128);
-        u.on_request((2, 2), 0, 128); // late third consumer: not in n=2 txn
+        u.on_request((0, 1), 0, 128, RESUME_NONE);
+        u.on_request((0, 2), 0, 128, RESUME_NONE);
+        u.on_request((2, 2), 0, 128, RESUME_NONE); // late third consumer: not in n=2 txn
         u.submit_burst(burst(128), 2, 0);
         u.tick((0, 0), 0, 16, &mut out);
         assert_eq!(out[0].dests.as_slice(), &[(0, 1), (0, 2)]);
@@ -299,7 +442,7 @@ mod tests {
         let mut out = Vec::new();
         let tiles = [(0u8, 1u8), (0, 2), (1, 0), (1, 1), (1, 2)];
         for &t in &tiles {
-            u.on_request(t, 0, 256);
+            u.on_request(t, 0, 256, RESUME_NONE);
         }
         u.submit_burst(burst(256), 5, 3);
         let done = u.tick((0, 0), 0, 2, &mut out);
@@ -323,10 +466,166 @@ mod tests {
     #[test]
     fn reset_clears_state() {
         let mut u = P2pUnit::default();
-        u.on_request((0, 1), 0, 128);
+        u.on_request((0, 1), 0, 128, RESUME_NONE);
         u.submit_burst(burst(128), 1, 0);
         u.reset();
         assert_eq!(u.consumer_count(), 0);
         assert_eq!(u.pending_bursts(), 0);
+        assert!(u.replay_state().is_empty());
+    }
+
+    #[test]
+    fn resume_replays_lost_bytes_from_the_ring() {
+        let mut u = P2pUnit::with_window(4096);
+        let mut out = Vec::new();
+        u.on_request((1, 1), 0, 1024, RESUME_NONE);
+        u.submit_burst(burst(1024), 1, 7);
+        assert_eq!(u.tick((0, 0), 0, 16, &mut out), vec![7]);
+        assert_eq!(out.len(), 1);
+        // The message is lost in flight; the consumer re-requests the full
+        // remainder from its exact stream offset.
+        out.clear();
+        u.on_request((1, 1), 0, 1024, 0);
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1, "replay goes out as one unicast message");
+        assert_eq!(out[0].payload.len(), 1024);
+        assert_eq!(out[0].dests.as_slice(), &[(1, 1)]);
+        assert!(cons_participates(&out[0].dests, out[0].cons_slots, (1, 1), 0));
+        assert_eq!((u.replayed_bytes, u.window_exceeded), (1024, 0));
+    }
+
+    #[test]
+    fn repeated_resume_does_not_double_deliver() {
+        let mut u = P2pUnit::with_window(4096);
+        let mut out = Vec::new();
+        u.on_request((1, 1), 0, 512, RESUME_NONE);
+        u.submit_burst(burst(512), 1, 1);
+        u.tick((0, 0), 0, 16, &mut out);
+        out.clear();
+        u.on_request((1, 1), 0, 512, 0);
+        u.on_request((1, 1), 0, 512, 0); // retry fired again before delivery
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1, "one replay despite two identical re-requests");
+        assert_eq!(u.replayed_bytes, 512);
+    }
+
+    #[test]
+    fn a_lost_replay_is_retransmitted_on_the_next_resume() {
+        // The absorb guard clears once a replay is emitted: a re-request a
+        // full timeout later means the replay itself died on the mesh, and
+        // the ring must serve it again (consumers drop any duplicate).
+        let mut u = P2pUnit::with_window(4096);
+        let mut out = Vec::new();
+        u.on_request((1, 1), 0, 512, RESUME_NONE);
+        u.submit_burst(burst(512), 1, 1);
+        u.tick((0, 0), 0, 16, &mut out);
+        out.clear();
+        u.on_request((1, 1), 0, 512, 0);
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        u.on_request((1, 1), 0, 512, 0); // the replay was lost too
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1, "second replay after the first was lost");
+        assert_eq!(u.replayed_bytes, 1024);
+    }
+
+    #[test]
+    fn resume_before_the_window_counts_exceeded_and_grants_nothing() {
+        let mut u = P2pUnit::with_window(256); // window smaller than the stream
+        let mut out = Vec::new();
+        u.on_request((1, 1), 0, 1024, RESUME_NONE);
+        u.submit_burst(burst(1024), 1, 3);
+        u.tick((0, 0), 0, 16, &mut out);
+        out.clear();
+        u.on_request((1, 1), 0, 1024, 0); // offset 0 fell out of the ring
+        u.tick((0, 0), 0, 16, &mut out);
+        assert!(out.is_empty(), "no replay, no fresh credit");
+        assert_eq!((u.replayed_bytes, u.window_exceeded), (0, 1));
+    }
+
+    #[test]
+    fn resume_with_replay_disabled_is_a_plain_credit_add() {
+        // The pre-replay behavior, byte-identical: a resume-carrying
+        // re-request on a window-0 unit just adds credit, so the producer
+        // streams its *next* bytes (the latched-corruption path).
+        let mut u = P2pUnit::default();
+        let mut out = Vec::new();
+        u.on_request((1, 1), 0, 512, RESUME_NONE);
+        u.submit_burst(burst(1024), 1, 5);
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1);
+        u.on_request((1, 1), 0, 512, 0); // resume ignored: window off
+        assert_eq!(u.tick((0, 0), 0, 16, &mut out), vec![5]);
+        assert_eq!(out.len(), 2, "next chunk, not a replay");
+        assert_eq!(u.replayed_bytes, 0);
+    }
+
+    #[test]
+    fn mid_stream_resume_replays_exact_bytes_and_replaces_credit() {
+        // Stream four distinct 256-byte bursts; the delivery of the last
+        // two is lost.  Resuming at offset 512 replays exactly their bytes
+        // from the ring and grants no fresh credit (512 asked, 512 had).
+        let mut u = P2pUnit::with_window(1024);
+        let mut out = Vec::new();
+        u.on_request((2, 2), 0, 1024, RESUME_NONE);
+        for t in 0..4u32 {
+            u.submit_burst(Arc::new(vec![t as u8; 256]), 1, t);
+        }
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 4);
+        out.clear();
+        u.on_request((2, 2), 0, 512, 512);
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].payload.len(), 512);
+        assert_eq!(out[0].payload[..256], [2u8; 256][..]);
+        assert_eq!(out[0].payload[256..], [3u8; 256][..]);
+        assert_eq!(u.replay_state(), vec![((2, 2), 0, 1024, 1024)]);
+        assert_eq!(u.replayed_bytes, 512);
+    }
+
+    fn msg_seq(m: &Message) -> u32 {
+        match m.kind {
+            MsgKind::P2pData { seq, .. } => seq,
+            _ => panic!("unexpected kind"),
+        }
+    }
+
+    #[test]
+    fn armed_sends_tag_data_with_stream_offsets() {
+        // With the window armed, `seq` is the chunk's stream offset — the
+        // consumer-side placement key that makes loss detectable — and a
+        // replay carries the offset it resumes at, not a fresh counter.
+        let mut u = P2pUnit::with_window(4096);
+        let mut out = Vec::new();
+        u.on_request((1, 1), 0, 1024, RESUME_NONE);
+        for t in 0..2 {
+            u.submit_burst(burst(256), 1, t);
+        }
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.iter().map(msg_seq).collect::<Vec<_>>(), vec![0, 256]);
+        out.clear();
+        u.on_request((1, 1), 0, 256, 256); // second chunk lost: resume at 256
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(msg_seq(&out[0]), 256, "replay tagged with its resume offset");
+    }
+
+    #[test]
+    fn armed_multicast_shares_one_stream_offset() {
+        // Both consumers' rings advance in lockstep, so the single
+        // multicast header's offset is exact for each of them.
+        let mut u = P2pUnit::with_window(4096);
+        let mut out = Vec::new();
+        u.on_request((0, 1), 0, 512, RESUME_NONE);
+        u.on_request((1, 0), 0, 512, RESUME_NONE);
+        for t in 0..2 {
+            u.submit_burst(burst(256), 2, t);
+        }
+        u.tick((0, 0), 0, 16, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.iter().map(msg_seq).collect::<Vec<_>>(), vec![0, 256]);
+        assert_eq!(out[1].dests.len(), 2);
     }
 }

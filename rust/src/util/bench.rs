@@ -346,6 +346,22 @@ pub fn compare(baseline: &Json, fresh: &Json, opts: &CompareOpts) -> CompareRepo
             // entirely on either side.
             continue;
         }
+        // Recovery sweeps additionally tag records with `recovered` (1 =
+        // the replay path retransmitted and the run still finished).  A
+        // point that recovered in the baseline and no longer does means
+        // the replay/drain machinery regressed — gated at zero tolerance,
+        // exactly like `completed`.
+        if let (Some(b), Some(f)) = (metric(brec, "recovered"), metric(frec, "recovered")) {
+            if b != 0.0 && f == 0.0 {
+                report.regressions.push(Regression {
+                    bench: bench.clone(),
+                    point: point.clone(),
+                    metric: "recovered",
+                    baseline: b,
+                    fresh: f,
+                });
+            }
+        }
         let mut check = |name: &'static str, tol: f64, higher_is_worse: bool| {
             match (metric(brec, name), metric(frec, name)) {
                 (Some(b), Some(f)) => {
@@ -585,6 +601,31 @@ mod tests {
         // Still-failing points are stable, not a new regression.
         let both = doc(&failed_rec("s", "p1"));
         assert!(compare(&both, &both, &CompareOpts::default()).passed());
+    }
+
+    /// A recovery-sweep record: completed, with a `recovered` tag.
+    fn recovered_rec(bench: &str, point: &str, recovered: u64) -> String {
+        let r = done_rec(bench, point, 1000, 2.0);
+        format!("{},\"recovered\":{recovered}}}", &r[..r.len() - 1])
+    }
+
+    #[test]
+    fn compare_gates_recovery_rate_at_zero_tolerance() {
+        // A point the baseline recovered (replayed and still completed)
+        // must keep recovering: 1 -> 0 is a regression even though both
+        // runs completed and every perf metric is identical.
+        let base = doc(&recovered_rec("s", "p1", 1));
+        let fresh = doc(&recovered_rec("s", "p1", 0));
+        let r = compare(&base, &fresh, &CompareOpts::default());
+        assert!(!r.passed());
+        assert_eq!(r.regressions.len(), 1, "{}", r.render());
+        assert_eq!(r.regressions[0].metric, "recovered");
+        // Same tag passes; gaining recovery passes; untagged baselines
+        // (pristine sweeps) never see the gate.
+        assert!(compare(&base, &base, &CompareOpts::default()).passed());
+        assert!(compare(&fresh, &base, &CompareOpts::default()).passed());
+        let plain = doc(&done_rec("s", "p1", 1000, 2.0));
+        assert!(compare(&plain, &fresh, &CompareOpts::default()).passed());
     }
 
     #[test]

@@ -8,3 +8,16 @@ pub mod prng;
 
 pub use json::Json;
 pub use prng::Prng;
+
+/// FNV-1a/64 offset basis — start the scenario payload digest here and
+/// fold each sink region in a deterministic order with [`fnv1a64`].
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `data` into FNV-1a/64 hash state `h` (chainable).
+pub fn fnv1a64(mut h: u64, data: &[u8]) -> u64 {
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}

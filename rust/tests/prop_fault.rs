@@ -12,6 +12,10 @@
 //! 4. Every builtin scenario pattern on a **harvested 16x16 mesh** (one
 //!    row disabled down to its bridge tile) either completes or fails
 //!    with a structural diagnostic — never the quiesce watchdog.
+//! 5. The **payload sink digest** is a pure function of delivered bytes:
+//!    scheduler mode, plane-tick mode and the recovery path (replay ring
+//!    plus wedge drain) must all reproduce the healthy digest whenever a
+//!    run completes.
 
 use std::sync::Arc;
 
@@ -20,6 +24,7 @@ use espsim::coordinator::workloads::{Dataflow, EdgePolicy, Shape};
 use espsim::noc::{
     Coord, DestList, Mesh, MeshParams, Message, MsgKind, RouteTable, TickMode,
 };
+use espsim::sched::SchedMode;
 use espsim::util::Prng;
 use espsim::{FaultPlan, QuiesceError, Soc, SocConfig};
 
@@ -193,6 +198,39 @@ fn faulted_runs_are_deterministic_across_tick_modes() {
     for mode in [TickMode::Parallel, TickMode::Auto] {
         s.tick_mode = mode;
         assert_eq!(reference, faulted_fingerprint(&s), "{}: {mode:?} diverged", s.name);
+    }
+}
+
+#[test]
+fn payload_digests_agree_across_sched_tick_modes_and_recovery() {
+    // Healthy digest as the reference, then every scheduler x tick-mode
+    // combination must reproduce it — and so must a degraded run with the
+    // replay ring armed, whenever it completes at all (a diagnosed
+    // failure is legitimate; a wrong digest never is).
+    let mut base =
+        Scenario::new("fanout", Pattern::MulticastFanout { consumers: 4 }, Platform::Mesh8x8);
+    base.bytes = 8 << 10;
+    let healthy = base.run().expect("healthy reference run").sink_digest;
+    for sched in [SchedMode::FullScan, SchedMode::Worklist] {
+        for tick in [TickMode::Sequential, TickMode::Parallel, TickMode::Auto] {
+            let mut s = base.clone();
+            s.sched = sched;
+            s.tick_mode = tick;
+            let o = s.run().expect("healthy run");
+            assert_eq!(
+                o.sink_digest, healthy,
+                "{}: {sched:?}/{tick:?} moved the healthy digest",
+                s.name
+            );
+            let r = s.degraded(&[], 2, 0xBEEF).recovery(16 << 10);
+            if let Ok(o) = r.run() {
+                assert_eq!(
+                    o.sink_digest, healthy,
+                    "{}: {sched:?}/{tick:?} recovered run delivered corrupt payloads",
+                    r.name
+                );
+            }
+        }
     }
 }
 
